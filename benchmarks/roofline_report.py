@@ -1,0 +1,80 @@
+"""Render the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod16x16]
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_NAMES, SHAPES
+
+ADIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+PEAK = 197e12
+
+
+def fmt_cell(rec):
+    if rec["status"] == "skipped":
+        return None
+    r = rec["roofline"]
+    h = rec["hlo"]
+    mfu = rec["model_flops_per_dev"] / (max(r["bound_s"], 1e-12) * PEAK)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"], "dominant": r["dominant"],
+        "bound_s": r["bound_s"], "mfu": mfu,
+        "ratio": rec["useful_flops_ratio"],
+        "gib": rec["memory"]["per_device_bytes"] / 2**30,
+        "fits": rec["memory"]["fits_hbm"],
+        "flops": h["flops"], "hbm": h["hbm_bytes"], "wire": h["wire_bytes_total"],
+        "compile_s": rec.get("compile_s", 0),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--kind", default="roofline", choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+
+    rows = []
+    for arch in ARCH_NAMES:
+        for cell in SHAPES:
+            f = ADIR / f"{arch}__{cell.name}__{args.mesh}.json"
+            if not f.exists():
+                continue
+            rec = json.loads(f.read_text())
+            if rec["status"] == "skipped":
+                rows.append({"arch": arch, "shape": cell.name, "skip": True})
+            elif rec["status"] == "ok":
+                rows.append(fmt_cell(rec))
+
+    if args.kind == "roofline":
+        print("| arch | shape | compute s | memory s | collective s | dominant "
+              "| bound s | MFU@bound | useful-FLOP ratio | GiB/dev | fits |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r.get("skip"):
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | skipped "
+                      f"(full attention @524k) | — | — | — | — | — |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+                  f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+                  f"**{r['dominant']}** | {r['bound_s']:.3f} | {r['mfu']*100:.1f}% | "
+                  f"{r['ratio']:.2f} | {r['gib']:.1f} | "
+                  f"{'yes' if r['fits'] else 'NO'} |")
+    else:
+        print("| arch | shape | FLOPs/dev | HBM B/dev | wire B/dev | GiB/dev "
+              "| fits | compile s |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r.get("skip"):
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | — |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {r['flops']:.3e} | "
+                  f"{r['hbm']:.3e} | {r['wire']:.3e} | {r['gib']:.1f} | "
+                  f"{'yes' if r['fits'] else 'NO'} | {r['compile_s']:.0f} |")
+
+
+if __name__ == "__main__":
+    main()

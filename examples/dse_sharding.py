@@ -1,0 +1,48 @@
+"""Run the full SECDA-DSE loop over a workload's execution-plan space.
+
+This is the paper's Figure-1 loop on the TPU design space: Explorer
+permutations + LLM-Stack (RAG + CoT) refinements, evaluated by the dry-run
+'simulator', recorded in the cost DB, with LoRA fine-tuning of the surrogate.
+
+    # reduced mesh (runs anywhere, ~2 min):
+    PYTHONPATH=src python examples/dse_sharding.py
+
+    # production pod mesh (what EXPERIMENTS.md §Perf uses):
+    PYTHONPATH=src python -m repro.launch.dse --arch llama3-8b \
+        --shape train_4k --mesh pod --iterations 4 --budget 3
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import tempfile
+from pathlib import Path
+
+from repro.core.cost_db import CostDB, featurize
+from repro.core.cost_model import CostModel
+from repro.core.evaluator import Evaluator
+from repro.core.llm_client import MockLLM
+from repro.core.llm_stack import LLMStack
+from repro.core.loop import DSELoop
+from repro.core.rag import CodeIndex
+from repro.launch.mesh import make_mesh
+
+
+def main():
+    mesh = make_mesh((2, 4), ("data", "model"))
+    with tempfile.TemporaryDirectory() as td:
+        db = CostDB(Path(td) / "cost_db.jsonl")
+        stack = LLMStack(
+            client=MockLLM(), db=db,
+            code_index=CodeIndex(roots=[Path(__file__).parents[1] / "src/repro/sharding"]).build())
+        loop = DSELoop(evaluator=Evaluator(mesh, "small2x4", artifact_dir=td),
+                       db=db, llm_stack=stack,
+                       cost_model=CostModel.create(in_dim=featurize({}, {}).shape[0]))
+        report = loop.run("qwen3-0.6b", "decode_32k", iterations=2, eval_budget=2)
+        print(f"\nevaluated designs: {len(db.all())} "
+              f"(negatives: {len([d for d in db.all() if d.negative()])})")
+        print(f"improvement vs expert baseline: x{report.improvement():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper §4 reproduction: natural-language spec -> SECDA-native accelerator.
+
+Feeds the paper's Appendix prompt (verbatim) through the LLM Stack, builds
+the generated element-wise vecmul accelerator as a Pallas TPU kernel,
+verifies it functionally (interpret mode = the 'simulation' stage), emits the
+HLS-report analogs of the paper's Tables 1-2, and then runs the DSE Explorer
+over the block-size design space with the analytic resource model —
+recording every evaluated candidate (including infeasible negatives) into a
+cost DB, exactly like the full loop.
+
+    PYTHONPATH=src python examples/dse_vecmul.py
+"""
+import json
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_db import CostDB, DataPoint
+from repro.core.llm_client import MockLLM
+from repro.core.llm_stack import LLMStack
+from repro.kernels import ops, ref
+from repro.kernels.resource_model import vecmul_resources
+
+# the paper's Appendix prompt, verbatim
+APPENDIX_PROMPT = """\
+I would like to create a hardware accelerator design. The accelerator should
+be able to take two input vectors: X and Y, both of length L. The accelerator
+should perform an element-wise multiplication operation and produce an output
+vector Z. The accelerator has two AXI-Stream based interfaces for loading X
+and Y data into custom X and Y buffers. The accelerator should also have a
+fixed length parameter L. Once the data is loaded, the accelerator should
+execute the element-wise multiplication in parallel and store the results in
+buffer Z within the compute module. The loading should be performed using a
+load module. Finally, the results should be written back to main memory using
+a store module that outputs via an AXI-Stream interface. Create the
+accelerator description using SystemC and SECDA. The compute module should be
+capable of performing L operations in parallel."""
+
+
+def main():
+    L = 4096
+    stack = LLMStack(client=MockLLM())
+    design, transcript = stack.generate_accelerator(APPENDIX_PROMPT, length=L)
+    print("=== LLM transcript (CoT) ===")
+    print(transcript.split("FINAL ANSWER:")[0])
+    print("=== generated design ===")
+    print(json.dumps(design, indent=2))
+    assert design["kernel"] == "vecmul", "spec translation failed"
+
+    # ---- 'simulation' stage: functional verification in interpret mode ----
+    block = design["parameters"]["block"]
+    x = jax.random.normal(jax.random.key(0), (L,))
+    y = jax.random.normal(jax.random.key(1), (L,))
+    z = ops.vecmul(x, y, block=block)
+    np.testing.assert_allclose(z, ref.vecmul_ref(x, y), rtol=1e-6)
+    print(f"\nfunctional check vs ref.py oracle: OK (L={L}, block={block})")
+
+    # ---- Tables 1-2 analogs ----
+    res = vecmul_resources(L, block, itemsize=4)
+    print("\nTable 1 analog — latency:")
+    print(f"  send/compute/recv per-block cycles ~ {res.est_cycles_per_block:.0f}")
+    print(f"  total latency estimate: {res.est_latency_us:.3f} us "
+          f"({res.est_latency_us * 940:.0f} cycles @940MHz)")
+    print("Table 2 analog — resources:")
+    print(f"  VMEM (BRAM analog): {res.vmem_bytes/2**10:.0f} KiB "
+          f"({100*res.vmem_util:.2f}% of 128 MiB)  "
+          f"VPU-aligned(DSP analog)={res.vpu_aligned}")
+
+    # ---- DSE over the block-size space (the 'compute unit dimension') ----
+    print("\nDSE over block sizes (resource-model evaluated):")
+    with tempfile.TemporaryDirectory() as td:
+        db = CostDB(Path(td) / "vecmul_db.jsonl")
+        best = None
+        for blk in (128, 512, 1024, 4096, 1 << 20, 1 << 25):
+            r = vecmul_resources(L, min(blk, L) if blk <= L else blk, itemsize=4)
+            status = "ok" if r.feasible else "infeasible"
+            db.append(DataPoint(
+                arch="vecmul", shape=f"L{L}", mesh="single-chip",
+                point={"block": blk}, status=status,
+                metrics={"latency_us": r.est_latency_us,
+                         "vmem_util": r.vmem_util,
+                         "workload": {"n_params": 0, "seq_len": L}},
+                reason="" if r.feasible else "VMEM overflow (negative datapoint)"))
+            tag = "OK " if r.feasible else "REJ"
+            print(f"  [{tag}] block={blk:>8}: latency={r.est_latency_us:8.3f}us "
+                  f"vmem={100*r.vmem_util:6.2f}%")
+            if r.feasible and (best is None or r.est_latency_us < best[1]):
+                best = (blk, r.est_latency_us)
+        print(f"best feasible block: {best[0]} ({best[1]:.3f} us); "
+              f"{len(db.query(status='infeasible'))} negative datapoints recorded")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Cost-model database: the append-only store of hardware data points.
+
+Every evaluated design — successful or *negative* (infeasible / failed) — is
+one JSONL record. The DB feeds (i) RAG retrieval of similar prior designs,
+(ii) the learned cost model's (LoRA) fine-tuning set, (iii) EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class DataPoint:
+    """One hardware data point (paper §3.1: summarized results + config)."""
+
+    arch: str
+    shape: str
+    mesh: str
+    point: Dict[str, Any]  # PlanPoint dims
+    status: str  # ok | infeasible | error | rejected
+    metrics: Dict[str, Any] = field(default_factory=dict)
+    reason: str = ""
+    source: str = "explorer"  # explorer | llm | expert
+    iteration: int = -1
+    ts: float = field(default_factory=time.time)
+
+    def negative(self) -> bool:
+        return self.status != "ok"
+
+    def to_json(self) -> str:
+        return json.dumps(self.__dict__, sort_keys=True, default=str)
+
+    @staticmethod
+    def from_json(line: str) -> "DataPoint":
+        d = json.loads(line)
+        return DataPoint(**{k: d.get(k) for k in
+                            ("arch", "shape", "mesh", "point", "status", "metrics",
+                             "reason", "source", "iteration", "ts")})
+
+
+# featurization used by both RAG retrieval and the learned cost model
+_CATEGORICAL = {
+    "batch_rule": ("data", "data+model"),
+    "seq_rule": (None, "model"),
+    "attn_rule": ("heads", "head_dim", "heads_pad", "none"),
+    "ffn_rule": ("model", None),
+    "vocab_rule": ("model", None),
+    "expert_rule": ("experts", "expert_ffn", "none"),
+    "embed_rule": (None, "data"),
+    "seq_kv_rule": ("model", None, "kv_heads"),
+    "remat": ("none", "dots", "full"),
+    "grad_compress": ("none", "int8", "topk"),
+    "decode_attn": ("gspmd", "sp_shardmap"),
+    "attn_impl": ("chunked", "tri"),
+}
+_NUMERIC = ("microbatches", "loss_chunk")
+_BOOLEAN = ("zero1", "opt_int8")
+
+
+def featurize(point: Dict[str, Any], workload: Dict[str, float]) -> np.ndarray:
+    """Plan dims + workload context -> dense feature vector."""
+    feats: List[float] = []
+    for k, vals in _CATEGORICAL.items():
+        v = point.get(k)
+        for cand in vals:
+            feats.append(1.0 if v == cand else 0.0)
+    for k in _NUMERIC:
+        feats.append(math.log2(1 + float(point.get(k) or 0)))
+    for k in _BOOLEAN:
+        feats.append(1.0 if point.get(k) else 0.0)
+    for k in ("n_params", "seq_len", "global_batch", "n_layers", "d_model",
+              "vocab", "n_experts", "is_train", "is_decode"):
+        feats.append(math.log10(1 + float(workload.get(k, 0.0))))
+    return np.asarray(feats, np.float32)
+
+
+def workload_features(cfg, cell) -> Dict[str, float]:
+    return {
+        "n_params": cfg.n_params(),
+        "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+        "n_layers": cfg.n_layers,
+        "d_model": cfg.d_model,
+        "vocab": cfg.vocab,
+        "n_experts": cfg.moe.n_experts if cfg.moe else 0,
+        "is_train": 1.0 if cell.kind == "train" else 0.0,
+        "is_decode": 1.0 if cell.kind == "decode" else 0.0,
+    }
+
+
+class CostDB:
+    def __init__(self, path: Path | str):
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._cache: Optional[List[DataPoint]] = None
+
+    def append(self, dp: DataPoint) -> None:
+        with self.path.open("a") as f:
+            f.write(dp.to_json() + "\n")
+        if self._cache is not None:
+            self._cache.append(dp)
+
+    def all(self) -> List[DataPoint]:
+        if self._cache is None:
+            self._cache = []
+            if self.path.exists():
+                for line in self.path.read_text().splitlines():
+                    if line.strip():
+                        self._cache.append(DataPoint.from_json(line))
+        return list(self._cache)
+
+    def query(self, arch: Optional[str] = None, shape: Optional[str] = None,
+              status: Optional[str] = None) -> List[DataPoint]:
+        out = self.all()
+        if arch:
+            out = [d for d in out if d.arch == arch]
+        if shape:
+            out = [d for d in out if d.shape == shape]
+        if status:
+            out = [d for d in out if d.status == status]
+        return out
+
+    def best(self, arch: str, shape: str, key: str = "bound_s") -> Optional[DataPoint]:
+        ok = [d for d in self.query(arch, shape, "ok")
+              if d.metrics.get(key) is not None and d.metrics.get("fits_hbm", True)]
+        return min(ok, key=lambda d: d.metrics[key]) if ok else None
+
+    def seen(self, arch: str, shape: str, point_key: str) -> bool:
+        return any(d.point.get("__key__") == point_key
+                   for d in self.query(arch, shape))
+
+    def training_set(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(features, targets [log10 bound_s], feasible mask) for the surrogate."""
+        X, y, feas = [], [], []
+        for d in self.all():
+            wl = d.metrics.get("workload")
+            if not wl:
+                continue
+            X.append(featurize(d.point, wl))
+            b = d.metrics.get("bound_s")
+            ok = d.status == "ok" and d.metrics.get("fits_hbm", False)
+            y.append(math.log10(max(b, 1e-6)) if (b and ok) else 3.0)
+            feas.append(1.0 if ok else 0.0)
+        if not X:
+            z = np.zeros((0,), np.float32)
+            return z.reshape(0, 1), z, z
+        return np.stack(X), np.asarray(y, np.float32), np.asarray(feas, np.float32)

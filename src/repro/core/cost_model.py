@@ -1,0 +1,114 @@
+"""Learned surrogate cost model, LoRA-fine-tuned on the cost DB.
+
+Predicts (log10 roofline bound, feasibility) from plan+workload features so
+the Explorer can pre-rank candidate permutations *before* paying for a
+compile — the paper's answer to 'even simulation-based evaluation can remain
+computationally expensive' (§5.4-i).
+
+Base MLP pre-trained once per session; subsequent adaptation uses LoRA
+(frozen base + low-rank adapters), mirroring §3.2.2 exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lora as lora_mod
+from repro.core.cost_db import CostDB, featurize
+
+HIDDEN = (64, 64)
+
+
+def init_mlp(key, in_dim: int):
+    keys = jax.random.split(key, len(HIDDEN) + 1)
+    dims = (in_dim,) + HIDDEN
+    params = {}
+    for i, (di, do) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = jax.random.normal(keys[i], (di, do)) * (1.0 / np.sqrt(di))
+        params[f"b{i}"] = jnp.zeros((do,))
+    params["w_out"] = jax.random.normal(keys[-1], (HIDDEN[-1], 2)) * 0.1
+    params["b_out"] = jnp.zeros((2,))
+    return params
+
+
+def mlp_forward(params, x):
+    h = x
+    for i in range(len(HIDDEN)):
+        h = jnp.tanh(h @ params[f"w{i}"] + params[f"b{i}"])
+    out = h @ params["w_out"] + params["b_out"]
+    return out[..., 0], jax.nn.sigmoid(out[..., 1])  # (log10 bound, p_feasible)
+
+
+def _loss(params, X, y, feas):
+    pred, pf = mlp_forward(params, X)
+    reg = jnp.mean((pred - y) ** 2 * feas) * (feas.sum() / jnp.maximum(feas.sum(), 1))
+    bce = -jnp.mean(feas * jnp.log(pf + 1e-6) + (1 - feas) * jnp.log(1 - pf + 1e-6))
+    return reg + bce
+
+
+@dataclass
+class CostModel:
+    in_dim: int
+    params: Dict = field(default_factory=dict)
+    lora: Optional[Dict] = None
+    trained: bool = False
+
+    @classmethod
+    def create(cls, in_dim: int, seed: int = 0) -> "CostModel":
+        return cls(in_dim=in_dim, params=init_mlp(jax.random.key(seed), in_dim))
+
+    def _effective(self):
+        if self.lora is None:
+            return self.params
+        return lora_mod.apply_lora(self.params, self.lora)
+
+    def predict(self, feats: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        x = jnp.asarray(feats)
+        if x.ndim == 1:
+            x = x[None]
+        b, pf = mlp_forward(self._effective(), x)
+        return np.asarray(b), np.asarray(pf)
+
+    # ------------------------------------------------------------------
+    def pretrain(self, db: CostDB, steps: int = 300, lr: float = 1e-2) -> float:
+        """Full-parameter fit of the base model (done once)."""
+        X, y, feas = db.training_set()
+        if X.shape[0] < 4:
+            return float("nan")
+        grad = jax.jit(jax.grad(_loss))
+        lossj = jax.jit(_loss)
+        Xj, yj, fj = jnp.asarray(X), jnp.asarray(y), jnp.asarray(feas)
+        for _ in range(steps):
+            g = grad(self.params, Xj, yj, fj)
+            self.params = jax.tree.map(lambda p, gg: p - lr * gg, self.params, g)
+        self.trained = True
+        return float(lossj(self.params, Xj, yj, fj))
+
+    def finetune_lora(self, db: CostDB, rank: int = 4, steps: int = 200,
+                      lr: float = 5e-3, seed: int = 1) -> float:
+        """LoRA adaptation: base frozen, adapters trained on the grown DB."""
+        X, y, feas = db.training_set()
+        if X.shape[0] < 4:
+            return float("nan")
+        if self.lora is None:
+            self.lora, _ = lora_mod.init_lora(self.params, jax.random.key(seed), rank)
+
+        def loss_of(lora):
+            eff = lora_mod.apply_lora(self.params, lora)
+            return _loss(eff, jnp.asarray(X), jnp.asarray(y), jnp.asarray(feas))
+
+        grad = jax.jit(jax.grad(loss_of))
+        for _ in range(steps):
+            g = grad(self.lora)
+            self.lora = jax.tree.map(lambda p, gg: p - lr * gg, self.lora, g)
+        return float(loss_of(self.lora))
+
+    def rank_candidates(self, feats: np.ndarray) -> np.ndarray:
+        """Indices sorted by predicted bound, infeasible-penalised."""
+        b, pf = self.predict(feats)
+        score = b + 2.0 * (1.0 - pf)  # infeasible ~ +2 decades
+        return np.argsort(score)

@@ -1,0 +1,70 @@
+"""TPU device models — the 'target FPGA device' input of SECDA-DSE.
+
+Hardware constants per the assignment (TPU v5e): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI. VMEM/MXU budgets are the BRAM/DSP analogs
+used by the kernel resource model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class DeviceModel:
+    name: str
+    peak_flops_bf16: float  # FLOP/s per chip
+    hbm_bytes: int
+    hbm_bw: float  # B/s
+    ici_link_bw: float  # B/s per link
+    vmem_bytes: int  # on-chip vector memory (BRAM analog)
+    mxu_dim: int = 128  # systolic array edge (DSP analog)
+    vpu_lanes: int = 8 * 128
+
+
+TPU_V5E = DeviceModel(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bytes=16 * 2**30,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    vmem_bytes=128 * 2**20,
+)
+
+DEVICES: Dict[str, DeviceModel] = {"tpu-v5e": TPU_V5E}
+
+
+def get_device(name: str = "tpu-v5e") -> DeviceModel:
+    return DEVICES[name]
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    """The three roofline terms, in seconds (per step), per the assignment."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def bound(self) -> float:
+        """Roofline step-time lower bound (perfect overlap of the 3 engines)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self):
+        return dataclasses.asdict(self) | {"dominant": self.dominant(), "bound_s": self.bound()}
+
+
+def roofline_terms(*, flops: float, hbm_bytes: float, wire_bytes: float,
+                   device: DeviceModel = TPU_V5E) -> RooflineTerms:
+    """All inputs are PER-DEVICE totals for one step (from the HLO analyzer)."""
+    return RooflineTerms(
+        compute_s=flops / device.peak_flops_bf16,
+        memory_s=hbm_bytes / device.hbm_bw,
+        collective_s=wire_bytes / device.ici_link_bw,
+    )

@@ -1,0 +1,80 @@
+"""Evaluation module (paper §3.2.2): simulation-first design assessment.
+
+The 'SystemC simulation' is the XLA dry-run compile (lower+compile+HLO cost
+extraction, see ``launch/dryrun.py``); the 'hardware resource limits' gate is
+the per-device HBM budget + kernel VMEM resource model. Designs that fail
+compile, violate budgets, or fall outside the template are returned as
+*negative* data points — never silently dropped.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.core.cost_db import DataPoint, workload_features
+from repro.core.design_space import PlanPoint, PlanTemplate, point_to_plan
+from repro.core.device import TPU_V5E, DeviceModel
+
+
+@dataclass
+class Evaluator:
+    mesh: Any  # jax Mesh (production or reduced)
+    mesh_name: str
+    device: DeviceModel = TPU_V5E
+    artifact_dir: Optional[str] = None
+
+    def evaluate(self, arch: str, shape: str, point: PlanPoint,
+                 *, source: str = "explorer", iteration: int = -1) -> DataPoint:
+        from repro.launch import dryrun  # deferred: needs jax initialised
+
+        cfg = get_config(arch)
+        cell = SHAPE_BY_NAME[shape]
+        template = PlanTemplate(cfg, cell, dict(self.mesh.shape), self.device)
+        ok, why = template.validate(point)
+        base = dict(arch=arch, shape=shape, mesh=self.mesh_name,
+                    point={**point.to_dict(), "__key__": point.key()},
+                    source=source, iteration=iteration)
+        if not ok:
+            return DataPoint(**base, status="rejected", reason=why,
+                             metrics={"workload": workload_features(cfg, cell)})
+
+        plan = point_to_plan(cfg, cell, point, multi_pod="pod" in self.mesh.shape)
+        from pathlib import Path
+
+        adir = Path(self.artifact_dir) if self.artifact_dir else dryrun.ARTIFACT_DIR / "dse"
+        rec = dryrun.run_cell(arch, shape, self.mesh, f"{self.mesh_name}-{point.key()}",
+                              plan=plan, artifact_dir=adir)
+        wl = workload_features(cfg, cell)
+        if rec["status"] == "skipped":
+            return DataPoint(**base, status="rejected", reason=rec["reason"],
+                             metrics={"workload": wl})
+        if rec["status"] == "error":
+            return DataPoint(**base, status="error", reason=rec["error"],
+                             metrics={"workload": wl})
+        r = rec["roofline"]
+        fits = rec["memory"]["fits_hbm"]
+        metrics = {
+            "workload": wl,
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bound_s": r["bound_s"],
+            "dominant": r["dominant"],
+            "fits_hbm": fits,
+            "per_device_gib": rec["memory"]["per_device_bytes"] / 2**30,
+            "flops_per_dev": rec["hlo"]["flops"],
+            "wire_bytes": rec["hlo"]["wire_bytes_total"],
+            "hbm_bytes": rec["hlo"]["hbm_bytes"],
+            "model_flops_per_dev": rec["model_flops_per_dev"],
+            "useful_flops_ratio": rec["useful_flops_ratio"],
+            "mfu_at_bound": rec["model_flops_per_dev"] / (
+                max(r["bound_s"], 1e-9) * self.device.peak_flops_bf16),
+            "compile_s": rec["compile_s"],
+        }
+        status = "ok" if fits else "infeasible"
+        reason = "" if fits else (
+            f"per-device {metrics['per_device_gib']:.1f} GiB exceeds "
+            f"{self.device.hbm_bytes/2**30:.0f} GiB HBM")
+        return DataPoint(**base, status=status, reason=reason, metrics=metrics)

@@ -1,0 +1,73 @@
+"""DSE Explorer (paper §3.1): structured candidate generation + evaluation.
+
+Per iteration the Explorer takes the incumbent design, generates the
+permutation set (single-dimension mutations within the template's
+device-aware ranges plus LLM-stack refinements), pre-ranks candidates with
+the learned cost model to bound expensive simulations, evaluates the top
+candidates through the Evaluation module, and emits summarized hardware data
+points into the cost DB. Each evaluation leaves a 'design run folder'
+artifact (JSON next to the dry-run HLO summaries).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.core.cost_db import CostDB, DataPoint, featurize, workload_features
+from repro.core.cost_model import CostModel
+from repro.core.design_space import PlanPoint, PlanTemplate
+from repro.core.evaluator import Evaluator
+
+
+@dataclass
+class Explorer:
+    evaluator: Evaluator
+    db: CostDB
+    cost_model: Optional[CostModel] = None
+    seed: int = 0
+    # exploration diversity (paper §3.2.2): evaluate a few random template
+    # points alongside the greedy neighborhood to avoid local optima
+    n_random: int = 1
+
+    def _rank(self, cfg, cell, cands: Sequence[PlanPoint]) -> List[PlanPoint]:
+        if self.cost_model is None or not self.cost_model.trained or not cands:
+            return list(cands)
+        wl = workload_features(cfg, cell)
+        feats = np.stack([featurize(dict(c.dims), wl) for c in cands])
+        order = self.cost_model.rank_candidates(feats)
+        return [cands[i] for i in order]
+
+    def explore(self, arch: str, shape: str, seeds: Sequence[PlanPoint],
+                *, budget: int = 4, iteration: int = 0,
+                extra_candidates: Sequence[PlanPoint] = ()) -> List[DataPoint]:
+        """Evaluate up to ``budget`` new candidates derived from ``seeds``."""
+        cfg = get_config(arch)
+        cell = SHAPE_BY_NAME[shape]
+        template = PlanTemplate(cfg, cell, dict(self.evaluator.mesh.shape))
+        rng = random.Random(self.seed + iteration)
+
+        cands: List[PlanPoint] = list(extra_candidates)
+        for seed in seeds:
+            cands.extend(template.neighbors(seed))
+        cands.extend(template.random_points(rng, self.n_random))
+
+        # dedupe + drop already-evaluated designs
+        seen_keys = {d.point.get("__key__") for d in self.db.query(arch, shape)}
+        uniq: Dict[str, PlanPoint] = {}
+        for c in cands:
+            k = c.key()
+            if k not in seen_keys and k not in uniq:
+                uniq[k] = c
+        ranked = self._rank(cfg, cell, list(uniq.values()))
+
+        out: List[DataPoint] = []
+        for cand in ranked[:budget]:
+            dp = self.evaluator.evaluate(arch, shape, cand,
+                                         source="explorer", iteration=iteration)
+            self.db.append(dp)
+            out.append(dp)
+        return out

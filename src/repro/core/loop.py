@@ -1,0 +1,187 @@
+"""The SECDA-DSE iterative loop (paper Fig. 1):
+
+    DSE Explorer permutations  ─┐
+                                ├─> Evaluation module (dry-run 'simulation')
+    LLM Stack refinements      ─┘        │
+          ▲                              ▼
+          │   RAG over cost DB    cost-model DB  ──>  LoRA fine-tuning
+          └──────────────────────────────┘
+
+Per iteration: the Explorer proposes parameter permutations around the
+incumbent(s); the LLM Stack consumes the summarized hardware data points +
+retrieved context and proposes reasoning-guided refinements; everything is
+evaluated through the simulator; results (positive AND negative) land in the
+DB; the surrogate cost model is periodically (LoRA-)fine-tuned; diversity is
+maintained by keeping a small incumbent pool plus random template samples.
+
+The optional human gate (``approve_fn``) mirrors §3.2.2's human-in-the-loop;
+the default auto-approves (the paper's stated end state once the DB grows).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.core.cost_db import CostDB, DataPoint
+from repro.core.cost_model import CostModel
+from repro.core.design_space import PlanPoint, PlanTemplate, baseline_point
+from repro.core.evaluator import Evaluator
+from repro.core.explorer import Explorer
+from repro.core.llm_stack import LLMStack
+from repro.core.mcp import Registry, build_registry
+
+
+@dataclass
+class LoopReport:
+    arch: str
+    shape: str
+    iterations: List[Dict] = field(default_factory=list)
+    best: Optional[DataPoint] = None
+    baseline: Optional[DataPoint] = None
+
+    def improvement(self) -> float:
+        if not (self.best and self.baseline):
+            return 1.0
+        b0 = self.baseline.metrics.get("bound_s")
+        b1 = self.best.metrics.get("bound_s")
+        return (b1 / b0) if (b0 and b1) else 1.0
+
+
+@dataclass
+class DSELoop:
+    evaluator: Evaluator
+    db: CostDB
+    llm_stack: LLMStack
+    cost_model: Optional[CostModel] = None
+    registry: Optional[Registry] = None
+    approve_fn: Optional[Callable[[DataPoint], bool]] = None  # human gate
+    pool_size: int = 2  # incumbent diversity pool
+    finetune_every: int = 2
+
+    def __post_init__(self):
+        if self.registry is None:
+            self.registry = build_registry(
+                evaluator=self.evaluator, db=self.db,
+                llm_stack=self.llm_stack, cost_model=self.cost_model)
+
+    # ------------------------------------------------------------------
+    def run(self, arch: str, shape: str, *, iterations: int = 4,
+            eval_budget: int = 3, seed_point: Optional[PlanPoint] = None,
+            verbose: bool = True) -> LoopReport:
+        cfg = get_config(arch)
+        cell = SHAPE_BY_NAME[shape]
+        template = PlanTemplate(cfg, cell, dict(self.evaluator.mesh.shape))
+        report = LoopReport(arch=arch, shape=shape)
+
+        def log(msg):
+            if verbose:
+                print(f"[dse {arch}/{shape}] {msg}", flush=True)
+
+        # iteration 0: the expert initial design (paper: DSE takes an
+        # accelerator design with pre-defined parameters as its input)
+        seed = seed_point or baseline_point(cell, template)
+        t0 = time.time()
+        base_dp = self.registry.call("simulate", arch=arch, shape=shape,
+                                     point=dict(seed.dims), iteration=0,
+                                     source="expert")
+        report.baseline = base_dp
+        log(f"baseline: {base_dp.status} bound={base_dp.metrics.get('bound_s')}s "
+            f"dom={base_dp.metrics.get('dominant')} ({time.time()-t0:.0f}s)")
+
+        pool: List[DataPoint] = [base_dp]
+        explorer = Explorer(self.evaluator, self.db, self.cost_model)
+
+        for it in range(1, iterations + 1):
+            incumbent = _best_of(pool) or base_dp
+            inc_point = PlanPoint(dims={k: v for k, v in incumbent.point.items()
+                                        if k != "__key__"})
+
+            # paper §3.2.2: refine from unsuccessful data points too — the
+            # fastest *infeasible* design seeds memory-fixing refinements
+            reason_from = [(inc_point, incumbent)]
+            neg = _best_negative(self.db, arch, shape, incumbent)
+            if neg is not None:
+                neg_point = PlanPoint(dims={k: v for k, v in neg.point.items()
+                                            if k != "__key__"})
+                reason_from.append((neg_point, neg))
+                log(f"iter {it}: chaining from negative datapoint "
+                    f"(bound={neg.metrics.get('bound_s'):.2f}s, "
+                    f"{neg.metrics.get('per_device_gib', 0):.1f}GiB)")
+
+            # --- LLM Stack reasoning-guided refinement ---
+            llm_props: List[PlanPoint] = []
+            n_rej = 0
+            for pt, dp in reason_from:
+                res = self.registry.call(
+                    "propose", arch=arch, shape=shape,
+                    point=dict(pt.dims), metrics=dp.metrics, k=eval_budget)
+                llm_props.extend(res["proposals"])
+                n_rej += res["rejected"]
+            log(f"iter {it}: LLM proposed {len(llm_props)} (rejected {n_rej})")
+
+            # --- Explorer: permutations + LLM candidates, cost-model ranked ---
+            new_dps = explorer.explore(
+                arch, shape, [inc_point], budget=eval_budget, iteration=it,
+                extra_candidates=llm_props)
+            for dp in new_dps:
+                if self.approve_fn is not None and dp.status == "ok":
+                    if not self.approve_fn(dp):
+                        dp.status = "rejected"
+                        dp.reason = "human-in-the-loop veto"
+                log(f"  {dp.status:10s} bound={dp.metrics.get('bound_s')} "
+                    f"dom={dp.metrics.get('dominant')} mem="
+                    f"{dp.metrics.get('per_device_gib', float('nan')):.1f}GiB "
+                    f"{_delta_str(dp, incumbent)}")
+            pool = _select_pool(pool + new_dps, self.pool_size)
+
+            # --- periodic surrogate (LoRA) fine-tuning on the grown DB ---
+            if self.cost_model is not None and it % self.finetune_every == 0:
+                r = self.registry.call("finetune_cost_model")
+                log(f"  cost model: {r['status']} loss={r.get('loss'):.4f}"
+                    if r.get("loss") == r.get("loss") else f"  cost model: {r['status']}")
+
+            report.iterations.append({
+                "iteration": it,
+                "evaluated": len(new_dps),
+                "best_bound": (_best_of(pool).metrics.get("bound_s")
+                               if _best_of(pool) else None),
+            })
+
+        report.best = _best_of(pool) or self.db.best(arch, shape)
+        if report.best:
+            log(f"best: bound={report.best.metrics.get('bound_s')}s "
+                f"({report.improvement():.2%} of baseline) "
+                f"plan={ {k: v for k, v in report.best.point.items() if k != '__key__'} }")
+        return report
+
+
+def _best_of(pool: Sequence[DataPoint]) -> Optional[DataPoint]:
+    ok = [d for d in pool if d.status == "ok" and d.metrics.get("bound_s")]
+    return min(ok, key=lambda d: d.metrics["bound_s"]) if ok else None
+
+
+def _best_negative(db: CostDB, arch: str, shape: str,
+                   incumbent: DataPoint) -> Optional[DataPoint]:
+    """Fastest infeasible design that beats the incumbent's bound."""
+    inc = incumbent.metrics.get("bound_s") or float("inf")
+    neg = [d for d in db.query(arch, shape, "infeasible")
+           if d.metrics.get("bound_s") and d.metrics["bound_s"] < 0.9 * inc]
+    return min(neg, key=lambda d: d.metrics["bound_s"]) if neg else None
+
+
+def _select_pool(dps: Sequence[DataPoint], k: int) -> List[DataPoint]:
+    ok = sorted((d for d in dps if d.status == "ok" and d.metrics.get("bound_s")),
+                key=lambda d: d.metrics["bound_s"])
+    # diversity: keep the best k-1 plus the most-different remaining design
+    return list(ok[:k]) if len(ok) <= k else list(ok[: k - 1]) + [ok[-1]]
+
+
+def _delta_str(dp: DataPoint, incumbent: DataPoint) -> str:
+    a, b = dp.metrics.get("bound_s"), incumbent.metrics.get("bound_s")
+    if not (a and b):
+        return ""
+    changed = {k: v for k, v in dp.point.items()
+               if k != "__key__" and incumbent.point.get(k) != v}
+    return f"x{a/b:.3f} vs incumbent (changed {changed})"

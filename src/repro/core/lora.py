@@ -1,0 +1,45 @@
+"""LoRA (Hu et al., 2022) in JAX — the paper's parameter-efficient
+fine-tuning mechanism (§3.2.2): the base model's weights are frozen and small
+low-rank A·B adapters are trained on accumulated hardware data points.
+
+Generic over any pytree of 2-D weight matrices; used here to adapt the
+learned cost model (``cost_model.py``) as the DB grows.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_lora(params, key, rank: int = 8, scale: float = 0.01):
+    """One (A, B) adapter per 2-D leaf; other leaves get None."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    adapters = []
+    for leaf, k in zip(leaves, keys):
+        if leaf.ndim == 2:
+            fi, fo = leaf.shape
+            a = scale * jax.random.normal(k, (fi, rank), jnp.float32)
+            b = jnp.zeros((rank, fo), jnp.float32)
+            adapters.append({"a": a, "b": b})
+        else:
+            adapters.append(None)
+    return jax.tree_util.tree_unflatten(treedef, adapters), treedef
+
+
+def apply_lora(params, lora):
+    """Effective weights: W + A @ B (frozen base + adapters)."""
+
+    def one(p, ad):
+        if ad is None or p.ndim != 2:
+            return p
+        return p + ad["a"] @ ad["b"]
+
+    return jax.tree.map(one, params, lora,
+                        is_leaf=lambda x: x is None or isinstance(x, dict) and "a" in x)
+
+
+def lora_param_count(lora) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora))

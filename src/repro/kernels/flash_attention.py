@@ -1,0 +1,103 @@
+"""Blockwise (flash) attention Pallas kernel for TPU.
+
+Tiling: grid over (batch*kv_head*group, q_blocks); K/V streamed through VMEM
+in ``block_k`` slices via an in-kernel ``fori_loop`` with online-softmax
+accumulators held in VREGs/VMEM. Block sizes are MXU-aligned (multiples of
+128 on the contracting dim) and DSE-explorable via ``plan.kernel_blocks``.
+
+The pure-jnp oracle is ``ref.attention_ref`` (and the model-side
+``layers.chunked_attention`` uses the same math — the kernel is the TPU
+hot-path realization).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
+                  sm_scale: float, q_offset: int):
+    # q_ref: [block_q, d]; k_ref/v_ref: [S_k, d]; o_ref: [block_q, d]
+    block_q, d = q_ref.shape
+    S_k = k_ref.shape[0]
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    q_pos = q_offset + qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    n_k = S_k // block_k
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(ki * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(ki * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_new = acc * corr[:, None] + pv
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    a0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_k, body, (m0, l0, a0))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [b, sq, h, d]
+    k: jax.Array,  # [b, sk, kh, d]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    sm_scale = 1.0 / np.sqrt(d)
+
+    # head-major flat layouts: q [b*h, sq, d]; kv [b*kh, sk, d]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, sk, d)
+
+    kernel = functools.partial(
+        _flash_kernel, block_k=block_k, causal=causal,
+        sm_scale=sm_scale, q_offset=q_offset,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            # GQA: kv block index = query head // group size
+            pl.BlockSpec((None, sk, d), lambda bh, qi, g=g: (bh // g, 0, 0)),
+            pl.BlockSpec((None, sk, d), lambda bh, qi, g=g: (bh // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

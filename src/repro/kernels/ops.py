@@ -1,0 +1,55 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode; on TPU the
+same BlockSpecs lower natively. ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import vecmul as _vm
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def vecmul(x, y, *, block: int = 1024, interpret: Optional[bool] = None):
+    return _vm.vecmul(x, y, block=block, interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 128,
+            interpret: Optional[bool] = None):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = _rn.rmsnorm(x2, w, eps=eps, block_rows=block_rows,
+                      interpret=_auto_interpret(interpret))
+    return out.reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "q_offset", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, q_offset: int = 0,
+                    interpret: Optional[bool] = None):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        q_offset=q_offset, interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, initial_state=None,
+             interpret: Optional[bool] = None):
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk,
+                         initial_state=initial_state,
+                         interpret=_auto_interpret(interpret))

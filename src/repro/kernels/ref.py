@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def vecmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Element-wise vector multiply: Z_i = X_i * Y_i (the paper's §4 kernel)."""
+    return x * y
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 * inv) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """Naive full-softmax attention. q,k,v: [b, s, h, d] (same head counts)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(d)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = np.tril(np.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, initial_state=None):
+    """Exact sequential SSD recurrence (oracle for ssd_chunked + the kernel).
+
+    x: [b, s, nh, dh]; dt: [b, s, nh] (post-softplus); A: [nh] negative;
+    B, C: [b, s, N]. Returns (y [b,s,nh,dh], final_state [b,nh,dh,N]).
+    """
+    b, s, nh, dh = x.shape
+    N = B.shape[-1]
+    h = (jnp.zeros((b, nh, dh, N), jnp.float32)
+         if initial_state is None else initial_state.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # [b,nh,dh], [b,nh], [b,N], [b,N]
+        dA = jnp.exp(dtt * A[None, :])  # [b,nh]
+        h = h * dA[..., None, None] + (
+            (dtt[..., None] * xt.astype(jnp.float32))[..., None] * Bt[:, None, None, :]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct.astype(jnp.float32))
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.astype(jnp.float32).transpose(1, 0, 2),
+          B.astype(jnp.float32).transpose(1, 0, 2), C.astype(jnp.float32).transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h

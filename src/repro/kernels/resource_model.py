@@ -1,0 +1,141 @@
+"""Analytic kernel resource model — the HLS resource-report analog.
+
+For each Pallas kernel candidate the DSE evaluates:
+  * VMEM footprint of the BlockSpec working set (x2 for the double-buffered
+    HBM->VMEM pipeline) against the 128 MiB budget — BRAM utilization analog;
+  * MXU tile alignment of the matmul dims (128x128 systolic) — DSP analog;
+  * VPU lane alignment (8x128) for elementwise kernels;
+  * estimated latency (cycles) from the roofline of bytes/flops per block —
+    the paper's Table 1 latency/II analog.
+
+Infeasible candidates (VMEM overflow) are rejected before compilation and
+logged as negative hardware data points (paper §3.2.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.core.device import DeviceModel, TPU_V5E
+
+
+@dataclass(frozen=True)
+class KernelResources:
+    name: str
+    vmem_bytes: int
+    vmem_util: float  # fraction of VMEM budget
+    mxu_aligned: bool
+    vpu_aligned: bool
+    est_cycles_per_block: float
+    est_latency_us: float  # whole-kernel latency estimate
+    feasible: bool
+    notes: str = ""
+
+    def to_dict(self):
+        import dataclasses
+
+        return dataclasses.asdict(self)
+
+
+def _mk(name, vmem, flops_per_block, bytes_per_block, n_blocks, aligned_mxu,
+        aligned_vpu, dev: DeviceModel, notes="") -> KernelResources:
+    vmem_db = 2 * vmem  # double-buffered streaming
+    feasible = vmem_db <= dev.vmem_bytes
+    # per-block latency = max(compute, stream) — load-compute-store pipeline
+    t_compute = flops_per_block / dev.peak_flops_bf16
+    t_stream = bytes_per_block / dev.hbm_bw
+    t_block = max(t_compute, t_stream)
+    clock_hz = 940e6  # v5e clock
+    return KernelResources(
+        name=name,
+        vmem_bytes=vmem_db,
+        vmem_util=vmem_db / dev.vmem_bytes,
+        mxu_aligned=aligned_mxu,
+        vpu_aligned=aligned_vpu,
+        est_cycles_per_block=t_block * clock_hz,
+        est_latency_us=t_block * n_blocks * 1e6,
+        feasible=feasible,
+        notes=notes,
+    )
+
+
+def vecmul_resources(L: int, block: int, itemsize: int = 4,
+                     dev: DeviceModel = TPU_V5E) -> KernelResources:
+    vmem = 3 * block * itemsize  # X, Y, Z buffers
+    n_blocks = max((L + block - 1) // block, 1)
+    return _mk(
+        "vecmul", vmem,
+        flops_per_block=block,
+        bytes_per_block=3 * block * itemsize,
+        n_blocks=n_blocks,
+        aligned_mxu=True,  # no MXU use
+        aligned_vpu=block % (8 * 128) == 0,
+        dev=dev,
+        notes=f"L={L} block={block}",
+    )
+
+
+def rmsnorm_resources(rows: int, d: int, block_rows: int, itemsize: int = 2,
+                      dev: DeviceModel = TPU_V5E) -> KernelResources:
+    vmem = (2 * block_rows * d + d) * itemsize + block_rows * 4
+    n_blocks = max((rows + block_rows - 1) // block_rows, 1)
+    return _mk(
+        "rmsnorm", vmem,
+        flops_per_block=3 * block_rows * d,
+        bytes_per_block=2 * block_rows * d * itemsize,
+        n_blocks=n_blocks,
+        aligned_mxu=True,
+        aligned_vpu=d % 128 == 0,
+        dev=dev,
+        notes=f"rows={rows} d={d} block_rows={block_rows}",
+    )
+
+
+def flash_attention_resources(b: int, sq: int, sk: int, h: int, kh: int, d: int,
+                              block_q: int, block_k: int, itemsize: int = 2,
+                              dev: DeviceModel = TPU_V5E) -> KernelResources:
+    # per-block working set: q block + full K/V stream window + accumulators
+    vmem = (block_q * d + 2 * block_k * d) * itemsize \
+        + block_q * d * 4 + 2 * block_q * 4 + block_q * block_k * 4
+    n_blocks = b * h * max(sq // max(block_q, 1), 1)
+    flops_per_block = 2 * 2 * block_q * d * sk  # QK^T + PV over all kv blocks
+    bytes_per_block = (block_q * d + 2 * sk * d) * itemsize
+    return _mk(
+        "flash_attention", vmem,
+        flops_per_block=flops_per_block,
+        bytes_per_block=bytes_per_block,
+        n_blocks=n_blocks,
+        aligned_mxu=(d % 128 == 0 and block_q % 128 == 0 and block_k % 128 == 0),
+        aligned_vpu=True,
+        dev=dev,
+        notes=f"bq={block_q} bk={block_k} d={d} sk={sk}",
+    )
+
+
+def ssd_scan_resources(b: int, s: int, nh: int, dh: int, N: int, chunk: int,
+                       itemsize: int = 2, dev: DeviceModel = TPU_V5E) -> KernelResources:
+    # x, dt, B, C blocks + decay LxLxnh f32 + y + state
+    vmem = (chunk * nh * dh + chunk * nh + 2 * chunk * N) * itemsize \
+        + chunk * chunk * nh * 4 + chunk * nh * dh * 4 + nh * dh * N * 4
+    n_blocks = b * max(s // max(chunk, 1), 1)
+    flops_per_block = (2 * chunk * chunk * N + 2 * chunk * chunk * nh * dh
+                       + 2 * chunk * nh * dh * N)
+    bytes_per_block = (chunk * (nh * dh + nh + 2 * N)) * itemsize + nh * dh * N * 4
+    return _mk(
+        "ssd_scan", vmem,
+        flops_per_block=flops_per_block,
+        bytes_per_block=bytes_per_block,
+        n_blocks=n_blocks,
+        aligned_mxu=(chunk % 128 == 0 and N % 128 == 0),
+        aligned_vpu=dh % 8 == 0,
+        dev=dev,
+        notes=f"chunk={chunk} nh={nh} dh={dh} N={N}",
+    )
+
+
+RESOURCE_FNS = {
+    "vecmul": vecmul_resources,
+    "rmsnorm": rmsnorm_resources,
+    "flash_attention": flash_attention_resources,
+    "ssd_scan": ssd_scan_resources,
+}

@@ -1,0 +1,34 @@
+"""Fused RMSNorm Pallas kernel: one pass over rows, f32 statistics in VMEM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    o_ref[...] = ((x * inv) * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+            block_rows: int = 128, interpret: bool = False) -> jax.Array:
+    """x: [rows, d] (callers flatten leading dims), w: [d]."""
+    rows, d = x.shape
+    pad = (-rows) % block_rows
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    n = x.shape[0] // block_rows
+    out = pl.pallas_call(
+        lambda x_ref, w_ref, o_ref: _rmsnorm_kernel(x_ref, w_ref, o_ref, eps=eps),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], d), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[:rows]

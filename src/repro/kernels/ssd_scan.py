@@ -1,0 +1,135 @@
+"""Mamba2 SSD chunk kernel (state-space duality) for TPU.
+
+Per grid cell (batch, chunk) the kernel computes, entirely in VMEM:
+  * the intra-chunk quadratic term  Y_intra = (C·Bᵀ ⊙ decay) · (dt x)
+  * the chunk's local outgoing state S_loc and total decay
+
+The O(n_chunks) inter-chunk state recurrence is sequential by nature and is
+composed outside the kernel (lax.scan over tiny [nh, dh, N] states), after
+which a second pass adds the inter-chunk contribution C · S_prev. Chunk
+length is the DSE-explorable tiling knob.
+
+Oracle: ``ref.ssd_ref`` (exact sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref,
+                      y_ref, state_ref, decay_ref):
+    # x: [L, nh, dh]; dt: [L, nh]; A: [nh]; B, C: [L, N]
+    L, nh, dh = x_ref.shape
+    N = B_ref.shape[-1]
+    x = x_ref[...].astype(jnp.float32)
+    dt = dt_ref[...].astype(jnp.float32)
+    A = A_ref[...].astype(jnp.float32)
+    B = B_ref[...].astype(jnp.float32)
+    C = C_ref[...].astype(jnp.float32)
+
+    dA = dt * A[None, :]  # [L, nh], negative
+    cs = jnp.cumsum(dA, axis=0)
+
+    # intra-chunk: decay(l, s, h) = exp(cs_l - cs_s) for l >= s
+    diff = cs[:, None, :] - cs[None, :, :]  # [L, S, nh]
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    causal = li >= si  # (np constants can't be captured by pallas kernels)
+    decay = jnp.exp(jnp.where(causal[:, :, None], diff, -jnp.inf))
+    att = jnp.einsum("ln,sn->ls", C, B)[:, :, None] * decay  # [L,S,nh]
+    xdt = x * dt[:, :, None]
+    y_ref[...] = jnp.einsum("lsh,shp->lhp", att, xdt).astype(y_ref.dtype)
+
+    # local outgoing state and total chunk decay
+    decay_end = jnp.exp(cs[-1:, :] - cs)  # [L, nh]
+    state_ref[...] = jnp.einsum("ln,lh,lhp->hpn", B, dt * decay_end, x).astype(
+        state_ref.dtype)
+    decay_ref[...] = jnp.exp(cs[-1, :]).astype(decay_ref.dtype)
+
+
+def _ssd_inter_kernel(C_ref, S_ref, cs_ref, y_ref):
+    # C: [L, N]; S (incoming state): [nh, dh, N]; cs: [L, nh]
+    C = C_ref[...].astype(jnp.float32)
+    S = S_ref[...].astype(jnp.float32)
+    decay_in = jnp.exp(cs_ref[...].astype(jnp.float32))  # [L, nh]
+    y = jnp.einsum("ln,hpn->lhp", C, S) * decay_in[:, :, None]
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, initial_state=None,
+             interpret: bool = False):
+    """Full SSD over a sequence using the chunk kernel.
+
+    x: [b, s, nh, dh]; dt: [b, s, nh] (post-softplus); A: [nh];
+    B, C: [b, s, N]. Returns (y [b,s,nh,dh], final_state [b,nh,dh,N]).
+    """
+    b, s, nh, dh = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xc = x.reshape(b, nc, chunk, nh, dh)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+
+    kern = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, nh, dh), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((None, None, chunk, nh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((nh,), lambda i, j: (0,)),
+            pl.BlockSpec((None, None, chunk, N), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, chunk, N), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, chunk, nh, dh), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((None, None, nh, dh, N), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((None, None, nh), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, chunk, nh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, nh, dh, N), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    y_intra, S_loc, chunk_decay = kern(xc, dtc, A, Bc, Cc)
+
+    # ---- sequential inter-chunk recurrence (tiny state, outside kernel) ----
+    S0 = (jnp.zeros((b, nh, dh, N), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def step(S_prev, inp):
+        S_l, cd = inp
+        return S_prev * cd[:, :, None, None] + S_l, S_prev
+
+    S_final, S_prevs = jax.lax.scan(
+        step, S0, (S_loc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)  # [b,nc,nh,dh,N]
+
+    # ---- second kernel pass: inter-chunk contribution ----
+    dA = dtc.astype(jnp.float32) * A[None, None, None, :]
+    cs = jnp.cumsum(dA, axis=2)  # [b,nc,L,nh]
+    inter = pl.pallas_call(
+        _ssd_inter_kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, N), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, nh, dh, N), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((None, None, chunk, nh), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, chunk, nh, dh), lambda i, j: (i, j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nc, chunk, nh, dh), jnp.float32),
+        interpret=interpret,
+    )(Cc, S_prevs, cs)
+
+    y = (y_intra + inter).reshape(b, s, nh, dh).astype(x.dtype)
+    return y, S_final

@@ -1,0 +1,50 @@
+"""Element-wise vector-multiply accelerator — TPU-native port of the design
+SECDA-DSE generates in the paper's §4 / Appendix.
+
+Paper (FPGA)                         | here (TPU)
+-------------------------------------|------------------------------------
+AXI-Stream load of X, Y              | HBM -> VMEM streaming via BlockSpec grid
+on-chip X/Y/Z BRAM buffers           | VMEM blocks (one per operand + result)
+"L operations in parallel" compute   | 8x128 VPU lanes per block
+store module -> AXI-Stream out       | VMEM -> HBM write of the Z block
+
+The block length is the DSE-explorable "compute unit dimension": the
+resource model in ``resource_model.py`` reports the VMEM footprint
+(BRAM-utilization analog) and lane alignment (DSP analog) per candidate.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vecmul_kernel(x_ref, y_ref, z_ref):
+    # load (VMEM block) -> compute (VPU elementwise) -> store (VMEM block)
+    z_ref[...] = x_ref[...] * y_ref[...]
+
+
+def vecmul(x: jax.Array, y: jax.Array, *, block: int = 1024,
+           interpret: bool = False) -> jax.Array:
+    """Z = X ⊙ Y with explicit HBM->VMEM block streaming."""
+    assert x.shape == y.shape and x.ndim == 1
+    L = x.shape[0]
+    pad = (-L) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        y = jnp.pad(y, (0, pad))
+    n = x.shape[0] // block
+    z = pl.pallas_call(
+        _vecmul_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0],), x.dtype),
+        interpret=interpret,
+    )(x, y)
+    return z[:L]

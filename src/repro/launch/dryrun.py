@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape x mesh) cell: build the step function,
+``jit(...).lower(**input_specs).compile()`` against the production mesh, and
+record ``memory_analysis`` / ``cost_analysis`` / HLO collective bytes into a
+JSON artifact (read by the roofline report, the SECDA-DSE evaluator, and
+EXPERIMENTS.md).
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks the
+device count at first init.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, SHAPE_BY_NAME, get_config
+from repro.core.device import TPU_V5E, roofline_terms
+from repro.core.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.models import model as M
+from repro.sharding.plan import ShardingPlan, baseline_plan
+from repro.train import step as train_step_mod
+from repro.serve import step as serve_step_mod
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS per step: 6·N·D train, 2·N·D prefill, 2·N·B decode."""
+    n = cfg.n_active_params()
+    if cell.kind == "train":
+        return 6.0 * n * cell.seq_len * cell.global_batch
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.seq_len * cell.global_batch
+    return 2.0 * n * cell.global_batch
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+def build_cell(arch: str, shape_name: str, mesh, plan=None):
+    """Returns (jitted fn, kwargs of ShapeDtypeStructs) for one cell."""
+    cfg = get_config(arch)
+    cell = SHAPE_BY_NAME[shape_name]
+    ok, why = M.cell_supported(cfg, cell)
+    if not ok:
+        return None, why
+    plan = plan or baseline_plan(cfg, cell, multi_pod="pod" in mesh.shape)
+    specs = M.input_specs(cfg, cell)
+
+    if cell.kind == "train":
+        step = train_step_mod.make_train_step(cfg, plan, mesh)
+        state, logical = train_step_mod.abstract_train_state(cfg, plan)
+        sspec = train_step_mod.state_specs(mesh, plan, state, logical)
+        s_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspec)
+        bspec = plan.batch_specs(mesh, specs["batch"])
+        b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), bspec)
+        fn = jax.jit(step, in_shardings=(s_shard, b_shard),
+                     out_shardings=(s_shard, None), donate_argnums=(0,))
+        args = (state, specs["batch"])
+        return (fn, args), None
+
+    values, logical = M.abstract_params(cfg)
+    pshard = plan.param_shardings(mesh, values, logical)
+    bspec = plan.batch_specs(mesh, specs["batch"])
+    b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), bspec)
+    cspec = plan.cache_specs(mesh, specs["cache"])
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspec)
+
+    if cell.kind == "prefill":
+        step = serve_step_mod.make_prefill_step(cfg, plan, mesh)
+    else:
+        step = serve_step_mod.make_decode_step(cfg, plan, mesh)
+    fn = jax.jit(step, in_shardings=(pshard, b_shard, c_shard),
+                 out_shardings=(None, c_shard), donate_argnums=(2,))
+    args = (values, specs["batch"], specs["cache"])
+    return (fn, args), None
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, plan=None,
+             artifact_dir: Path = ARTIFACT_DIR):
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "n_devices": mesh.size, "plan": (plan or
+            baseline_plan(get_config(arch), SHAPE_BY_NAME[shape_name],
+                          multi_pod="pod" in mesh.shape)).name}
+    try:
+        built, skip = build_cell(arch, shape_name, mesh, plan)
+        if built is None:
+            rec.update(status="skipped", reason=skip)
+            artifact_dir.mkdir(parents=True, exist_ok=True)
+            (artifact_dir / f"{arch}__{shape_name}__{mesh_name}.json").write_text(
+                json.dumps(rec, indent=1))
+            return rec
+        fn, args = built
+        with mesh:
+            lowered = fn.lower(*args)
+            t_low = time.time()
+            compiled = lowered.compile()
+            t_comp = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = analyze_hlo(compiled.as_text(), mesh.size)
+        cfg = get_config(arch)
+        cell = SHAPE_BY_NAME[shape_name]
+        mf = model_flops(cfg, cell)
+        terms = roofline_terms(
+            flops=hlo["flops"], hbm_bytes=hlo["hbm_bytes"],
+            wire_bytes=hlo["wire_bytes_total"],
+        )
+        # memory_analysis is already per-device on this backend (verified:
+        # llama3-8b args = params/TP + ZeRO-sharded opt state = 1.76 GiB/dev)
+        hbm_per_dev = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                       + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+        rec.update(
+            status="ok",
+            lower_s=round(t_low - t0, 2),
+            compile_s=round(t_comp - t_low, 2),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+                "per_device_bytes": hbm_per_dev,
+                "fits_hbm": bool(hbm_per_dev <= TPU_V5E.hbm_bytes),
+            },
+            xla_flops_once=cost.get("flops", 0.0),
+            hlo=hlo,
+            model_flops=mf,
+            model_flops_per_dev=mf / mesh.size,
+            useful_flops_ratio=(mf / mesh.size) / max(hlo["flops"], 1.0),
+            roofline=terms.to_dict(),
+        )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a negative datapoint
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    artifact_dir.mkdir(parents=True, exist_ok=True)
+    out = artifact_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape cell name or 'all'")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both", "small"])
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    args = ap.parse_args()
+    artifact_dir = Path(args.out)
+
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = []
+    if args.mesh in ("pod", "both"):
+        meshes.append(("pod16x16", make_production_mesh()))
+    if args.mesh in ("multipod", "both"):
+        meshes.append(("multipod2x16x16", make_production_mesh(multi_pod=True)))
+    if args.mesh == "small":
+        meshes.append(("small2x4", make_mesh((2, 4), ("data", "model"))))
+
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                out = artifact_dir / f"{arch}__{shape}__{mesh_name}.json"
+                if out.exists() and not args.force:
+                    rec = json.loads(out.read_text())
+                    if rec.get("status") in ("ok", "skipped"):
+                        print(f"[cached] {arch} {shape} {mesh_name}: {rec['status']}")
+                        continue
+                rec = run_cell(arch, shape, mesh, mesh_name, artifact_dir=artifact_dir)
+                if rec["status"] == "error":
+                    failures += 1
+                    print(f"[FAIL] {arch} {shape} {mesh_name}: {rec['error']}", flush=True)
+                else:
+                    extra = ""
+                    if rec["status"] == "ok":
+                        gb = rec["memory"]["per_device_bytes"] / 2**30
+                        r = rec["roofline"]
+                        extra = (f" flops/dev={rec['hlo']['flops']:.3e}"
+                                 f" wire={rec['hlo']['wire_bytes_total']:.3e}B"
+                                 f" mem/dev={gb:.2f}GiB dom={r['dominant']}"
+                                 f" bound={r['bound_s']*1e3:.1f}ms compile={rec['compile_s']}s")
+                    print(f"[{rec['status']}] {arch} {shape} {mesh_name}{extra}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512")
+"""SECDA-DSE loop launcher.
+
+Runs the full explore -> reason -> simulate -> record loop for one workload
+cell on the production mesh. The XLA_FLAGS lines must stay first (jax locks
+the device count at first init).
+
+Example:
+    PYTHONPATH=src python -m repro.launch.dse --arch llama3-8b --shape train_4k \
+        --iterations 4 --budget 3
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_NAMES, SHAPES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--shape", required=True, choices=[s.name for s in SHAPES])
+    ap.add_argument("--iterations", type=int, default=4)
+    ap.add_argument("--budget", type=int, default=3, help="evaluations per iteration")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "small"])
+    ap.add_argument("--db", default="artifacts/dse/cost_db.jsonl")
+    ap.add_argument("--approve", action="store_true",
+                    help="human-in-the-loop: confirm each accepted design")
+    ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
+    ap.add_argument("--report", default=None, help="write the loop report JSON here")
+    args = ap.parse_args()
+
+    from repro.core.cost_db import CostDB, featurize
+    from repro.core.cost_model import CostModel
+    from repro.core.evaluator import Evaluator
+    from repro.core.llm_client import MockLLM, OllamaClient
+    from repro.core.llm_stack import LLMStack
+    from repro.core.loop import DSELoop
+    from repro.core.rag import CodeIndex
+    from repro.launch.mesh import make_mesh, make_production_mesh
+
+    if args.mesh == "pod":
+        mesh, mesh_name = make_production_mesh(), "pod16x16"
+    elif args.mesh == "multipod":
+        mesh, mesh_name = make_production_mesh(multi_pod=True), "multipod2x16x16"
+    else:
+        mesh, mesh_name = make_mesh((2, 4), ("data", "model")), "small2x4"
+
+    db = CostDB(args.db)
+    client = MockLLM() if args.llm == "mock" else OllamaClient()
+    code_index = CodeIndex(roots=[Path(__file__).resolve().parents[1]]).build()
+    stack = LLMStack(client=client, db=db, code_index=code_index)
+    cost_model = CostModel.create(in_dim=featurize({}, {}).shape[0])
+
+    approve = None
+    if args.approve:
+        def approve(dp):
+            ans = input(f"accept design bound={dp.metrics.get('bound_s')}s? [Y/n] ")
+            return ans.strip().lower() not in ("n", "no")
+
+    loop = DSELoop(evaluator=Evaluator(mesh, mesh_name), db=db,
+                   llm_stack=stack, cost_model=cost_model, approve_fn=approve)
+    report = loop.run(args.arch, args.shape, iterations=args.iterations,
+                      eval_budget=args.budget)
+
+    if args.report:
+        out = {
+            "arch": report.arch, "shape": report.shape,
+            "baseline": report.baseline.__dict__ if report.baseline else None,
+            "best": report.best.__dict__ if report.best else None,
+            "iterations": report.iterations,
+            "improvement": report.improvement(),
+        }
+        Path(args.report).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.report).write_text(json.dumps(out, indent=1, default=str))
+        print(f"report -> {args.report}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serving launcher: batched prefill+decode for a (reduced) architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --requests 8
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config, reduced as reduce_cfg
+from repro.models import model as M
+from repro.serve import step as serve_step
+from repro.serve.batcher import Batcher
+from repro.sharding.plan import ShardingPlan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = reduce_cfg(get_config(args.arch))
+    if cfg.family in ("vlm", "audio"):
+        raise SystemExit("serve launcher targets text-in architectures; "
+                         "vlm/audio frontends are stub inputs (see dryrun)")
+    params, _ = M.materialize_params(cfg, jax.random.key(0))
+    plan = ShardingPlan(rules={})
+    batcher = Batcher(
+        cfg, params,
+        jax.jit(serve_step.make_prefill_step(cfg, plan, None)),
+        jax.jit(serve_step.make_decode_step(cfg, plan, None)),
+        init_cache=lambda b, ml: M.init_cache(cfg, b, ml),
+        max_batch=args.max_batch, max_len=256)
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        batcher.submit(rng.integers(0, cfg.vocab, size=int(rng.integers(4, 32))),
+                       max_new=args.max_new)
+    batcher.run()
+    s = batcher.stats
+    print(f"{s['requests']} requests, {s['tokens']} tokens, "
+          f"{s['tok_per_s']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

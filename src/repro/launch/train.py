@@ -1,0 +1,57 @@
+"""Training launcher: reduced configs train for real on this host; full
+configs build the production-mesh step (the artifact a pod would execute).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+        --steps 50 --batch 8 --seq 64
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config, reduced as reduce_cfg
+from repro.sharding.plan import ShardingPlan, baseline_rules
+from repro.train import step as step_mod
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced config on this host's devices")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=["none", "dots", "full"])
+    ap.add_argument("--grad-compress", default="none", choices=["none", "int8", "topk"])
+    ap.add_argument("--ckpt", default="artifacts/ckpt_train")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    plan = ShardingPlan(rules={} if args.reduced else baseline_rules(),
+                        remat=args.remat, microbatches=args.microbatches,
+                        grad_compress=args.grad_compress, zero1=not args.reduced)
+    print(f"arch={cfg.name} params={cfg.n_params()/1e6:.1f}M plan={plan.name}")
+
+    state, _ = step_mod.init_train_state(cfg, jax.random.key(0), plan)
+    step = jax.jit(step_mod.make_train_step(
+        cfg, plan, None, AdamWConfig(warmup_steps=10, total_steps=args.steps)),
+        donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch))
+    tr = Trainer(cfg, plan, step, state, data,
+                 TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
+                               ckpt_every=max(args.steps // 4, 5)))
+    out = tr.run()
+    h = out["history"]
+    print(f"final: step {out['final_step']} loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings [b, F, 1024]; the encoder consumes them through a
+learned projection. The decoder is a standard causal transformer with
+cross-attention; decode-time caches hold self-KV and precomputed cross-KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import keygen, ones, par
+from repro.models.transformer import stack_layers, _logits
+
+
+def init_encdec(cfg, key):
+    dt = jnp.dtype(cfg.dtype)
+    keys = keygen(key)
+    d = cfg.d_model
+
+    def enc_layer(k):
+        lk = keygen(k)
+        return {
+            "ln1": ones((d,), ("embed",), dt),
+            "attn": L.init_attention(lk, cfg, dt),
+            "ln2": ones((d,), ("embed",), dt),
+            "mlp": L.init_mlp(lk, d, cfg.d_ff, dt),
+        }
+
+    def dec_layer(k):
+        lk = keygen(k)
+        return {
+            "ln1": ones((d,), ("embed",), dt),
+            "attn": L.init_attention(lk, cfg, dt),
+            "ln_x": ones((d,), ("embed",), dt),
+            "xattn": L.init_attention(lk, cfg, dt),
+            "ln2": ones((d,), ("embed",), dt),
+            "mlp": L.init_mlp(lk, d, cfg.d_ff, dt),
+        }
+
+    return {
+        "frontend_proj": par(next(keys), (1024, d), (None, "embed"), dt),
+        "embed": par(next(keys), (cfg.vocab, d), ("vocab", "embed"), dt),
+        "enc_blocks": stack_layers(enc_layer, next(keys), cfg.n_enc_layers),
+        "dec_blocks": stack_layers(dec_layer, next(keys), cfg.n_layers),
+        "ln_enc": ones((d,), ("embed",), dt),
+        "ln_f": ones((d,), ("embed",), dt),
+        "lm_head": par(next(keys), (d, cfg.vocab), ("embed", "vocab"), dt),
+    }
+
+
+def _cross_kv(p, enc_out, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+def _cross_attend(p, x, ck, cv, cfg, constrain):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = constrain(q, "heads")
+    if s == 1:
+        o = L.decode_attention(q, ck, cv, jnp.full((b,), ck.shape[1]))
+    else:
+        o = L.chunked_attention(q, ck, cv, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", constrain(o, "heads"), p["wo"])
+
+
+def encode(cfg, params, frames, constrain=lambda a, k: a, remat="none"):
+    x = frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend_proj"]
+    x = constrain(x, "hidden")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, lp):
+        a, _ = L.attention_block(
+            lp["attn"], L.rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg,
+            positions=positions, causal=False, constrain=constrain,
+        )
+        h = x + a
+        out = h + L.mlp_block(lp["mlp"], L.rmsnorm(h, lp["ln2"], cfg.norm_eps), constrain)
+        return constrain(out, "hidden"), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_stack(cfg, params, tokens, enc_out, *, cache=None, constrain=lambda a, k: a, remat="none"):
+    """cache: {"k","v" self-KV [L,b,S,kh,dh], "ck","cv" cross-KV [L,b,F,kh,dh], "len": [b]}."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "hidden")
+    b, s, _ = x.shape
+    if cache is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    else:
+        positions = cache["len"][:, None] + jnp.zeros((b, s), jnp.int32)
+
+    def body(x, xs):
+        lp, lc = xs
+        a, nc = L.attention_block(
+            lp["attn"], L.rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg,
+            positions=positions, causal=True,
+            cache=None if lc is None else {"k": lc["k"], "v": lc["v"], "len": lc["len"]},
+            constrain=constrain,
+        )
+        h = x + a
+        if lc is None:
+            ck, cv = _cross_kv(lp["xattn"], enc_out, cfg)
+        else:
+            ck, cv = lc["ck"], lc["cv"]
+        h = h + _cross_attend(lp["xattn"], L.rmsnorm(h, lp["ln_x"], cfg.norm_eps), ck, cv, cfg, constrain)
+        out = h + L.mlp_block(lp["mlp"], L.rmsnorm(h, lp["ln2"], cfg.norm_eps), constrain)
+        new_lc = None if lc is None else {"k": nc["k"], "v": nc["v"]}
+        return constrain(out, "hidden"), new_lc
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+
+    if cache is None:
+        x, _ = jax.lax.scan(lambda c, lp: body(c, (lp, None)), x, params["dec_blocks"])
+        new_cache = None
+    else:
+        lcaches = {
+            "k": cache["k"], "v": cache["v"], "ck": cache["ck"], "cv": cache["cv"],
+            "len": jnp.broadcast_to(cache["len"], (cfg.n_layers, b)),
+        }
+        x, new_kv = jax.lax.scan(body, x, (params["dec_blocks"], lcaches))
+        new_cache = {
+            "k": new_kv["k"], "v": new_kv["v"], "ck": cache["ck"], "cv": cache["cv"],
+            "len": cache["len"] + s,
+        }
+    return L.rmsnorm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+
+def encdec_loss(cfg, params, batch, constrain=lambda a, k: a, remat="none",
+                loss_chunk: int = 0):
+    from repro.models.transformer import ce_loss
+
+    enc_out = encode(cfg, params, batch["frontend"], constrain, remat)
+    x, _ = decode_stack(cfg, params, batch["tokens"], enc_out, constrain=constrain, remat=remat)
+    loss, tokens = ce_loss(cfg, params, x, batch["targets"], constrain, loss_chunk)
+    return loss, {"loss": loss, "tokens": tokens}
+
+
+def init_encdec_cache(cfg, batch_size: int, max_len: int, dtype):
+    kh, dh = cfg.n_kv_heads, cfg.head_dim()
+    F = cfg.frontend_len
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch_size, max_len, kh, dh), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch_size, max_len, kh, dh), dtype),
+        "ck": jnp.zeros((cfg.n_layers, batch_size, F, kh, dh), dtype),
+        "cv": jnp.zeros((cfg.n_layers, batch_size, F, kh, dh), dtype),
+        "len": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def encdec_prefill(cfg, params, batch, cache, constrain=lambda a, k: a):
+    """Encode the source and prefill the decoder with the target prompt."""
+    enc_out = encode(cfg, params, batch["frontend"], constrain)
+    ck = jax.vmap(lambda lp: _cross_kv(lp["xattn"], enc_out, cfg)[0])(params["dec_blocks"])
+    cv = jax.vmap(lambda lp: _cross_kv(lp["xattn"], enc_out, cfg)[1])(params["dec_blocks"])
+    cache = {**cache, "ck": ck, "cv": cv}
+    x, new_cache = decode_stack(cfg, params, batch["tokens"], enc_out, cache=cache, constrain=constrain)
+    return _logits(cfg, params, x[:, -1:]), new_cache
+
+
+def encdec_decode(cfg, params, batch, cache, constrain=lambda a, k: a):
+    x, new_cache = decode_stack(cfg, params, batch["tokens"], None, cache=cache, constrain=constrain)
+    return _logits(cfg, params, x), new_cache

@@ -1,0 +1,168 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention+MLP block
+applied every k layers, specialised per invocation with LoRA deltas
+(arXiv:2411.15242 — the same LoRA mechanism the paper uses for its LLM Stack).
+
+Layer loop structure: outer ``lax.scan`` over n_uses groups; inner scan over
+the ``every`` Mamba layers of the group; then the shared block with that
+group's LoRA adapters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.layers import Param, keygen, ones, par, zeros
+from repro.models.transformer import stack_layers, _logits
+
+
+def _init_lora(keys, cfg, dtype):
+    """Per-invocation LoRA adapters for the shared attention + MLP block."""
+    d, h, kh, dh, ff = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim(), cfg.d_ff
+    r = cfg.hybrid_lora_rank
+    p = {}
+    for nm, (fi, fo) in {
+        "wq": (d, h * dh), "wk": (d, kh * dh), "wv": (d, kh * dh), "wo": (h * dh, d),
+    }.items():
+        p[f"{nm}_lora_a"] = par(next(keys), (fi, r), (None, "lora_rank"), dtype)
+        p[f"{nm}_lora_b"] = zeros((r, fo), ("lora_rank", None), dtype)
+    mlp = {
+        "wi_lora_a": par(next(keys), (d, r), ("embed", "lora_rank"), dtype),
+        "wi_lora_b": zeros((r, ff), ("lora_rank", "ffn"), dtype),
+        "wo_lora_a": par(next(keys), (ff, r), ("ffn", "lora_rank"), dtype),
+        "wo_lora_b": zeros((r, d), ("lora_rank", "embed"), dtype),
+    }
+    return {"attn": p, "mlp": mlp}
+
+
+def init_hybrid(cfg, key):
+    dt = jnp.dtype(cfg.dtype)
+    keys = keygen(key)
+    d = cfg.d_model
+    every = cfg.hybrid_attn_every
+    n_uses = cfg.n_layers // every
+    shared_keys = keygen(next(keys))
+    params = {
+        "embed": par(next(keys), (cfg.vocab, d), ("vocab", "embed"), dt),
+        "blocks": stack_layers(
+            lambda k: M.init_mamba_layer(keygen(k), cfg, dt), next(keys), cfg.n_layers
+        ),
+        "shared": {
+            "in_proj": par(next(shared_keys), (2 * d, d), (None, "embed"), dt),
+            "ln1": ones((d,), ("embed",), dt),
+            "attn": L.init_attention(shared_keys, cfg, dt),
+            "ln2": ones((d,), ("embed",), dt),
+            "mlp": L.init_mlp(shared_keys, d, cfg.d_ff, dt),
+        },
+        "lora": stack_layers(lambda k: _init_lora(keygen(k), cfg, dt), next(keys), n_uses),
+        "ln_f": ones((d,), ("embed",), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = par(next(keys), (d, cfg.vocab), ("embed", "vocab"), dt)
+    return params
+
+
+def _group_tree(tree, n_groups: int):
+    return jax.tree.map(lambda a: a.reshape(n_groups, a.shape[0] // n_groups, *a.shape[1:]), tree)
+
+
+def hybrid_forward(cfg, params, batch, *, cache=None, constrain=lambda a, k: a, remat="none"):
+    """cache: {"mamba": stacked [L,...], "attn": {"k","v" [n_uses,...]}, "len": [b]}"""
+    every = cfg.hybrid_attn_every
+    n_uses = cfg.n_layers // every
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = constrain(x, "hidden")
+    x0 = x  # original embedding, concatenated into every shared-block input
+    b, s, d = x.shape
+    if cache is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    else:
+        positions = cache["len"][:, None] + jnp.zeros((b, s), jnp.int32)
+
+    mamba_groups = _group_tree(params["blocks"], n_uses)
+
+    def inner(x, xs):
+        lp, lc = xs
+        return M.mamba_block(lp, x, cfg, cache=lc, constrain=constrain)
+
+    def group_body(carry, xs):
+        x, = carry
+        gp, lora, mcache, acache = xs
+        if mcache is None:
+            x, _ = jax.lax.scan(lambda c, lp: inner(c, (lp, None)), x, gp)
+            new_mc = None
+        else:
+            x, new_mc = jax.lax.scan(inner, x, (gp, mcache))
+        # shared attention + MLP block with this group's LoRA
+        sp = params["shared"]
+        inp = jnp.concatenate([x, x0], axis=-1) @ sp["in_proj"]
+        h = L.rmsnorm(inp, sp["ln1"], cfg.norm_eps)
+        a, new_ac = L.attention_block(
+            {**sp["attn"], **lora["attn"]}, h, cfg,
+            positions=positions, causal=True, cache=acache,
+            constrain=constrain, use_lora=True,
+        )
+        h2 = x + a
+        m = L.mlp_block({**sp["mlp"], **lora["mlp"]}, L.rmsnorm(h2, sp["ln2"], cfg.norm_eps),
+                        constrain, use_lora=True)
+        return (constrain(h2 + m, "hidden"),), (new_mc, new_ac)
+
+    if remat == "full":
+        group_body = jax.checkpoint(group_body)
+
+    if cache is None:
+        (x,), _ = jax.lax.scan(
+            lambda c, xs: group_body(c, (xs[0], xs[1], None, None)),
+            (x,), (mamba_groups, params["lora"]),
+        )
+        new_cache = None
+    else:
+        mcaches = _group_tree(cache["mamba"], n_uses)
+        acaches = {
+            "k": cache["attn"]["k"], "v": cache["attn"]["v"],
+            "len": jnp.broadcast_to(cache["len"], (n_uses, b)),
+        }
+        (x,), (new_mc, new_ac) = jax.lax.scan(
+            group_body, (x,), (mamba_groups, params["lora"], mcaches, acaches)
+        )
+        new_cache = {
+            "mamba": jax.tree.map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_mc),
+            "attn": {"k": new_ac["k"], "v": new_ac["v"]},
+            "len": cache["len"] + s,
+        }
+    return L.rmsnorm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+
+def hybrid_loss(cfg, params, batch, constrain=lambda a, k: a, remat="none",
+             loss_chunk: int = 0):
+    from repro.models.transformer import ce_loss
+
+    x, _ = hybrid_forward(cfg, params, batch, constrain=constrain, remat=remat)
+    loss, tokens = ce_loss(cfg, params, x, batch["targets"], constrain, loss_chunk)
+    return loss, {"loss": loss, "tokens": tokens}
+
+
+def init_hybrid_cache(cfg, batch_size: int, max_len: int, dtype):
+    from repro.models.ssm_lm import init_ssm_cache
+
+    n_uses = cfg.n_layers // cfg.hybrid_attn_every
+    kh, dh = cfg.n_kv_heads, cfg.head_dim()
+    return {
+        "mamba": init_ssm_cache(cfg, batch_size, dtype),
+        "attn": {
+            "k": jnp.zeros((n_uses, batch_size, max_len, kh, dh), dtype),
+            "v": jnp.zeros((n_uses, batch_size, max_len, kh, dh), dtype),
+        },
+        "len": jnp.zeros((batch_size,), jnp.int32),
+    }
+
+
+def hybrid_prefill(cfg, params, batch, cache, constrain=lambda a, k: a):
+    x, new_cache = hybrid_forward(cfg, params, batch, cache=cache, constrain=constrain)
+    return _logits(cfg, params, x[:, -1:]), new_cache
+
+
+def hybrid_decode(cfg, params, batch, cache, constrain=lambda a, k: a):
+    x, new_cache = hybrid_forward(cfg, params, batch, cache=cache, constrain=constrain)
+    return _logits(cfg, params, x), new_cache

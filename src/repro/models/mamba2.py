@@ -1,0 +1,165 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic term +
+inter-chunk state recurrence via ``lax.scan``); decode is the O(1) recurrent
+update. This jnp implementation is also the oracle for ``kernels/ssd_scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.layers import Param, keygen, ones, par, zeros
+
+
+def init_mamba_layer(keys, cfg, dtype):
+    d = cfg.d_model
+    s = cfg.ssm
+    di, N, nh = s.d_inner(d), s.d_state, s.n_heads(d)
+    return {
+        "ln": ones((d,), ("embed",), dtype),
+        # in_proj -> [z(di), x(di), B(N), C(N), dt(nh)]
+        "in_proj": par(next(keys), (d, 2 * di + 2 * N + nh), ("embed", "ssm_inner"), dtype),
+        "conv_w": par(next(keys), (s.conv_width, di + 2 * N), ("conv", "ssm_inner"), dtype, scale=0.1),
+        "conv_b": zeros((di + 2 * N,), ("ssm_inner",), dtype),
+        "A_log": Param(jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32), ("ssm_heads",)),
+        "D": ones((nh,), ("ssm_heads",), jnp.float32),
+        "dt_bias": zeros((nh,), ("ssm_heads",), jnp.float32),
+        "out_norm": ones((di,), ("ssm_inner",), dtype),
+        "out_proj": par(next(keys), (di, d), ("ssm_inner", "embed"), dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d = cfg.d_model
+    s = cfg.ssm
+    di, N, nh = s.d_inner(d), s.d_state, s.n_heads(d)
+    z, x, B, C, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv, width W. state: [b, W-1, ch] carry for decode."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(xBC.dtype), xBC], axis=1)
+    out = sum(pad[:, i : i + xBC.shape[1]] * w[i] for i in range(W))
+    new_state = pad[:, -(W - 1) :] if xBC.shape[1] >= 1 else state
+    return jax.nn.silu(out + b), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """SSD over a full sequence.
+
+    x: [b, s, nh, dh]; dt: [b, s, nh] (post-softplus); A: [nh] (negative);
+    B, C: [b, s, N]. Returns (y [b,s,nh,dh], final_state [b,nh,dh,N]).
+    """
+    b, s, nh, dh = x.shape
+    N = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)) if False else ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    T = x.shape[1]
+    nc, Lc = T // chunk, chunk
+    xc = x.reshape(b, nc, Lc, nh, dh)
+    dtc = dt.reshape(b, nc, Lc, nh).astype(jnp.float32)
+    Bc = B.reshape(b, nc, Lc, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Lc, N).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]  # [b,nc,L,nh], negative
+    cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative decay
+
+    # --- intra-chunk (quadratic within the chunk) ---
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # [b,nc,L,S,nh]
+    causal = np.tril(np.ones((Lc, Lc), bool))
+    # mask inside the exponent: exp of masked (l<s) entries would overflow
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], diff, -np.inf))
+    att = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)[..., None] * decay
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # [b,nc,L,nh,dh]
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", att, xdt)
+
+    # --- per-chunk local final state ---
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)  # [b,nc,L,nh]
+    S_loc = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, dtc * decay_end, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # [b,nc,nh]
+
+    # --- inter-chunk recurrence ---
+    def step(S_prev, inputs):
+        S_l, cd = inputs  # [b,nh,dh,N], [b,nh]
+        S_new = S_prev * cd[:, :, None, None] + S_l
+        return S_new, S_prev
+
+    S0 = (
+        jnp.zeros((b, nh, dh, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    S_final, S_prevs = jax.lax.scan(
+        step, S0, (S_loc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)  # [b,nc,nh,dh,N]
+
+    # --- inter-chunk contribution ---
+    decay_in = jnp.exp(cs)  # decay from chunk start to position l
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, S_prevs, decay_in)
+
+    y = (y_intra + y_inter).reshape(b, T, nh, dh)[:, :s]
+    return y.astype(x.dtype), S_final
+
+
+def mamba_block(p, x, cfg, *, cache=None, constrain=lambda a, k: a):
+    """One Mamba2 block. cache: {"conv": [b,W-1,di+2N], "ssm": [b,nh,dh,N]}."""
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    di, N, nh, dh = s_cfg.d_inner(d), s_cfg.d_state, s_cfg.n_heads(d), s_cfg.head_dim
+    xin = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    proj = xin @ p["in_proj"]
+    z, xi, B, C, dt = _split_proj(cfg, proj)
+    xBC = jnp.concatenate([xi, B, C], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xi, B, C = jnp.split(xBC, [di, di + N], axis=-1)
+    xi = constrain(xi, "ssm_inner")
+
+    A = -jnp.exp(p["A_log"])  # [nh]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [b,s,nh]
+    xh = xi.reshape(*xi.shape[:2], nh, dh)
+
+    if cache is None or x.shape[1] > 1:
+        init_state = cache["ssm"] if cache is not None else None
+        y, S_final = ssd_chunked(xh, dt, A, B, C, s_cfg.chunk, init_state)
+    else:
+        # recurrent decode: h = h * exp(dt A) + dt * x ⊗ B ; y = C · h
+        h = cache["ssm"].astype(jnp.float32)  # [b,nh,dh,N]
+        dt1 = dt[:, 0]  # [b,nh]
+        dA = jnp.exp(dt1 * A[None, :])  # [b,nh]
+        xb = (dt1[..., None] * xh[:, 0].astype(jnp.float32))[..., None] * B[:, 0, None, None, :]
+        h = h * dA[..., None, None] + xb
+        y = jnp.einsum("bhpn,bn->bhp", h, C[:, 0].astype(jnp.float32))[:, None]
+        S_final = h
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*y.shape[:2], di).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": S_final}
+    return constrain(x + out, "hidden"), new_cache
+
+
+def init_mamba_cache(cfg, batch_size: int, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, N, nh, dh = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim
+    return {
+        "conv": jnp.zeros((batch_size, s.conv_width - 1, di + 2 * N), dtype),
+        "ssm": jnp.zeros((batch_size, nh, dh, N), jnp.float32),
+    }

@@ -1,0 +1,170 @@
+"""Unified model API: family dispatch + input specs for every shape cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, never allocated) — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import encdec, hybrid, ssm_lm, transformer
+from repro.models.layers import split_params
+
+FRONTEND_DIM = 1024  # stub patch/frame embedding width
+
+
+# ---------------------------------------------------------------------------
+# init / loss / prefill / decode dispatch
+# ---------------------------------------------------------------------------
+def init_params(cfg: ArchConfig, key) -> Any:
+    """Returns a tree of Param(value, logical_axes)."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return transformer.init_dense(cfg, key)
+    if fam == "ssm":
+        return ssm_lm.init_ssm_lm(cfg, key)
+    if fam == "hybrid":
+        return hybrid.init_hybrid(cfg, key)
+    if fam == "audio":
+        return encdec.init_encdec(cfg, key)
+    raise ValueError(fam)
+
+
+def abstract_params(cfg: ArchConfig):
+    """(value ShapeDtypeStructs, logical specs) without allocating anything."""
+    tree = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    return split_params(tree)
+
+
+def materialize_params(cfg: ArchConfig, key):
+    values, specs = split_params(init_params(cfg, key))
+    return values, specs
+
+
+def loss_fn(cfg: ArchConfig, params, batch, constrain=lambda a, k: a, remat="none",
+            loss_chunk: int = 0):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return transformer.dense_loss(cfg, params, batch, constrain, remat, loss_chunk)
+    if fam == "ssm":
+        return ssm_lm.ssm_loss(cfg, params, batch, constrain, remat, loss_chunk)
+    if fam == "hybrid":
+        return hybrid.hybrid_loss(cfg, params, batch, constrain, remat, loss_chunk)
+    if fam == "audio":
+        return encdec.encdec_loss(cfg, params, batch, constrain, remat, loss_chunk)
+    raise ValueError(fam)
+
+
+def prefill_fn(cfg: ArchConfig, params, batch, cache, constrain=lambda a, k: a):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return transformer.dense_prefill(cfg, params, batch, cache, constrain)
+    if fam == "ssm":
+        return ssm_lm.ssm_prefill(cfg, params, batch, cache, constrain)
+    if fam == "hybrid":
+        return hybrid.hybrid_prefill(cfg, params, batch, cache, constrain)
+    if fam == "audio":
+        return encdec.encdec_prefill(cfg, params, batch, cache, constrain)
+    raise ValueError(fam)
+
+
+def decode_fn(cfg: ArchConfig, params, batch, cache, constrain=lambda a, k: a):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return transformer.dense_decode(cfg, params, batch, cache, constrain)
+    if fam == "ssm":
+        return ssm_lm.ssm_decode(cfg, params, batch, cache, constrain)
+    if fam == "hybrid":
+        return hybrid.hybrid_decode(cfg, params, batch, cache, constrain)
+    if fam == "audio":
+        return encdec.encdec_decode(cfg, params, batch, cache, constrain)
+    raise ValueError(fam)
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return transformer.init_dense_cache(cfg, batch_size, max_len, dt)
+    if fam == "ssm":
+        return ssm_lm.init_ssm_cache(cfg, batch_size, dt)
+    if fam == "hybrid":
+        return hybrid.init_hybrid_cache(cfg, batch_size, max_len, dt)
+    if fam == "audio":
+        return encdec.init_encdec_cache(cfg, batch_size, max_len, dt)
+    raise ValueError(fam)
+
+
+def abstract_cache(cfg: ArchConfig, batch_size: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch_size, max_len))
+
+
+# ---------------------------------------------------------------------------
+# input specs per shape cell
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cell_supported(cfg: ArchConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    if cell.name == "long_500k" and not cfg.sub_quadratic():
+        return False, "full attention is quadratic at 524k ctx (see DESIGN.md §4)"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train   -> {"batch": {...}}
+    prefill -> {"batch": {...}, "cache": {...}}
+    decode  -> {"batch": {"tokens": (B,1)}, "cache": {...}}
+    """
+    B, S = cell.global_batch, cell.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    fam = cfg.family
+
+    if cell.kind == "train":
+        if fam == "vlm":
+            F = cfg.frontend_len
+            text = S - F
+            batch = {
+                "tokens": _sds((B, text), i32),
+                "targets": _sds((B, text), i32),
+                "frontend": _sds((B, F, FRONTEND_DIM), f32),
+            }
+        elif fam == "audio":
+            batch = {
+                "tokens": _sds((B, S), i32),
+                "targets": _sds((B, S), i32),
+                "frontend": _sds((B, cfg.frontend_len, FRONTEND_DIM), f32),
+            }
+        else:
+            batch = {"tokens": _sds((B, S), i32), "targets": _sds((B, S), i32)}
+        return {"batch": batch}
+
+    if cell.kind == "prefill":
+        cache = abstract_cache(cfg, B, S)
+        if fam == "vlm":
+            F = cfg.frontend_len
+            batch = {
+                "tokens": _sds((B, S - F), i32),
+                "frontend": _sds((B, F, FRONTEND_DIM), f32),
+            }
+        elif fam == "audio":
+            batch = {
+                "tokens": _sds((B, S), i32),
+                "frontend": _sds((B, cfg.frontend_len, FRONTEND_DIM), f32),
+            }
+        else:
+            batch = {"tokens": _sds((B, S), i32)}
+        return {"batch": batch, "cache": cache}
+
+    if cell.kind == "decode":
+        cache = abstract_cache(cfg, B, S)
+        return {"batch": {"tokens": _sds((B, 1), i32)}, "cache": cache}
+
+    raise ValueError(cell.kind)

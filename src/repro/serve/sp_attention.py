@@ -1,0 +1,89 @@
+"""Sequence-parallel decode attention via shard_map.
+
+KV caches for long contexts are sharded on the *sequence* dim over the
+``model`` axis (GQA head counts rarely divide a 16-way TP axis). The naive
+GSPMD lowering all-gathers the whole cache every layer; this explicit
+shard_map version keeps KV local and combines per-shard softmax statistics
+with two tiny collectives (flash-decoding style):
+
+    m_g   = pmax(m_local)                  [b, kh, g]
+    l_g   = psum(l_local * exp(m_l - m_g))
+    acc_g = psum(acc_local * exp(m_l - m_g))
+
+It also performs the new-token cache insert locally on the owning shard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def make_sp_decode(mesh: Mesh, plan, *, axis: str = "model"):
+    """Returns sp_decode(q, k_new, v_new, kc, vc, slot, kv_len) -> (o, kc, vc).
+
+    q:[b,1,h,d] k_new/v_new:[b,1,kh,d] kc/vc:[b,S,kh,d] slot/kv_len:[b].
+    """
+    if axis not in mesh.shape:
+        return None
+    n_shards = mesh.shape[axis]
+
+    def inner(q, k_new, v_new, kc, vc, slot, kv_len):
+        b, _, h, d = q.shape
+        S_l = kc.shape[1]
+        kh = kc.shape[2]
+        g = h // kh
+        i = jax.lax.axis_index(axis)
+        start = i * S_l
+
+        # ---- local cache insert on the owning shard ----
+        local_slot = slot - start
+        in_range = (local_slot >= 0) & (local_slot < S_l)
+        idx = jnp.clip(local_slot, 0, S_l - 1)
+        bidx = jnp.arange(b)
+        upd_k = jnp.where(in_range[:, None, None], k_new[:, 0], kc[bidx, idx])
+        upd_v = jnp.where(in_range[:, None, None], v_new[:, 0], vc[bidx, idx])
+        kc = kc.at[bidx, idx].set(upd_k)
+        vc = vc.at[bidx, idx].set(upd_v)
+
+        # ---- local partial attention ----
+        qg = q.reshape(b, kh, g, d)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, kc, preferred_element_type=jnp.float32)
+        s = s / np.sqrt(d)
+        valid = (start + jnp.arange(S_l))[None, :] < kv_len[:, None]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_l = s.max(-1)
+        l_partial = jnp.exp(s - m_l[..., None])
+        acc_l = jnp.einsum("bkgs,bskd->bkgd", l_partial.astype(vc.dtype), vc,
+                           preferred_element_type=jnp.float32)
+        l_l = l_partial.sum(-1)
+
+        # ---- cross-shard softmax-stat combine (tiny collectives) ----
+        m_g = jax.lax.pmax(m_l, axis)
+        corr = jnp.exp(m_l - m_g)
+        l_g = jax.lax.psum(l_l * corr, axis)
+        acc_g = jax.lax.psum(acc_l * corr[..., None], axis)
+        l_g = jnp.where(l_g == 0.0, 1.0, l_g)
+        o = (acc_g / l_g[..., None]).reshape(b, 1, h, d).astype(q.dtype)
+        return o, kc, vc
+
+    def sp_decode(q, k_new, v_new, kc, vc, slot, kv_len):
+        b = q.shape[0]
+        bspec = plan.resolve(mesh, (b,), ("batch",))
+        batch_ax = bspec[0] if len(bspec) else None
+        q_spec = P(batch_ax, None, None, None)
+        kv_new_spec = P(batch_ax, None, None, None)
+        cache_spec = P(batch_ax, axis, None, None)
+        vec_spec = P(batch_ax)
+        f = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(q_spec, kv_new_spec, kv_new_spec, cache_spec, cache_spec,
+                      vec_spec, vec_spec),
+            out_specs=(q_spec, cache_spec, cache_spec),
+        )
+        return f(q, k_new, v_new, kc, vc, slot, kv_len)
+
+    return sp_decode

@@ -1,0 +1,66 @@
+"""Serving steps: prefill and single-token decode, jit-able with plan
+shardings. ``decode_attn="sp_shardmap"`` swaps the GSPMD decode attention for
+the explicit sequence-parallel shard_map kernel (flash-decoding style)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.serve.sp_attention import make_sp_decode
+
+
+class ServeCtx:
+    """Callable constrain hook that also carries the sp-decode kernel."""
+
+    def __init__(self, constrain_fn, sp_decode=None):
+        self._fn = constrain_fn
+        self.attn_impl = getattr(constrain_fn, "attn_impl", "chunked")
+        if sp_decode is not None:
+            self.sp_decode = sp_decode
+
+    def __call__(self, x, kind):
+        return self._fn(x, kind)
+
+
+def make_ctx(cfg, plan, mesh: Optional[Mesh], *, decode: bool = False) -> ServeCtx:
+    constrain = plan.make_constrain(mesh)
+    sp = None
+    if decode and mesh is not None and plan.decode_attn == "sp_shardmap":
+        sp = make_sp_decode(mesh, plan)
+    return ServeCtx(constrain, sp)
+
+
+def make_prefill_step(cfg, plan, mesh: Optional[Mesh] = None):
+    ctx = make_ctx(cfg, plan, mesh, decode=False)
+
+    def prefill_step(params, batch, cache):
+        return M.prefill_fn(cfg, params, batch, cache, ctx)
+
+    return prefill_step
+
+
+def make_decode_step(cfg, plan, mesh: Optional[Mesh] = None):
+    ctx = make_ctx(cfg, plan, mesh, decode=True)
+
+    def decode_step(params, batch, cache):
+        logits, new_cache = M.decode_fn(cfg, params, batch, cache, ctx)
+        return logits, new_cache
+
+    return decode_step
+
+
+def serve_shardings(cfg, plan, mesh: Mesh, specs_inputs):
+    """NamedShardings for (params, batch, cache) of a serve step."""
+    values, logical = M.abstract_params(cfg)
+    pshard = plan.param_shardings(mesh, values, logical)
+    bspec = plan.batch_specs(mesh, specs_inputs["batch"])
+    bshard = jax.tree.map(lambda s: NamedSharding(mesh, s), bspec)
+    cshard = None
+    if "cache" in specs_inputs:
+        cspec = plan.cache_specs(mesh, specs_inputs["cache"])
+        cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspec)
+    return pshard, bshard, cshard

@@ -1,0 +1,94 @@
+"""Pipeline parallelism via shard_map + collective_permute (GPipe schedule).
+
+Stages are carved from a mesh axis (on the multi-pod mesh the natural choice
+is the ``pod`` axis: activations cross pods once per stage boundary — the
+cheapest possible inter-pod traffic pattern, vs per-layer collectives).
+
+Layout: layer-stacked params [L, ...] are reshaped to [S, L/S, ...] and
+sharded on the stage axis, so each stage's device group holds only its
+layers. Microbatches stream through the classic GPipe schedule:
+
+    T = n_micro + S - 1 ticks; at tick t, stage s processes microbatch
+    (t - s); activations hop stage->stage+1 via ppermute.
+
+Forward pass (serving pipelines / pipelined prefill). Training composes it
+with grad accumulation outside; bwd-through-ppermute works under jax AD but
+the interleaved 1F1B schedule is future work (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(
+    layer_fn: Callable,  # (layer_params, x [mb, ...]) -> x
+    stacked_params,  # pytree, leaves [L, ...]
+    x_mb: jax.Array,  # [n_micro, mb, ...] microbatched inputs
+    mesh: Mesh,
+    *,
+    stage_axis: str = "stage",
+):
+    """Returns y [n_micro, mb, ...] = sequential-layer application, executed
+    as an S-stage pipeline over ``stage_axis``."""
+    S = mesh.shape[stage_axis]
+    n_micro = x_mb.shape[0]
+    L = jax.tree.leaves(stacked_params)[0].shape[0]
+    assert L % S == 0, (L, S)
+
+    # [L, ...] -> [S, L/S, ...]; shard dim 0 on the stage axis
+    grouped = jax.tree.map(
+        lambda a: a.reshape(S, L // S, *a.shape[1:]), stacked_params)
+
+    def stage_body(params_local, x_mb_local):
+        # params_local: [1, L/S, ...] (this stage's layers); x_mb_local: full
+        # microbatch stream, replicated along the stage axis
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        sid = jax.lax.axis_index(stage_axis)
+        T = n_micro + S - 1
+
+        def run_layers(x):
+            def body(c, lp):
+                return layer_fn(lp, c), None
+
+            y, _ = jax.lax.scan(body, x, params_local)
+            return y
+
+        def tick(t, carry):
+            buf, out = carry  # buf: [mb, ...] activation entering this stage
+            mb_idx = t - sid  # which microbatch this stage works on
+            active = (mb_idx >= 0) & (mb_idx < n_micro)
+            # stage 0 ingests a fresh microbatch each tick
+            fresh = jax.lax.dynamic_index_in_dim(
+                x_mb_local, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            x_in = jnp.where(sid == 0, fresh, buf)
+            y = run_layers(x_in)
+            y = jnp.where(active, y, buf)
+            # last stage records its finished microbatch
+            out = jax.lax.dynamic_update_index_in_dim(
+                out, jnp.where((sid == S - 1) & active, y, jax.lax.dynamic_index_in_dim(out, jnp.clip(mb_idx, 0, n_micro - 1), 0, keepdims=False)),
+                jnp.clip(mb_idx, 0, n_micro - 1), 0)
+            # hop: stage s sends y to stage s+1
+            nxt = jax.lax.ppermute(
+                y, stage_axis, [(i, i + 1) for i in range(S - 1)])
+            return (nxt, out)
+
+        out0 = jnp.zeros_like(x_mb_local)
+        buf0 = jnp.zeros_like(x_mb_local[0])
+        _, out = jax.lax.fori_loop(0, T, tick, (buf0, out0))
+        # only the last stage holds real outputs; masked psum broadcasts them
+        out = jax.lax.psum(
+            jnp.where(sid == S - 1, out, jnp.zeros_like(out)), stage_axis)
+        return out
+
+    pspec = jax.tree.map(lambda _: P(stage_axis), grouped)
+    f = jax.shard_map(
+        stage_body, mesh=mesh,
+        in_specs=(pspec, P()), out_specs=P(),
+        check_vma=False,
+    )
+    return f(grouped, x_mb)

@@ -1,0 +1,213 @@
+"""Execution-plan → sharding resolution.
+
+A :class:`ShardingPlan` is the TPU analogue of a SECDA accelerator
+configuration: it maps *logical* axes (embed/heads/ffn/experts/…) to mesh
+axes, and carries the memory-policy knobs (remat, microbatches, ZeRO). The
+DSE Explorer mutates plans; this module resolves them into per-tensor
+``PartitionSpec`` s with device-aware divisibility fallbacks (non-divisible
+dims are replicated and recorded — the paper's "device-aware parameter
+ranges" constraint).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# logical dims of each activation "kind" passed to constrain(x, kind)
+ACT_KINDS: Dict[str, Tuple[Optional[str], ...]] = {
+    # residual carry: "seq" may be mesh-sharded (Megatron-style SP); compute
+    # tensors shard heads/ffn/vocab instead and keep seq local ("seq_attn").
+    "hidden": ("batch", "seq", "embed"),
+    "heads": ("batch", "seq_attn", "heads", "head_dim"),
+    "kv": ("batch", "seq_attn", "kv_heads", "head_dim"),
+    "ffn": ("batch", "seq_attn", "ffn"),
+    "logits": ("batch", "seq_attn", "vocab"),
+    "experts_in": ("moe_groups", "experts", "capacity", "embed"),
+    "expert_hidden": ("moe_groups", "experts", "capacity", "expert_ffn"),
+    "ssm_inner": ("batch", "seq_attn", "ssm_inner"),
+}
+
+# logical dims of cache tensors, keyed by cache leaf path suffix
+CACHE_KINDS: Dict[str, Tuple[Optional[str], ...]] = {
+    "k": ("layers", "batch", "seq_kv", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "seq_kv", "kv_heads", "head_dim"),
+    "ck": ("layers", "batch", "seq_kv", "kv_heads", "head_dim"),
+    "cv": ("layers", "batch", "seq_kv", "kv_heads", "head_dim"),
+    "len": ("batch",),
+    "conv": ("layers", "batch", "conv", "ssm_inner"),
+    "ssm": ("layers", "batch", "ssm_heads", "head_dim", "ssm_state"),
+}
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    """One point in the execution-plan design space."""
+
+    name: str = "baseline"
+    # logical axis -> mesh axis (str), tuple of mesh axes, or None (replicate)
+    rules: Mapping[str, Any] = field(default_factory=dict)
+    remat: str = "full"  # none | dots | full
+    microbatches: int = 1
+    zero1: bool = True  # shard optimizer state over the data axis
+    master_weights: bool = False  # keep f32 master params in the opt state
+    grad_compress: str = "none"  # none | int8 | topk
+    decode_attn: str = "gspmd"  # gspmd | sp_shardmap (seq-sharded flash decode)
+    loss_chunk: int = 0  # CE loss sequence chunking (0 = full logits)
+    attn_impl: str = "chunked"  # chunked | tri (causal-skip triangular scan)
+    opt_int8: bool = False  # blockwise int8 Adam moments (8-bit Adam)
+    # logical axes allowed to shard unevenly (GSPMD pads, e.g. 56 heads / 16)
+    force_uneven: Tuple[str, ...] = ()
+    # Pallas kernel tiling (the paper's "compute unit dimensions")
+    kernel_blocks: Mapping[str, int] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def mesh_axes(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        r = self.rules.get(logical)
+        if r is None:
+            return ()
+        return (r,) if isinstance(r, str) else tuple(r)
+
+    def resolve(self, mesh: Mesh, shape: Sequence[int],
+                logical_dims: Sequence[Optional[str]]) -> P:
+        """PartitionSpec for one tensor, replicating non-divisible dims."""
+        assert len(shape) == len(logical_dims), (shape, logical_dims)
+        used: set = set()
+        parts = []
+        for dim, logical in zip(shape, logical_dims):
+            axes = self.mesh_axes(logical)
+            axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            ok = dim % size == 0 or logical in self.force_uneven
+            if axes and ok and dim > 0:
+                used.update(axes)
+                parts.append(axes[0] if len(axes) == 1 else axes)
+            else:
+                parts.append(None)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    # ------------------------------------------------------------------
+    def param_specs(self, mesh: Mesh, values, logical_specs):
+        """PartitionSpecs for a param tree given its logical-axes tree."""
+        return jax.tree.map(
+            lambda v, ax: self.resolve(mesh, v.shape, ax), values, logical_specs
+        )
+
+    def param_shardings(self, mesh: Mesh, values, logical_specs):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), self.param_specs(mesh, values, logical_specs)
+        )
+
+    # ------------------------------------------------------------------
+    def make_constrain(self, mesh: Optional[Mesh]):
+        """The constrain(x, kind) hook passed into models. Besides sharding
+        constraints it carries plan attributes the model layers dispatch on
+        (``attn_impl``)."""
+        if mesh is None:
+            fn = lambda x, kind: x  # noqa: E731
+        else:
+            def fn(x, kind):
+                dims = ACT_KINDS.get(kind)
+                if dims is None or x.ndim != len(dims):
+                    return x
+                spec = self.resolve(mesh, x.shape, dims)
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+        return PlanCtx(fn, attn_impl=self.attn_impl)
+
+    # ------------------------------------------------------------------
+    def batch_specs(self, mesh: Mesh, batch_tree):
+        """Shardings for a data batch: leading dim = batch."""
+
+        def one(leaf):
+            dims = ("batch",) + (None,) * (len(leaf.shape) - 1)
+            return self.resolve(mesh, leaf.shape, dims)
+
+        return jax.tree.map(one, batch_tree)
+
+    def cache_specs(self, mesh: Mesh, cache_tree):
+        """Shardings for a KV/SSM cache tree (path-aware)."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+        specs = []
+        for path, leaf in flat:
+            key = None
+            for p in reversed(path):
+                if hasattr(p, "key"):
+                    key = p.key
+                    break
+            dims = CACHE_KINDS.get(key)
+            if dims is None or len(dims) != len(leaf.shape):
+                # attn caches inside hybrid have no leading layer dim variants
+                if key in ("k", "v", "ck", "cv") and len(leaf.shape) == 5:
+                    dims = CACHE_KINDS[key]
+                elif key in ("conv", "ssm") and len(leaf.shape) == len(CACHE_KINDS[key]):
+                    dims = CACHE_KINDS[key]
+                else:
+                    dims = (None,) * len(leaf.shape)
+            specs.append(self.resolve(mesh, leaf.shape, dims))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["rules"] = dict(self.rules)
+        d["kernel_blocks"] = dict(self.kernel_blocks)
+        return d
+
+
+class PlanCtx:
+    """Callable constrain hook carrying plan attributes for model dispatch."""
+
+    def __init__(self, fn, attn_impl: str = "chunked"):
+        self._fn = fn
+        self.attn_impl = attn_impl
+
+    def __call__(self, x, kind):
+        return self._fn(x, kind)
+
+
+# ---------------------------------------------------------------------------
+# Baseline plan factory — the "expert initial design" that seeds the DSE loop
+# ---------------------------------------------------------------------------
+def baseline_rules(multi_pod: bool = False) -> Dict[str, Any]:
+    data = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": data,
+        "moe_groups": data,
+        "seq": "model",  # sequence-sharded residuals (SP) — memory floor
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ffn": "model",
+        "expert_ffn": None,
+        "vocab": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "seq_kv": "model",  # decode KV caches: shard the sequence dim
+        "lora_rank": None,
+        "layers": None,
+        "conv": None,
+        "capacity": None,
+    }
+
+
+def baseline_plan(cfg, cell, *, multi_pod: bool = False) -> ShardingPlan:
+    """Paper-faithful starting point: an expert-written initial configuration
+    (SECDA-DSE §3.1 — 'an accelerator design generated initially by an expert
+    designer') from which the DSE explores."""
+    rules = baseline_rules(multi_pod)
+    remat = "full" if cell.kind == "train" else "none"
+    return ShardingPlan(name=f"baseline/{cfg.name}/{cell.name}", rules=rules, remat=remat)

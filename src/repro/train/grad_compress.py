@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback.
+
+Two codecs, both applied to gradients before the optimizer:
+
+* ``int8`` — per-tensor symmetric quantization (32x -> 8x bytes on the wire
+  for the cross-pod gradient reduction; 4x vs f32).
+* ``topk`` — keep the top 1% magnitudes per tensor (sparse all-reduce model).
+
+Error feedback (Seide et al.; 1-bit SGD lineage) accumulates the residual
+``g - decompress(compress(g))`` into the next step so compression bias does
+not accumulate. In a single-process simulation the codec round-trip is the
+numerics-faithful stand-in for the compressed collective; the byte saving is
+credited in the roofline evaluator's collective term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TOPK_FRAC = 0.01
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_roundtrip(g):
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(g):
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    if n <= 1 << 22:
+        k = max(int(n * TOPK_FRAC), 1)
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    else:
+        # huge tensors: lax.top_k would overflow int32 indices (and sort
+        # billions of elements) — estimate the magnitude threshold from a
+        # strided sample instead
+        stride = n // (1 << 20)
+        sample = jnp.abs(flat[:: stride])
+        k = max(int(sample.shape[0] * TOPK_FRAC), 1)
+        thresh = jax.lax.top_k(sample, k)[0][-1]
+    kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+    return kept.reshape(g.shape)
+
+
+def compress_decompress(kind: str, grads, ef):
+    """Returns (decompressed grads, new error-feedback state)."""
+    codec = {"int8": _int8_roundtrip, "topk": _topk_roundtrip}[kind]
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        dec = codec(g32)
+        return dec, g32 - dec
+
+    out = jax.tree.map(one, grads, ef)
+    dec = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return dec, new_ef
+
+
+def wire_bytes_factor(kind: str) -> float:
+    """Bytes-on-the-wire multiplier vs uncompressed bf16 gradients."""
+    return {"none": 1.0, "int8": 0.5, "topk": 2.5 * TOPK_FRAC}[kind]

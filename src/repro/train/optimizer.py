@@ -1,0 +1,180 @@
+"""AdamW with optional ZeRO-1 sharded optimizer state and f32 master weights.
+
+The optimizer state is a plain pytree so it checkpoints/reshards with the
+same machinery as params. ZeRO-1: m/v (and master weights) are additionally
+sharded over the data axis on the largest dim that is divisible and not
+already sharded — gradients then reduce-scatter instead of all-reduce under
+GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+# ---------------------------------------------------------------------------
+# int8 moment quantization (8-bit Adam, Dettmers-style)
+# Scales are per-row (last dim): no reshape/flatten, so the quantized moments
+# keep exactly the param's sharding (a flattened blockwise layout would force
+# XLA to replicate 2-D-sharded tensors during (de)quantization).
+# ---------------------------------------------------------------------------
+def _q8(x):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q, scale, shape):
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def lr_schedule(c: AdamWConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - c.warmup_steps) / jnp.maximum(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return c.lr * warm * (c.min_lr_frac + (1 - c.min_lr_frac) * cos)
+
+
+def init_opt_state(params, *, master_weights: bool = False, int8_moments: bool = False):
+    if int8_moments:
+        def zq(p):
+            q, s = _q8(jnp.zeros(p.shape, jnp.float32))
+            return {"q": q, "s": s}
+
+        st = {"m": jax.tree.map(zq, params), "v": jax.tree.map(zq, params),
+              "step": jnp.zeros((), jnp.int32)}
+    else:
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        st = {
+            "m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    if master_weights:
+        st["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return st
+
+
+def _is_q(x):
+    return isinstance(x, dict) and set(x) == {"q", "s"}
+
+
+def uses_int8(opt_state) -> bool:
+    leaves = jax.tree.leaves(opt_state["m"], is_leaf=_is_q)
+    return bool(leaves) and _is_q(leaves[0])
+
+
+def adamw_update(c: AdamWConfig, params, grads, opt_state):
+    """Returns (new_params, new_opt_state, metrics). All math in f32; moments
+    optionally stored blockwise-int8 (8-bit Adam)."""
+    int8 = uses_int8(opt_state)
+    step = opt_state["step"] + 1
+    lr = lr_schedule(c, step)
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)) + 1e-16)
+    scale = jnp.minimum(1.0, c.grad_clip / gnorm)
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    b1c = 1 - c.b1 ** step.astype(jnp.float32)
+    b2c = 1 - c.b2 ** step.astype(jnp.float32)
+    base = opt_state.get("master", params)
+
+    def upd(p, g, m, v):
+        if int8:
+            m = _dq8(m["q"], m["s"], p.shape)
+            v = _dq8(v["q"], v["s"], p.shape)
+        m = c.b1 * m + (1 - c.b1) * g
+        v = c.b2 * v + (1 - c.b2) * g * g
+        mh, vh = m / b1c, v / b2c
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * p32)
+        if int8:
+            mq, msc = _q8(m)
+            vq, vsc = _q8(v)
+            m, v = {"q": mq, "s": msc}, {"q": vq, "s": vsc}
+        return p32, m, v
+
+    is_leaf = lambda t: isinstance(t, tuple) or _is_q(t)
+    out = jax.tree.map(upd, base, g32, opt_state["m"], opt_state["v"],
+                       is_leaf=lambda x: _is_q(x))
+    p32s = jax.tree.map(lambda t: t[0], out, is_leaf=is_leaf)
+    ms = jax.tree.map(lambda t: t[1], out, is_leaf=is_leaf)
+    vs = jax.tree.map(lambda t: t[2], out, is_leaf=is_leaf)
+
+    new_params = jax.tree.map(lambda p32, p: p32.astype(p.dtype), p32s, params)
+    new_state = {"m": ms, "v": vs, "step": step}
+    if "master" in opt_state:
+        new_state["master"] = p32s
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of the optimizer state
+# ---------------------------------------------------------------------------
+def opt_specs(mesh: Mesh, param_spec_tree, params, *, zero1: bool, master: bool,
+              int8: bool = False):
+    """PartitionSpecs for the optimizer state given resolved param specs."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh.shape[a]
+
+    if int8:
+        # per-row-quantized moments keep the param's sharding; the scale
+        # tensor drops the (size-1) last dim's sharding
+        def qspec(spec: P, p) -> dict:
+            parts = list(spec) + [None] * (p.ndim - len(spec))
+            sparts = list(parts)
+            if sparts:
+                sparts[-1] = None
+            while sparts and sparts[-1] is None:
+                sparts.pop()
+            return {"q": P(*parts), "s": P(*sparts)}
+
+        mv = jax.tree.map(qspec, param_spec_tree, params)
+        st = {"m": mv, "v": mv, "step": P()}
+        if master:
+            st["master"] = param_spec_tree
+        return st
+
+    def zero_shard(spec: P, leaf) -> P:
+        if not zero1 or not data_axes:
+            return spec
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        used = {a for part in parts if part is not None
+                for a in ((part,) if isinstance(part, str) else part)}
+        if any(a in used for a in data_axes):
+            return spec  # param sharding already consumes the data axis (FSDP)
+        # shard the largest unsharded, divisible dim over the data axes
+        cand = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in cand:
+            if parts[i] is None and leaf.shape[i] % dsize == 0 and leaf.shape[i] >= dsize:
+                parts[i] = data_axes[0] if len(data_axes) == 1 else data_axes
+                break
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    mv = jax.tree.map(zero_shard, param_spec_tree, params)
+    st = {"m": mv, "v": mv, "step": P()}
+    if master:
+        st["master"] = mv
+    return st

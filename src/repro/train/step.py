@@ -1,0 +1,147 @@
+"""Train step factory: loss + grad (+ microbatch accumulation) + AdamW.
+
+The step is a pure function (state, batch) -> (state, metrics), jit-able with
+in/out shardings resolved from the plan — the artifact the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.train import optimizer as opt_mod
+from repro.train.grad_compress import compress_decompress, init_error_feedback
+
+
+def init_train_state(cfg, key, plan, opt_cfg: Optional[opt_mod.AdamWConfig] = None):
+    params, specs = M.materialize_params(cfg, key)
+    state = {
+        "params": params,
+        "opt": opt_mod.init_opt_state(params, master_weights=plan.master_weights,
+                                      int8_moments=getattr(plan, "opt_int8", False)),
+    }
+    if plan.grad_compress != "none":
+        state["ef"] = init_error_feedback(params)
+    return state, specs
+
+
+def abstract_train_state(cfg, plan):
+    """ShapeDtypeStructs for the train state (dry-run path, no allocation)."""
+    values, specs = M.abstract_params(cfg)
+    state = {
+        "params": values,
+        "opt": jax.eval_shape(
+            lambda: opt_mod.init_opt_state(
+                values, master_weights=plan.master_weights,
+                int8_moments=getattr(plan, "opt_int8", False))
+        ),
+    }
+    if plan.grad_compress != "none":
+        state["ef"] = jax.eval_shape(lambda: init_error_feedback(values))
+    return state, specs
+
+
+def state_specs(mesh: Mesh, plan, state, logical_specs):
+    pspecs = plan.param_specs(mesh, state["params"], logical_specs)
+    ospecs = opt_mod.opt_specs(
+        mesh, pspecs, state["params"], zero1=plan.zero1,
+        master=plan.master_weights, int8=getattr(plan, "opt_int8", False)
+    )
+    out = {"params": pspecs, "opt": ospecs}
+    if "ef" in state:
+        out["ef"] = opt_mod.opt_specs(mesh, pspecs, state["params"],
+                                      zero1=plan.zero1, master=False)["m"]
+    return out
+
+
+def make_train_step(cfg, plan, mesh: Optional[Mesh] = None,
+                    opt_cfg: Optional[opt_mod.AdamWConfig] = None):
+    opt_cfg = opt_cfg or opt_mod.AdamWConfig()
+    constrain = plan.make_constrain(mesh)
+
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch, constrain, plan.remat,
+                         getattr(plan, "loss_chunk", 0))
+
+    # ZeRO-2-style sharding for the microbatch grad accumulator: without it a
+    # k-microbatch step holds a full f32 grad copy (params/TP x 4B) per device
+    acc_shard = None
+    if mesh is not None and plan.zero1 and plan.microbatches > 1:
+        values, logical = M.abstract_params(cfg)
+        pspecs = plan.param_specs(mesh, values, logical)
+        aspecs = opt_mod.opt_specs(mesh, pspecs, values, zero1=True, master=False)["m"]
+        acc_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), aspecs)
+
+    # batch-shard degree: microbatch slicing must be strided so every device
+    # keeps b_local/k rows per microbatch (a contiguous reshape would leave
+    # 1/k of the devices active and force XLA to rematerialize/replicate)
+    bdeg = 1
+    if mesh is not None:
+        for ax in plan.mesh_axes("batch"):
+            bdeg *= mesh.shape.get(ax, 1)
+
+    def train_step(state, batch) -> Tuple[Any, Dict[str, Any]]:
+        params = state["params"]
+        k = plan.microbatches
+        if k > 1:
+            def to_mb(a):
+                B = a.shape[0]
+                D = bdeg if (bdeg > 1 and B % bdeg == 0 and (B // bdeg) % k == 0) else 1
+                if D > 1:
+                    x = a.reshape(D, k, B // (D * k), *a.shape[1:])
+                    return x.transpose(1, 0, *range(2, x.ndim)).reshape(
+                        k, B // k, *a.shape[1:])
+                return a.reshape(k, B // k, *a.shape[1:])
+
+            mb = jax.tree.map(to_mb, batch)
+
+            def acc(gsum, b1):
+                (l, mets), g = jax.value_and_grad(loss_of, has_aux=True)(params, b1)
+                gsum = jax.tree.map(lambda s, x: s + x.astype(jnp.float32), gsum, g)
+                if acc_shard is not None:  # reduce-scatter per microbatch (ZeRO-2)
+                    gsum = jax.tree.map(jax.lax.with_sharding_constraint, gsum, acc_shard)
+                return gsum, l
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if acc_shard is not None:
+                g0 = jax.tree.map(jax.lax.with_sharding_constraint, g0, acc_shard)
+            gsum, losses = jax.lax.scan(acc, g0, mb)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            loss = losses.mean()
+            mets = {"loss": loss}
+        else:
+            (loss, mets), grads = jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+
+        new_ef = None
+        if plan.grad_compress != "none":
+            grads, new_ef = compress_decompress(plan.grad_compress, grads, state["ef"])
+
+        new_params, new_opt, omets = opt_mod.adamw_update(opt_cfg, params, grads, state["opt"])
+        new_state = {"params": new_params, "opt": new_opt}
+        if new_ef is not None:
+            new_state["ef"] = new_ef
+        metrics = {"loss": loss, **omets}
+        if "tokens" in mets:
+            metrics["tokens"] = mets["tokens"]
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg, plan, mesh, opt_cfg=None, *, abstract: bool = True, donate: bool = True):
+    """Returns (jitted step, abstract state, (state_shardings, batch_shardings))."""
+    step = make_train_step(cfg, plan, mesh, opt_cfg)
+    state, logical = abstract_train_state(cfg, plan)
+    sspecs = state_specs(mesh, plan, state, logical)
+    s_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs)
+    metric_shard = NamedSharding(mesh, P())
+    jstep = jax.jit(
+        step,
+        in_shardings=(s_shard, None),
+        out_shardings=(s_shard, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return jstep, state, (s_shard, None)

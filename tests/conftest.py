@@ -1,0 +1,32 @@
+"""Shared test fixtures. IMPORTANT: no XLA_FLAGS here — smoke tests and
+benches must see the real single CPU device; multi-device tests spawn
+subprocesses (see helpers.run_subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet with a forced host device count; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"subprocess failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr[-3000:]}"
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def single_mesh():
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((1, 1), ("data", "model"))

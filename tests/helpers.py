@@ -1,0 +1,1 @@
+from conftest import run_subprocess, REPO, SRC  # re-export

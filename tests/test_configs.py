@@ -1,0 +1,71 @@
+"""Assigned architecture configs: exact values + parameter-count sanity."""
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, reduced
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+    "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+    "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+    "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+    "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+    "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+}
+
+# published sizes (billions), tolerance band
+PARAM_BANDS = {
+    "llama3-8b": (7.5, 8.5), "qwen3-8b": (7.5, 8.8), "qwen3-0.6b": (0.5, 0.8),
+    "stablelm-3b": (2.5, 3.1), "zamba2-2.7b": (2.2, 3.0),
+    "qwen3-moe-235b-a22b": (225, 245), "mixtral-8x7b": (44, 49),
+    "mamba2-780m": (0.7, 0.85), "llava-next-34b": (30, 37),
+    "seamless-m4t-medium": (0.8, 1.3),
+}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_exact_config(name):
+    c = get_config(name)
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == EXPECTED[name]
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_counts(name):
+    c = get_config(name)
+    lo, hi = PARAM_BANDS[name]
+    n = c.n_params() / 1e9
+    assert lo <= n <= hi, f"{name}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_active_params_moe():
+    c = get_config("qwen3-moe-235b-a22b")
+    assert 20 <= c.n_active_params() / 1e9 <= 24  # "a22b"
+    m = get_config("mixtral-8x7b")
+    assert 11 <= m.n_active_params() / 1e9 <= 14
+
+
+def test_shapes_grid():
+    names = [s.name for s in SHAPES]
+    assert names == ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    assert SHAPES[0].seq_len == 4096 and SHAPES[0].global_batch == 256
+    assert SHAPES[3].seq_len == 524288 and SHAPES[3].global_batch == 1
+
+
+def test_long_ctx_applicability():
+    assert not get_config("llama3-8b").sub_quadratic()
+    assert get_config("mixtral-8x7b").sub_quadratic()  # SWA
+    assert get_config("mamba2-780m").sub_quadratic()
+    assert get_config("zamba2-2.7b").sub_quadratic()
+    assert not get_config("llava-next-34b").sub_quadratic()
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_is_small(name):
+    r = reduced(get_config(name))
+    assert r.n_params() < 5e6
+    assert r.family == get_config(name).family

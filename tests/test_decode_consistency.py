@@ -1,0 +1,60 @@
+"""Prefill+decode must reproduce full-forward logits (per family)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model as M
+
+FAMS = ["llama3-8b", "mamba2-780m", "zamba2-2.7b", "seamless-m4t-medium",
+        "llava-next-34b", "mixtral-8x7b"]
+
+
+def _nodrop(cfg):
+    if cfg.moe is None:
+        return cfg
+    cf = float(cfg.moe.n_experts) / cfg.moe.top_k  # capacity >= group: no drops
+    return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cf))
+
+
+@pytest.mark.parametrize("name", FAMS)
+def test_decode_matches_full_forward(name):
+    cfg = _nodrop(reduced(get_config(name)))
+    params, _ = M.materialize_params(cfg, jax.random.key(0))
+    b, s = 2, 24
+    toks = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.family in ("vlm", "audio"):
+        batch["frontend"] = 0.1 * jnp.ones((b, cfg.frontend_len, 1024), jnp.float32)
+
+    cache = M.init_cache(cfg, b, 64)
+    lp, cache = M.prefill_fn(cfg, params, batch, cache)
+    nxt = jnp.argmax(lp[:, -1], -1)[:, None].astype(jnp.int32)
+    ld, _ = M.decode_fn(cfg, params, {"tokens": nxt}, cache)
+
+    ref_cache = M.init_cache(cfg, b, 64)
+    batch2 = dict(batch, tokens=jnp.concatenate([toks, nxt], 1))
+    lr, _ = M.prefill_fn(cfg, params, batch2, ref_cache)
+
+    err = float(jnp.max(jnp.abs(ld[:, -1] - lr[:, -1])))
+    scale = float(jnp.max(jnp.abs(lr))) + 1e-9
+    assert err / scale < 2e-2, f"{name}: rel err {err/scale:.3e}"
+
+
+def test_swa_ring_buffer_eviction():
+    """Tokens beyond the SWA window must be evicted from the rolling cache."""
+    cfg = reduced(get_config("mixtral-8x7b"))  # window=16
+    cfg = _nodrop(cfg)
+    params, _ = M.materialize_params(cfg, jax.random.key(0))
+    b, s = 1, 24  # prompt longer than the window
+    toks = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab)
+    cache = M.init_cache(cfg, b, 64)
+    assert cache["k"].shape[2] == cfg.swa_window  # ring buffer is window-sized
+    lp, cache = M.prefill_fn(cfg, params, {"tokens": toks}, cache)
+    nxt = jnp.argmax(lp[:, -1], -1)[:, None].astype(jnp.int32)
+    ld, cache = M.decode_fn(cfg, params, {"tokens": nxt}, cache)
+    assert np.isfinite(np.asarray(ld, np.float32)).all()
+    assert int(cache["len"][0]) == s + 1

@@ -1,0 +1,136 @@
+"""Dry-run driver + full SECDA-DSE loop (subprocess, reduced device counts)."""
+import json
+
+import pytest
+
+from conftest import run_subprocess
+from repro.configs import ARCH_NAMES, SHAPES, SHAPE_BY_NAME, get_config
+from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# input_specs: every (arch x shape) cell is well-defined without allocation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("shape", [s.name for s in SHAPES])
+def test_input_specs_all_cells(arch, shape):
+    cfg = get_config(arch)
+    cell = SHAPE_BY_NAME[shape]
+    ok, why = M.cell_supported(cfg, cell)
+    if not ok:
+        assert shape == "long_500k" and not cfg.sub_quadratic()
+        return
+    specs = M.input_specs(cfg, cell)
+    assert "batch" in specs
+    toks = specs["batch"]["tokens"]
+    if cell.kind == "decode":
+        assert toks.shape == (cell.global_batch, 1)
+        assert "cache" in specs
+    elif cfg.family == "vlm":
+        F = cfg.frontend_len
+        assert toks.shape[1] == cell.seq_len - F
+        assert specs["batch"]["frontend"].shape == (cell.global_batch, F, 1024)
+    else:
+        assert toks.shape == (cell.global_batch, cell.seq_len)
+    # nothing in the tree is a concrete array
+    import jax
+
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_long500k_runs_only_for_subquadratic():
+    runs = [a for a in ARCH_NAMES
+            if M.cell_supported(get_config(a), SHAPE_BY_NAME["long_500k"])[0]]
+    assert sorted(runs) == ["mamba2-780m", "mixtral-8x7b", "zamba2-2.7b"]
+
+
+# ---------------------------------------------------------------------------
+# dry-run driver on a reduced mesh (subprocess: forces 8 host devices)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_dryrun_cell_small_mesh(tmp_path):
+    out = run_subprocess(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        from repro.launch.dryrun import run_cell
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rec = run_cell("qwen3-0.6b", "decode_32k", mesh, "small2x4",
+                       artifact_dir=__import__("pathlib").Path(r"{tmp_path}"))
+        assert rec["status"] == "ok", rec
+        r = rec["roofline"]
+        assert r["compute_s"] > 0 and r["memory_s"] > 0
+        assert rec["hlo"]["flops"] > 0
+        assert rec["model_flops"] == 2.0 * rec["model_flops_per_dev"] * 8 / 2
+        print("DRYRUN_OK", r["dominant"])
+    """, n_devices=8, timeout=900)
+    assert "DRYRUN_OK" in out
+    rec = json.loads((tmp_path / "qwen3-0.6b__decode_32k__small2x4.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["memory"]["per_device_bytes"] > 0
+
+
+def test_production_mesh_artifacts_complete():
+    """The committed artifact set must cover all 40 cells x both meshes."""
+    from pathlib import Path
+
+    adir = Path("artifacts/dryrun")
+    if not adir.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    for mesh in ("pod16x16", "multipod2x16x16"):
+        for arch in ARCH_NAMES:
+            for cell in SHAPES:
+                f = adir / f"{arch}__{cell.name}__{mesh}.json"
+                assert f.exists(), f"missing dry-run cell {f.name}"
+                rec = json.loads(f.read_text())
+                assert rec["status"] in ("ok", "skipped"), \
+                    f"{f.name}: {rec.get('error', rec['status'])}"
+                supported, _ = M.cell_supported(get_config(arch), cell)
+                assert (rec["status"] == "ok") == supported
+
+
+# ---------------------------------------------------------------------------
+# the full SECDA-DSE loop on a 1x1 mesh with a monkeypatched tiny config
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_dse_loop_end_to_end(tmp_path):
+    out = run_subprocess(f"""
+        import dataclasses, json
+        import repro.configs as C
+        from repro.configs import get_config as real_get, reduced
+        from repro.configs.base import ShapeCell
+
+        tiny_cell = ShapeCell("train_4k", "train", 64, 8)  # reuse the cell name
+        C.SHAPE_BY_NAME["train_4k"] = tiny_cell
+        tiny = reduced(real_get("qwen3-0.6b"))
+        import repro.launch.dryrun as D
+        import repro.core.evaluator as E
+        for mod in (D, E):
+            mod.get_config = lambda name: tiny
+            mod.SHAPE_BY_NAME = C.SHAPE_BY_NAME
+
+        from repro.core.cost_db import CostDB, featurize
+        from repro.core.cost_model import CostModel
+        from repro.core.evaluator import Evaluator
+        from repro.core.llm_client import MockLLM
+        from repro.core.llm_stack import LLMStack
+        from repro.core.loop import DSELoop
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((1, 1), ("data", "model"))
+        db = CostDB(r"{tmp_path}/db.jsonl")
+        loop = DSELoop(
+            evaluator=Evaluator(mesh, "tiny1x1", artifact_dir=r"{tmp_path}"),
+            db=db, llm_stack=LLMStack(client=MockLLM(), db=db),
+            cost_model=CostModel.create(in_dim=featurize({{}}, {{}}).shape[0]))
+        report = loop.run("qwen3-0.6b", "train_4k", iterations=2,
+                          eval_budget=2, verbose=False)
+        assert report.baseline is not None and report.baseline.status == "ok"
+        assert report.best is not None
+        assert len(db.all()) >= 5  # baseline + 2 iters x 2 evals
+        assert report.improvement() <= 1.001
+        print("LOOP_OK", report.improvement())
+    """, n_devices=1, timeout=900)
+    assert "LOOP_OK" in out

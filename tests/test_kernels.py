@@ -1,0 +1,128 @@
+"""Pallas kernels vs pure-jnp oracles: fixed cases + hypothesis sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.resource_model import (flash_attention_resources,
+                                          rmsnorm_resources, ssd_scan_resources,
+                                          vecmul_resources)
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# vecmul — the paper's §4 accelerator
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(L=st.integers(1, 5000), block=st.sampled_from([128, 256, 1024]),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_vecmul_sweep(L, block, dtype):
+    dt = jnp.dtype(dtype)
+    x = jax.random.normal(jax.random.key(L), (L,)).astype(dt)
+    y = jax.random.normal(jax.random.key(L + 1), (L,)).astype(dt)
+    got = ops.vecmul(x, y, block=block)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref.vecmul_ref(x, y), np.float32),
+                               rtol=1e-6)
+
+
+def test_vecmul_resources_feasible():
+    r = vecmul_resources(4096, 1024, itemsize=4)
+    assert r.feasible and r.vmem_util < 0.01
+    r2 = vecmul_resources(1 << 26, 1 << 25, itemsize=4)  # absurd block
+    assert not r2.feasible  # rejected as a negative datapoint
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 300), d=st.sampled_from([64, 128, 256]),
+       block=st.sampled_from([32, 128]))
+def test_rmsnorm_sweep(rows, d, block):
+    x = jax.random.normal(jax.random.key(rows), (rows, d), jnp.float32)
+    w = jax.random.normal(jax.random.key(d), (d,), jnp.float32)
+    got = ops.rmsnorm(x, w, block_rows=block)
+    np.testing.assert_allclose(got, ref.rmsnorm_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(sq=st.sampled_from([64, 128, 256]), h=st.sampled_from([4, 8]),
+       kh=st.sampled_from([2, 4]), d=st.sampled_from([32, 64]),
+       causal=st.booleans(), bq=st.sampled_from([32, 64]))
+def test_flash_attention_sweep(sq, h, kh, d, causal, bq):
+    if h % kh:
+        kh = h
+    b = 2
+    q = 0.3 * jax.random.normal(jax.random.key(1), (b, sq, h, d))
+    k = 0.3 * jax.random.normal(jax.random.key(2), (b, sq, kh, d))
+    v = 0.3 * jax.random.normal(jax.random.key(3), (b, sq, kh, d))
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bq)
+    kr = jnp.repeat(k, h // kh, axis=2)
+    vr = jnp.repeat(v, h // kh, axis=2)
+    want = ref.attention_ref(q, kr, vr, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    b, s, h, d = 1, 128, 4, 64
+    q = (0.3 * jax.random.normal(jax.random.key(1), (b, s, h, d))).astype(jnp.bfloat16)
+    k = (0.3 * jax.random.normal(jax.random.key(2), (b, s, h, d))).astype(jnp.bfloat16)
+    v = (0.3 * jax.random.normal(jax.random.key(3), (b, s, h, d))).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_resources_vmem_gate():
+    ok = flash_attention_resources(1, 4096, 4096, 32, 8, 128, 512, 512)
+    assert ok.feasible
+    too_big = flash_attention_resources(1, 32768, 524288, 32, 8, 128, 32768, 32768)
+    assert not too_big.feasible
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([32, 64, 128]), chunk=st.sampled_from([16, 32]),
+       nh=st.sampled_from([2, 4]), N=st.sampled_from([16, 32]))
+def test_ssd_sweep(s, chunk, nh, N):
+    b, dh = 2, 16
+    x = 0.5 * jax.random.normal(jax.random.key(1), (b, s, nh, dh))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(2), (b, s, nh)))
+    A = -jnp.exp(0.3 * jax.random.normal(jax.random.key(3), (nh,)))
+    B = 0.3 * jax.random.normal(jax.random.key(4), (b, s, N))
+    C = 0.3 * jax.random.normal(jax.random.key(5), (b, s, N))
+    got_y, got_S = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    want_y, want_S = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(got_y, want_y, rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(got_S, want_S, rtol=3e-3, atol=3e-3)
+
+
+def test_ssd_initial_state_threading():
+    """Chunked scan with a carried initial state == one long exact scan."""
+    b, s, nh, dh, N = 1, 64, 2, 16, 16
+    x = 0.5 * jax.random.normal(jax.random.key(1), (b, s, nh, dh))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(2), (b, s, nh)))
+    A = -jnp.exp(0.3 * jax.random.normal(jax.random.key(3), (nh,)))
+    B = 0.3 * jax.random.normal(jax.random.key(4), (b, s, N))
+    C = 0.3 * jax.random.normal(jax.random.key(5), (b, s, N))
+    _, S_half = ops.ssd_scan(x[:, :32], dt[:, :32], A, B[:, :32], C[:, :32], chunk=16)
+    y2, S_full = ops.ssd_scan(x[:, 32:], dt[:, 32:], A, B[:, 32:], C[:, 32:],
+                              chunk=16, initial_state=S_half)
+    want_y, want_S = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(y2, want_y[:, 32:], rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(S_full, want_S, rtol=3e-3, atol=3e-3)
+
+
+def test_ssd_resources():
+    r = ssd_scan_resources(8, 4096, 48, 64, 128, 256)
+    assert r.feasible

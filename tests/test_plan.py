@@ -1,0 +1,88 @@
+"""Sharding-plan resolution: property tests for the system invariants."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.launch.mesh import make_mesh
+from repro.models import model as M
+from repro.sharding.plan import ACT_KINDS, ShardingPlan, baseline_plan, baseline_rules
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+LOGICALS = [None, "batch", "seq", "embed", "heads", "kv_heads", "head_dim",
+            "ffn", "vocab", "experts", "ssm_inner", "layers"]
+
+
+class FakeMesh:
+    """Shape-only stand-in so hypothesis can sweep mesh sizes w/o devices."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    dims=st.lists(st.tuples(st.integers(1, 512), st.sampled_from(LOGICALS)),
+                  min_size=1, max_size=5),
+    data=st.sampled_from([1, 2, 4, 16]),
+    model=st.sampled_from([1, 2, 4, 16]),
+)
+def test_resolve_invariants(dims, data, model):
+    """Every resolved PartitionSpec (a) only uses axes in the mesh, (b) never
+    reuses a mesh axis, (c) only shards divisible dims."""
+    mesh = FakeMesh({"data": data, "model": model})
+    plan = ShardingPlan(rules=baseline_rules())
+    shape = tuple(d for d, _ in dims)
+    logical = tuple(l for _, l in dims)
+    spec = plan.resolve(mesh, shape, logical)
+    used = []
+    for dim, part in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if part is None:
+            continue
+        axes = (part,) if isinstance(part, str) else part
+        size = 1
+        for a in axes:
+            assert a in mesh.shape
+            assert a not in used, "mesh axis used twice in one tensor"
+            used.append(a)
+            size *= mesh.shape[a]
+        assert dim % size == 0, "sharded a non-divisible dim"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_specs_all_archs(arch):
+    """Every param of every arch resolves to a valid spec on the prod mesh."""
+    cfg = get_config(arch)
+    values, logical = M.abstract_params(cfg)
+    plan = baseline_plan(cfg, SHAPES[0])
+    mesh = FakeMesh({"data": 16, "model": 16})
+    specs = plan.param_specs(mesh, values, logical)
+    for v, s in zip(jax.tree.leaves(values), jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        parts = tuple(s) + (None,) * (v.ndim - len(tuple(s)))
+        for dim, part in zip(v.shape, parts):
+            if part is None:
+                continue
+            axes = (part,) if isinstance(part, str) else part
+            size = int(np.prod([{"data": 16, "model": 16}[a] for a in axes]))
+            assert dim % size == 0, (arch, v.shape, s)
+
+
+def test_act_kinds_cover_constrain_calls():
+    for kind, dims in ACT_KINDS.items():
+        assert all(d is None or isinstance(d, str) for d in dims)
+
+
+def test_cache_specs_paths(mesh22):
+    cfg = get_config("llama3-8b")
+    cache = M.abstract_cache(cfg, 8, 128)
+    plan = baseline_plan(cfg, SHAPES[2])
+    specs = plan.cache_specs(FakeMesh({"data": 2, "model": 2}), cache)
+    assert tuple(specs["k"]) [:3] == (None, "data", "model")  # layers,b,seq_kv
+    assert tuple(specs["len"]) == ("data",)
