@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+"""DSE evaluation throughput: serial vs process-pool vs cached.
+
+Evaluates the same candidate set three ways and reports evaluations/minute:
+
+    serial    in-process compiles, cold cache
+    parallel  evaluate_batch over a spawn process pool, cold cache
+    cached    same batch again, warm content-addressed dry-run cache
+
+Default uses a reduced (CPU-smoke) config so the benchmark finishes in
+seconds; pass --full for the real registry config on the 2x4 mesh.
+
+    PYTHONPATH=src python benchmarks/bench_dse_throughput.py --n 6 --workers 2
+
+The XLA_FLAGS lines above MUST stay the first statements: jax locks the
+device count at first init.
+"""
+import argparse
+import json
+import random
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+
+def _tiny_patch(arch: str):
+    """Swap the registry config/cell for reduced CPU-smoke versions."""
+    import repro.configs as C
+    from repro.configs import reduced
+    from repro.configs.base import ShapeCell
+    import repro.core.evaluator as E
+    import repro.launch.dryrun as D
+
+    tiny = reduced(C.get_config(arch))
+    C.SHAPE_BY_NAME["train_4k"] = ShapeCell("train_4k", "train", 64, 8)
+    for mod in (D, E):
+        mod.get_config = lambda name: tiny
+        mod.SHAPE_BY_NAME = C.SHAPE_BY_NAME
+
+
+def _candidates(arch: str, shape: str, mesh, n: int, seed: int = 0):
+    from repro.configs import SHAPE_BY_NAME
+    from repro.core.design_space import PlanTemplate, baseline_point
+    from repro.core.evaluator import get_config
+
+    cfg, cell = get_config(arch), SHAPE_BY_NAME[shape]
+    template = PlanTemplate(cfg, cell, dict(mesh.shape))
+    seen, points = set(), []
+    for p in ([baseline_point(cell, template)]
+              + list(template.neighbors(baseline_point(cell, template)))
+              + template.random_points(random.Random(seed), n)):
+        if p.key() not in seen and template.validate(p)[0]:
+            seen.add(p.key())
+            points.append(p)
+        if len(points) >= n:
+            break
+    return points
+
+
+def _mode(label: str, evaluator, arch, shape, points) -> dict:
+    t0 = time.time()
+    dps = evaluator.evaluate_batch(arch, shape, points)
+    wall = time.time() - t0
+    ok = sum(d.status == "ok" for d in dps)
+    return {"mode": label, "n": len(points), "ok": ok,
+            "wall_s": round(wall, 2),
+            "evals_per_min": round(60.0 * len(points) / max(wall, 1e-9), 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--n", type=int, default=6, help="candidate designs")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--full", action="store_true",
+                    help="real registry config instead of the reduced smoke config")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    args = ap.parse_args()
+
+    if not args.full:
+        _tiny_patch(args.arch)
+
+    from repro.core.eval_cache import DryRunCache
+    from repro.core.evaluator import Evaluator
+    from repro.launch.mesh import make_mesh
+
+    mesh, mesh_name = make_mesh((2, 4), ("data", "model")), "small2x4"
+    points = _candidates(args.arch, args.shape, mesh, args.n)
+    print(f"benchmarking {len(points)} designs of {args.arch}/{args.shape} "
+          f"on {mesh_name} (workers={args.workers})", flush=True)
+
+    tmp = Path(tempfile.mkdtemp(prefix="bench_dse_"))
+    rows = []
+    try:
+        serial = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / "a"),
+                           cache=DryRunCache(tmp / "cache_serial"), max_workers=1)
+        rows.append(_mode("serial", serial, args.arch, args.shape, points))
+        print(rows[-1], flush=True)
+
+        shared = DryRunCache(tmp / "cache_pool")
+        par = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / "b"),
+                        cache=shared, max_workers=args.workers)
+        rows.append(_mode("parallel", par, args.arch, args.shape, points))
+        print(rows[-1], flush=True)
+
+        rows.append(_mode("cached", par, args.arch, args.shape, points))
+        rows[-1]["cache"] = shared.stats()
+        print(rows[-1], flush=True)
+
+        s, p, c = (r["wall_s"] for r in rows)
+        print(f"speedup vs serial: parallel x{s / max(p, 0.01):.2f}, "
+              f"cached x{s / max(c, 0.01):.0f}")
+        print("note: pool workers each pay a fresh jax import; the pool wins "
+              "when per-design compile time dominates that startup cost")
+        if args.out:
+            Path(args.out).write_text(json.dumps(rows, indent=1))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Version-compat shims over the installed jax.
+
+The repo targets current jax APIs (``jax.shard_map``, ``AxisType`` meshes)
+but must run on older releases where ``shard_map`` still lives under
+``jax.experimental`` and the replication check is spelled ``check_rep``.
+Mesh-construction compat lives in ``repro.launch.mesh``.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:  # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

@@ -102,10 +102,17 @@ class CostDB:
         self._cache: Optional[List[DataPoint]] = None
 
     def append(self, dp: DataPoint) -> None:
+        self.append_many([dp])
+
+    def append_many(self, dps: Sequence[DataPoint]) -> None:
+        """One write syscall per batch — campaign cells append whole
+        evaluation batches at a time."""
+        if not dps:
+            return
         with self.path.open("a") as f:
-            f.write(dp.to_json() + "\n")
+            f.write("".join(dp.to_json() + "\n" for dp in dps))
         if self._cache is not None:
-            self._cache.append(dp)
+            self._cache.extend(dps)
 
     def all(self) -> List[DataPoint]:
         if self._cache is None:
@@ -117,7 +124,8 @@ class CostDB:
         return list(self._cache)
 
     def query(self, arch: Optional[str] = None, shape: Optional[str] = None,
-              status: Optional[str] = None) -> List[DataPoint]:
+              status: Optional[str] = None,
+              mesh: Optional[str] = None) -> List[DataPoint]:
         out = self.all()
         if arch:
             out = [d for d in out if d.arch == arch]
@@ -125,16 +133,28 @@ class CostDB:
             out = [d for d in out if d.shape == shape]
         if status:
             out = [d for d in out if d.status == status]
+        if mesh:
+            out = [d for d in out if d.mesh == mesh]
         return out
 
-    def best(self, arch: str, shape: str, key: str = "bound_s") -> Optional[DataPoint]:
-        ok = [d for d in self.query(arch, shape, "ok")
+    def best(self, arch: str, shape: str, key: str = "bound_s",
+             mesh: Optional[str] = None) -> Optional[DataPoint]:
+        ok = [d for d in self.query(arch, shape, "ok", mesh)
               if d.metrics.get(key) is not None and d.metrics.get("fits_hbm", True)]
         return min(ok, key=lambda d: d.metrics[key]) if ok else None
 
     def seen(self, arch: str, shape: str, point_key: str) -> bool:
         return any(d.point.get("__key__") == point_key
                    for d in self.query(arch, shape))
+
+    def cells(self) -> List[Tuple[str, str, str]]:
+        """Distinct (arch, shape, mesh) cells present — the campaign engine's
+        view of which workloads already hold data."""
+        return sorted({(d.arch, d.shape, d.mesh) for d in self.all()})
+
+    def count(self, arch: Optional[str] = None, shape: Optional[str] = None,
+              status: Optional[str] = None, mesh: Optional[str] = None) -> int:
+        return len(self.query(arch, shape, status, mesh))
 
     def training_set(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(features, targets [log10 bound_s], feasible mask) for the surrogate."""

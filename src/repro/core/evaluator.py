@@ -5,17 +5,65 @@ extraction, see ``launch/dryrun.py``); the 'hardware resource limits' gate is
 the per-device HBM budget + kernel VMEM resource model. Designs that fail
 compile, violate budgets, or fall outside the template are returned as
 *negative* data points — never silently dropped.
+
+Evaluation throughput is the DSE bottleneck, so this module amortizes it two
+ways:
+
+* ``evaluate_batch`` fans candidate compiles out across a spawn-based
+  ``concurrent.futures`` process pool — each worker sets its own
+  ``XLA_FLAGS`` (forced host device count = mesh size) *before* jax is
+  imported, so the parent's device configuration never constrains workers;
+* an optional content-addressed :class:`~repro.core.eval_cache.DryRunCache`
+  keyed by ``(arch, shape, mesh_name, point.key())`` serves repeated designs
+  without recompiling — across iterations, restarts, and campaigns.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import Any, Dict, Optional
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import SHAPE_BY_NAME, get_config
 from repro.core.cost_db import DataPoint, workload_features
 from repro.core.design_space import PlanPoint, PlanTemplate, point_to_plan
 from repro.core.device import TPU_V5E, DeviceModel
+from repro.core.eval_cache import DryRunCache
+
+
+# ---------------------------------------------------------------------------
+# pool worker (top-level for pickling; runs in a fresh spawn interpreter)
+# ---------------------------------------------------------------------------
+def _pool_worker_init(n_devices: int) -> None:
+    """Runs before any task: pin the forced host device count so the worker's
+    first jax import (inside ``launch/dryrun``) sees a mesh-sized fleet."""
+    flags = f"--xla_force_host_platform_device_count={n_devices}"
+    os.environ["DRYRUN_XLA_FLAGS"] = flags
+    os.environ["XLA_FLAGS"] = flags
+
+
+_WORKER_MESH: Optional[Tuple[Tuple, Any]] = None  # (mesh key, jax Mesh)
+
+
+def _pool_worker_evaluate(payload: Dict[str, Any]) -> Dict[str, Any]:
+    """Dry-run one candidate in a worker process; returns the run_cell rec."""
+    global _WORKER_MESH
+    from repro.launch import dryrun  # first jax import happens here
+    from repro.launch.mesh import make_mesh
+
+    mesh_axes = tuple(tuple(kv) for kv in payload["mesh_axes"])  # ((axis, size), ...)
+    if _WORKER_MESH is None or _WORKER_MESH[0] != mesh_axes:
+        _WORKER_MESH = (mesh_axes, make_mesh([s for _, s in mesh_axes],
+                                             [a for a, _ in mesh_axes]))
+    mesh = _WORKER_MESH[1]
+    cfg, cell = payload["cfg"], payload["cell"]
+    point = PlanPoint(dims=payload["dims"])
+    plan = point_to_plan(cfg, cell, point, multi_pod="pod" in dict(mesh_axes))
+    from pathlib import Path
+
+    return dryrun.run_cell(payload["arch"], payload["shape"], mesh,
+                           payload["run_name"], plan=plan,
+                           artifact_dir=Path(payload["artifact_dir"]),
+                           cfg=cfg, cell=cell)
 
 
 @dataclass
@@ -24,33 +72,123 @@ class Evaluator:
     mesh_name: str
     device: DeviceModel = TPU_V5E
     artifact_dir: Optional[str] = None
+    cache: Optional[DryRunCache] = None
+    max_workers: int = 1  # >1 enables the process pool in evaluate_batch
+    compile_count: int = 0  # dry-run compile attempts (cache misses; excludes template-skips)
 
+    # ------------------------------------------------------------------
     def evaluate(self, arch: str, shape: str, point: PlanPoint,
                  *, source: str = "explorer", iteration: int = -1) -> DataPoint:
-        from repro.launch import dryrun  # deferred: needs jax initialised
+        return self.evaluate_batch(arch, shape, [point], source=source,
+                                   iteration=iteration, workers=1)[0]
 
+    def evaluate_batch(self, arch: str, shape: str,
+                       points: Sequence[PlanPoint], *,
+                       source: str = "explorer", iteration: int = -1,
+                       workers: Optional[int] = None) -> List[DataPoint]:
+        """Evaluate ``points`` (order-preserving). Template rejections are
+        decided inline, cached designs are served without recompiling, and
+        the remaining dry-run compiles fan out across the process pool."""
         cfg = get_config(arch)
         cell = SHAPE_BY_NAME[shape]
         template = PlanTemplate(cfg, cell, dict(self.mesh.shape), self.device)
-        ok, why = template.validate(point)
-        base = dict(arch=arch, shape=shape, mesh=self.mesh_name,
+        wl = workload_features(cfg, cell)
+
+        results: List[Optional[DataPoint]] = [None] * len(points)
+        pending: List[Tuple[int, PlanPoint]] = []
+        for i, point in enumerate(points):
+            base = self._base(arch, shape, point, source, iteration)
+            ok, why = template.validate(point)
+            if not ok:
+                results[i] = DataPoint(**base, status="rejected", reason=why,
+                                       metrics={"workload": wl})
+                continue
+            rec = (self.cache.get(arch, shape, self.mesh_name, point.key())
+                   if self.cache is not None else None)
+            if rec is not None:
+                results[i] = self._rec_to_datapoint(rec, wl, base)
+                continue
+            pending.append((i, point))
+
+        n_workers = self.max_workers if workers is None else workers
+        n_workers = min(n_workers, len(pending))
+        if pending and n_workers > 1:
+            recs = self._run_pool(arch, shape, cfg, cell, pending, n_workers)
+        else:
+            recs = [self._run_serial(arch, shape, cfg, cell, pt)
+                    for _, pt in pending]
+
+        for (i, point), rec in zip(pending, recs):
+            if rec.get("status") not in ("skipped", "worker-failed"):
+                self.compile_count += 1  # a lower+compile was actually issued
+            # errors are NOT cached: run_cell catches everything, so a
+            # transient crash (OOM, dead worker) must stay retryable — only
+            # deterministic outcomes are worth replaying forever
+            if self.cache is not None and rec.get("status") in ("ok", "skipped"):
+                self.cache.put(arch, shape, self.mesh_name, point.key(), rec)
+            base = self._base(arch, shape, point, source, iteration)
+            results[i] = self._rec_to_datapoint(rec, wl, base)
+        return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    def _base(self, arch: str, shape: str, point: PlanPoint,
+              source: str, iteration: int) -> Dict[str, Any]:
+        return dict(arch=arch, shape=shape, mesh=self.mesh_name,
                     point={**point.to_dict(), "__key__": point.key()},
                     source=source, iteration=iteration)
-        if not ok:
-            return DataPoint(**base, status="rejected", reason=why,
-                             metrics={"workload": workload_features(cfg, cell)})
 
-        plan = point_to_plan(cfg, cell, point, multi_pod="pod" in self.mesh.shape)
+    def _adir(self):
         from pathlib import Path
 
-        adir = Path(self.artifact_dir) if self.artifact_dir else dryrun.ARTIFACT_DIR / "dse"
-        rec = dryrun.run_cell(arch, shape, self.mesh, f"{self.mesh_name}-{point.key()}",
-                              plan=plan, artifact_dir=adir)
-        wl = workload_features(cfg, cell)
+        from repro.launch import dryrun
+
+        # sibling of the roofline artifact dir, NOT inside it — the artifact
+        # completeness check treats artifacts/dryrun as the production set
+        return (Path(self.artifact_dir) if self.artifact_dir
+                else dryrun.ARTIFACT_DIR.parent / "dse")
+
+    def _run_serial(self, arch: str, shape: str, cfg, cell,
+                    point: PlanPoint) -> Dict[str, Any]:
+        from repro.launch import dryrun  # deferred: needs jax initialised
+
+        plan = point_to_plan(cfg, cell, point, multi_pod="pod" in self.mesh.shape)
+        return dryrun.run_cell(arch, shape, self.mesh,
+                               f"{self.mesh_name}-{point.key()}", plan=plan,
+                               artifact_dir=self._adir(), cfg=cfg, cell=cell)
+
+    def _run_pool(self, arch: str, shape: str, cfg, cell,
+                  pending: Sequence[Tuple[int, PlanPoint]],
+                  n_workers: int) -> List[Dict[str, Any]]:
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+
+        adir = str(self._adir())
+        mesh_axes = [(a, int(s)) for a, s in dict(self.mesh.shape).items()]
+        payloads = [dict(arch=arch, shape=shape, cfg=cfg, cell=cell,
+                         dims=dict(pt.dims), mesh_axes=mesh_axes,
+                         run_name=f"{self.mesh_name}-{pt.key()}",
+                         artifact_dir=adir)
+                    for _, pt in pending]
+        recs: List[Dict[str, Any]] = []
+        ctx = mp.get_context("spawn")  # fresh interpreters: XLA_FLAGS still settable
+        with ProcessPoolExecutor(max_workers=n_workers, mp_context=ctx,
+                                 initializer=_pool_worker_init,
+                                 initargs=(int(self.mesh.size),)) as pool:
+            futures = [pool.submit(_pool_worker_evaluate, p) for p in payloads]
+            for fut, payload in zip(futures, payloads):
+                try:
+                    recs.append(fut.result())
+                except Exception as e:  # noqa: BLE001 — a dead worker is a negative datapoint
+                    recs.append({"status": "worker-failed",
+                                 "error": f"{type(e).__name__}: {e}"})
+        return recs
+
+    def _rec_to_datapoint(self, rec: Dict[str, Any], wl: Dict[str, float],
+                          base: Dict[str, Any]) -> DataPoint:
         if rec["status"] == "skipped":
             return DataPoint(**base, status="rejected", reason=rec["reason"],
                              metrics={"workload": wl})
-        if rec["status"] == "error":
+        if rec["status"] in ("error", "worker-failed"):
             return DataPoint(**base, status="error", reason=rec["error"],
                              metrics={"workload": wl})
         r = rec["roofline"]

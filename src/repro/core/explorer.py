@@ -64,10 +64,10 @@ class Explorer:
                 uniq[k] = c
         ranked = self._rank(cfg, cell, list(uniq.values()))
 
-        out: List[DataPoint] = []
-        for cand in ranked[:budget]:
-            dp = self.evaluator.evaluate(arch, shape, cand,
-                                         source="explorer", iteration=iteration)
-            self.db.append(dp)
-            out.append(dp)
+        # the whole ranked budget goes down as ONE batch: cache hits return
+        # instantly and the remaining compiles share the evaluator's pool
+        out = self.evaluator.evaluate_batch(arch, shape, ranked[:budget],
+                                            source="explorer",
+                                            iteration=iteration)
+        self.db.append_many(out)
         return out

@@ -200,7 +200,14 @@ def _operand_names(rhs: str) -> List[str]:
     opm = _OPERANDS.search(rhs)
     if not opm:
         return []
-    return [o.strip().lstrip("%") for o in opm.group(1).split(",") if o.strip()]
+    inner = opm.group(1)
+    # older XLA prints typed operands — "dot(f32[64,64]{1,0} %a, ...)" — where
+    # a naive comma split breaks inside the shape brackets; the %-sigil tokens
+    # are the operand names in that dialect
+    sigils = re.findall(r"%([\w\.\-]+)", inner)
+    if sigils:
+        return sigils
+    return [o.strip().lstrip("%") for o in inner.split(",") if o.strip()]
 
 
 def _comp_cost(lines: List[str], n_devices: int,

@@ -16,6 +16,11 @@ maintained by keeping a small incumbent pool plus random template samples.
 
 The optional human gate (``approve_fn``) mirrors §3.2.2's human-in-the-loop;
 the default auto-approves (the paper's stated end state once the DB grows).
+
+Each iteration's ranked budget is submitted as ONE ``evaluate_batch`` call:
+cache hits return instantly, the rest fan out over the evaluator's process
+pool, and the gate/negative-datapoint semantics apply to the returned batch
+exactly as they did to the old serial loop.
 """
 from __future__ import annotations
 
@@ -121,7 +126,11 @@ class DSELoop:
                 n_rej += res["rejected"]
             log(f"iter {it}: LLM proposed {len(llm_props)} (rejected {n_rej})")
 
-            # --- Explorer: permutations + LLM candidates, cost-model ranked ---
+            # --- Explorer: permutations + LLM candidates, cost-model ranked,
+            # submitted as ONE evaluate_batch (pool + dry-run cache) ---
+            cache = self.evaluator.cache
+            hits0 = cache.hits if cache is not None else 0
+            compiles0 = self.evaluator.compile_count
             new_dps = explorer.explore(
                 arch, shape, [inc_point], budget=eval_budget, iteration=it,
                 extra_candidates=llm_props)
@@ -145,6 +154,8 @@ class DSELoop:
             report.iterations.append({
                 "iteration": it,
                 "evaluated": len(new_dps),
+                "compiled": self.evaluator.compile_count - compiles0,
+                "cache_hits": (cache.hits - hits0) if cache is not None else 0,
                 "best_bound": (_best_of(pool).metrics.get("bound_s")
                                if _best_of(pool) else None),
             })

@@ -1,0 +1,239 @@
+"""Multi-workload DSE campaign engine.
+
+Sweeps an ``arch x shape x mesh`` grid of SECDA-DSE loops with shared
+infrastructure: one cost DB (so the surrogate cost model and RAG retrieval
+learn across workloads), one content-addressed dry-run cache (so designs
+re-proposed in another cell never recompile), and one process pool sizing
+knob. Every cell writes a loop-report JSON; the campaign is *resumable* —
+re-running the same command skips cells whose reports exist and re-serves
+cached dry-runs for partially-explored cells — and finishes with a
+leaderboard JSON ranking the best design found per cell.
+
+Quickstart:
+
+    PYTHONPATH=src python -m repro.launch.campaign \\
+        --archs qwen3-0.6b,stablelm-3b --shapes train_4k,decode_32k \\
+        --mesh small --iterations 2 --budget 3 --workers 2 \\
+        --out artifacts/campaign
+
+    # interrupted? same command again: completed cells are skipped, the
+    # shared dry-run cache makes re-entered cells near-instant
+    PYTHONPATH=src python -m repro.launch.campaign ... (same args)
+
+Outputs under --out:
+    cost_db.jsonl                     shared hardware-datapoint DB
+    dryrun_cache/                     content-addressed compile cache
+    reports/{arch}__{shape}__{mesh}.json   per-cell loop reports
+    leaderboard.json                  cells ranked by best bound_s
+
+Unlike the other launchers this module is import-safe (tests import
+``build_leaderboard``/``run_campaign``): XLA_FLAGS is set inside ``main()``,
+before the first jax-touching import, never at import time.
+"""
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+
+def cell_report_path(out_dir: Path, arch: str, shape: str, mesh_name: str) -> Path:
+    return Path(out_dir) / "reports" / f"{arch}__{shape}__{mesh_name}.json"
+
+
+def _cell_report(report) -> Dict:
+    return {
+        "arch": report.arch, "shape": report.shape,
+        "baseline": report.baseline.__dict__ if report.baseline else None,
+        "best": report.best.__dict__ if report.best else None,
+        "iterations": report.iterations,
+        "improvement": report.improvement(),
+    }
+
+
+def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
+    """Rank completed cells by their best achieved bound (fastest first);
+    cells with no feasible design sink to the bottom with their failure
+    mode preserved."""
+    rows = []
+    for c in cell_rows:
+        best = db.best(c["arch"], c["shape"], mesh=c["mesh"])
+        feasible = best is not None
+        if best is None:
+            # negative datapoints still rank: the fastest *infeasible* design
+            # tells the reader how far off the memory budget this cell is
+            cands = [d for d in db.query(c["arch"], c["shape"], mesh=c["mesh"])
+                     if d.metrics.get("bound_s")]
+            best = (min(cands, key=lambda d: d.metrics["bound_s"])
+                    if cands else None)
+        row = {
+            "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+            "status": c["status"],
+            "feasible": feasible if best is not None else None,
+            "n_points": db.count(c["arch"], c["shape"], mesh=c["mesh"]),
+            "improvement": c.get("improvement"),
+            "bound_s": None, "mfu_at_bound": None, "dominant": None,
+            "per_device_gib": None, "best_point": None,
+        }
+        if best is not None:
+            row.update(
+                bound_s=best.metrics.get("bound_s"),
+                mfu_at_bound=best.metrics.get("mfu_at_bound"),
+                dominant=best.metrics.get("dominant"),
+                per_device_gib=best.metrics.get("per_device_gib"),
+                best_point={k: v for k, v in best.point.items()
+                            if k != "__key__"},
+            )
+        rows.append(row)
+    rows.sort(key=lambda r: (r["bound_s"] is None, r["feasible"] is not True,
+                             r["bound_s"] if r["bound_s"] is not None else 0.0))
+    return rows
+
+
+def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: str,
+                 *, out_dir: Path | str, iterations: int = 2, budget: int = 3,
+                 workers: int = 1, llm_client=None, db=None, resume: bool = True,
+                 verbose: bool = True) -> Dict:
+    """Run (or resume) the full grid; returns the campaign summary dict."""
+    from repro.core.cost_db import CostDB, featurize
+    from repro.core.cost_model import CostModel
+    from repro.core.eval_cache import DryRunCache
+    from repro.core.evaluator import Evaluator
+    from repro.core.llm_client import MockLLM
+    from repro.core.llm_stack import LLMStack
+    from repro.core.loop import DSELoop
+    from repro.models import model as M
+
+    out_dir = Path(out_dir)
+    (out_dir / "reports").mkdir(parents=True, exist_ok=True)
+    db = db or CostDB(out_dir / "cost_db.jsonl")
+    cache = DryRunCache.beside(db.path)
+    evaluator = Evaluator(mesh, mesh_name, cache=cache,
+                          max_workers=max(workers, 1),
+                          artifact_dir=str(out_dir / "dryrun"))
+    stack = LLMStack(client=llm_client or MockLLM(), db=db)
+    cost_model = CostModel.create(in_dim=featurize({}, {}).shape[0])
+    loop = DSELoop(evaluator=evaluator, db=db, llm_stack=stack,
+                   cost_model=cost_model)
+
+    def log(msg):
+        if verbose:
+            print(f"[campaign {mesh_name}] {msg}", flush=True)
+
+    t0 = time.time()
+    cell_rows: List[Dict] = []
+    counts = {"ran": 0, "resumed": 0, "unsupported": 0}
+    for arch in archs:
+        for shape in shapes:
+            rpath = cell_report_path(out_dir, arch, shape, mesh_name)
+            if resume and rpath.exists():
+                prior = json.loads(rpath.read_text())
+                counts["resumed" if prior.get("status") != "unsupported"
+                       else "unsupported"] += 1
+                cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
+                                  "status": "resumed" if prior.get("status") != "unsupported"
+                                  else "unsupported",
+                                  "improvement": prior.get("improvement")})
+                log(f"{arch}/{shape}: resumed (report exists)")
+                continue
+
+            from repro.configs import SHAPE_BY_NAME, get_config
+            supported, why = M.cell_supported(get_config(arch), SHAPE_BY_NAME[shape])
+            if not supported:
+                rpath.write_text(json.dumps(
+                    {"arch": arch, "shape": shape, "status": "unsupported",
+                     "reason": why}, indent=1))
+                counts["unsupported"] += 1
+                cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
+                                  "status": "unsupported", "improvement": None})
+                log(f"{arch}/{shape}: unsupported ({why})")
+                continue
+
+            t_cell = time.time()
+            report = loop.run(arch, shape, iterations=iterations,
+                              eval_budget=budget, verbose=verbose)
+            out = _cell_report(report)
+            out["status"] = "complete"
+            out["wall_s"] = round(time.time() - t_cell, 1)
+            rpath.write_text(json.dumps(out, indent=1, default=str))
+            counts["ran"] += 1
+            cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
+                              "status": "complete",
+                              "improvement": report.improvement()})
+            log(f"{arch}/{shape}: done in {out['wall_s']}s "
+                f"(improvement {report.improvement():.2%}, "
+                f"cache {cache.stats()})")
+
+    leaderboard = build_leaderboard(db, cell_rows)
+    lb_path = out_dir / "leaderboard.json"
+    lb_path.write_text(json.dumps(leaderboard, indent=1, default=str))
+
+    summary = {
+        "mesh": mesh_name, "cells": len(cell_rows), **counts,
+        "wall_s": round(time.time() - t0, 1),
+        "evaluations": db.count(),
+        "compiles": evaluator.compile_count,
+        "cache": cache.stats(),
+        "leaderboard": str(lb_path),
+    }
+    log(f"summary: {summary}")
+    return summary
+
+
+def main():
+    # before any jax-touching import: jax locks the device count at first init
+    os.environ["XLA_FLAGS"] = os.environ.get(
+        "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+    from repro.configs import ARCH_NAMES, SHAPES
+
+    ap = argparse.ArgumentParser(
+        description="parallel, cached, resumable multi-workload DSE campaign")
+    ap.add_argument("--archs", default="qwen3-0.6b,stablelm-3b",
+                    help="comma-separated arch ids, or 'all'")
+    ap.add_argument("--shapes", default="train_4k,decode_32k",
+                    help="comma-separated shape cells, or 'all'")
+    ap.add_argument("--mesh", default="small", choices=["small", "pod", "multipod"])
+    ap.add_argument("--iterations", type=int, default=2)
+    ap.add_argument("--budget", type=int, default=3,
+                    help="evaluations per loop iteration")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="parallel dry-run compile processes")
+    ap.add_argument("--out", default="artifacts/campaign")
+    ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells even if their reports exist")
+    args = ap.parse_args()
+
+    archs = list(ARCH_NAMES) if args.archs == "all" else args.archs.split(",")
+    shapes = ([s.name for s in SHAPES] if args.shapes == "all"
+              else args.shapes.split(","))
+    unknown = [a for a in archs if a not in ARCH_NAMES]
+    unknown += [s for s in shapes if s not in {c.name for c in SHAPES}]
+    if unknown:
+        ap.error(f"unknown arch/shape: {unknown}")
+
+    from repro.launch.mesh import make_mesh, make_production_mesh
+
+    if args.mesh == "pod":
+        mesh, mesh_name = make_production_mesh(), "pod16x16"
+    elif args.mesh == "multipod":
+        mesh, mesh_name = make_production_mesh(multi_pod=True), "multipod2x16x16"
+    else:
+        mesh, mesh_name = make_mesh((2, 4), ("data", "model")), "small2x4"
+
+    llm_client = None
+    if args.llm == "ollama":
+        from repro.core.llm_client import OllamaClient
+
+        llm_client = OllamaClient()
+
+    run_campaign(archs, shapes, mesh, mesh_name, out_dir=args.out,
+                 iterations=args.iterations, budget=args.budget,
+                 workers=args.workers, llm_client=llm_client,
+                 resume=not args.force)
+
+
+if __name__ == "__main__":
+    main()

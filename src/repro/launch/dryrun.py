@@ -35,6 +35,19 @@ from repro.serve import step as serve_step_mod
 
 ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 
+# process-local count of actual lower+compile runs; cache hits in the
+# evaluator never reach run_cell, so tests assert recompiles against this
+N_COMPILES = 0
+
+
+def xla_cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` returns a dict on current jax but a
+    list of per-partition dicts on older releases."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
 
 def model_flops(cfg, cell) -> float:
     """MODEL_FLOPS per step: 6·N·D train, 2·N·D prefill, 2·N·B decode."""
@@ -49,10 +62,16 @@ def model_flops(cfg, cell) -> float:
 # ---------------------------------------------------------------------------
 # per-cell lowering
 # ---------------------------------------------------------------------------
-def build_cell(arch: str, shape_name: str, mesh, plan=None):
-    """Returns (jitted fn, kwargs of ShapeDtypeStructs) for one cell."""
-    cfg = get_config(arch)
-    cell = SHAPE_BY_NAME[shape_name]
+def build_cell(arch: str, shape_name: str, mesh, plan=None, *,
+               cfg=None, cell=None):
+    """Returns (jitted fn, kwargs of ShapeDtypeStructs) for one cell.
+
+    ``cfg``/``cell`` override the registry lookup — pool workers receive the
+    caller's (possibly reduced) config by value instead of re-resolving the
+    name in a fresh process.
+    """
+    cfg = cfg if cfg is not None else get_config(arch)
+    cell = cell if cell is not None else SHAPE_BY_NAME[shape_name]
     ok, why = M.cell_supported(cfg, cell)
     if not ok:
         return None, why
@@ -89,14 +108,16 @@ def build_cell(arch: str, shape_name: str, mesh, plan=None):
 
 
 def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, plan=None,
-             artifact_dir: Path = ARTIFACT_DIR):
+             artifact_dir: Path = ARTIFACT_DIR, *, cfg=None, cell=None):
+    global N_COMPILES
     t0 = time.time()
+    cfg = cfg if cfg is not None else get_config(arch)
+    cell = cell if cell is not None else SHAPE_BY_NAME[shape_name]
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "n_devices": mesh.size, "plan": (plan or
-            baseline_plan(get_config(arch), SHAPE_BY_NAME[shape_name],
-                          multi_pod="pod" in mesh.shape)).name}
+            baseline_plan(cfg, cell, multi_pod="pod" in mesh.shape)).name}
     try:
-        built, skip = build_cell(arch, shape_name, mesh, plan)
+        built, skip = build_cell(arch, shape_name, mesh, plan, cfg=cfg, cell=cell)
         if built is None:
             rec.update(status="skipped", reason=skip)
             artifact_dir.mkdir(parents=True, exist_ok=True)
@@ -104,16 +125,15 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, plan=None,
                 json.dumps(rec, indent=1))
             return rec
         fn, args = built
+        N_COMPILES += 1
         with mesh:
             lowered = fn.lower(*args)
             t_low = time.time()
             compiled = lowered.compile()
             t_comp = time.time()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = xla_cost_dict(compiled)
         hlo = analyze_hlo(compiled.as_text(), mesh.size)
-        cfg = get_config(arch)
-        cell = SHAPE_BY_NAME[shape_name]
         mf = model_flops(cfg, cell)
         terms = roofline_terms(
             flops=hlo["flops"], hbm_bytes=hlo["hbm_bytes"],

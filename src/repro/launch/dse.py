@@ -9,7 +9,11 @@ the device count at first init).
 
 Example:
     PYTHONPATH=src python -m repro.launch.dse --arch llama3-8b --shape train_4k \
-        --iterations 4 --budget 3
+        --iterations 4 --budget 3 --workers 4
+
+Candidate evaluations go through ``Evaluator.evaluate_batch`` (process pool +
+content-addressed dry-run cache next to the cost DB); for arch x shape x mesh
+grid sweeps use ``repro.launch.campaign``.
 """
 import argparse
 import json
@@ -26,6 +30,10 @@ def main():
     ap.add_argument("--budget", type=int, default=3, help="evaluations per iteration")
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "small"])
     ap.add_argument("--db", default="artifacts/dse/cost_db.jsonl")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="parallel dry-run compile processes (1 = in-process)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the content-addressed dry-run cache")
     ap.add_argument("--approve", action="store_true",
                     help="human-in-the-loop: confirm each accepted design")
     ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
@@ -34,6 +42,7 @@ def main():
 
     from repro.core.cost_db import CostDB, featurize
     from repro.core.cost_model import CostModel
+    from repro.core.eval_cache import DryRunCache
     from repro.core.evaluator import Evaluator
     from repro.core.llm_client import MockLLM, OllamaClient
     from repro.core.llm_stack import LLMStack
@@ -60,10 +69,15 @@ def main():
             ans = input(f"accept design bound={dp.metrics.get('bound_s')}s? [Y/n] ")
             return ans.strip().lower() not in ("n", "no")
 
-    loop = DSELoop(evaluator=Evaluator(mesh, mesh_name), db=db,
+    cache = None if args.no_cache else DryRunCache.beside(db.path)
+    evaluator = Evaluator(mesh, mesh_name, cache=cache,
+                          max_workers=max(args.workers, 1))
+    loop = DSELoop(evaluator=evaluator, db=db,
                    llm_stack=stack, cost_model=cost_model, approve_fn=approve)
     report = loop.run(args.arch, args.shape, iterations=args.iterations,
                       eval_budget=args.budget)
+    if cache is not None:
+        print(f"dry-run cache: {cache.stats()}")
 
     if args.report:
         out = {

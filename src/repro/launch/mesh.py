@@ -8,19 +8,26 @@ import; everything else sees the real single CPU device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types (Auto matches the old default)
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n_axes):
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:  # older jax: make_mesh has no axis_types kwarg; Auto is implied
+    def _axis_kwargs(n_axes):
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / reduced dry-runs / elastic re-configuration)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes), **_axis_kwargs(len(axes)))
 
 
 def single_device_mesh():

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 NEG_INF = -1e30
 
 
@@ -78,7 +80,7 @@ def make_sp_decode(mesh: Mesh, plan, *, axis: str = "model"):
         kv_new_spec = P(batch_ax, None, None, None)
         cache_spec = P(batch_ax, axis, None, None)
         vec_spec = P(batch_ax)
-        f = jax.shard_map(
+        f = shard_map(
             inner, mesh=mesh,
             in_specs=(q_spec, kv_new_spec, kv_new_spec, cache_spec, cache_spec,
                       vec_spec, vec_spec),

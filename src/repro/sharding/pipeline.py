@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_forward(
     layer_fn: Callable,  # (layer_params, x [mb, ...]) -> x
@@ -86,7 +88,7 @@ def pipeline_forward(
         return out
 
     pspec = jax.tree.map(lambda _: P(stage_axis), grouped)
-    f = jax.shard_map(
+    f = shard_map(
         stage_body, mesh=mesh,
         in_specs=(pspec, P()), out_specs=P(),
         check_vma=False,

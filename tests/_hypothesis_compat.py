@@ -1,0 +1,80 @@
+"""Optional-`hypothesis` shim for the property-style tests.
+
+When `hypothesis` is installed the real library is re-exported unchanged.
+When it is not, a minimal deterministic stand-in runs each `@given` test
+against `max_examples` seeded pseudo-random draws (seeded from the test's
+qualified name, so every run sweeps the same examples). Only the strategy
+surface this suite uses is implemented: integers, sampled_from, booleans,
+lists, tuples.
+
+Usage in test modules (replaces `from hypothesis import ...`):
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ModuleNotFoundError:
+    import inspect
+    import random
+    import zlib
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            pool = list(elements)
+            return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            # hide the drawn params from pytest so it doesn't look for fixtures
+            orig = inspect.signature(fn)
+            wrapper.__signature__ = inspect.Signature(
+                [p for name, p in orig.parameters.items() if name not in strats])
+            return wrapper
+
+        return deco

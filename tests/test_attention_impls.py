@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.hlo_analysis import analyze_hlo
 from repro.models.layers import chunked_attention, chunked_attention_tri

@@ -1,0 +1,192 @@
+"""Campaign engine: batch==serial equivalence, dry-run cache, resume."""
+import json
+
+import pytest
+
+from conftest import run_subprocess
+from repro.core.eval_cache import DryRunCache
+
+
+# the monkeypatch prologue shared by the subprocess tests: a tiny config +
+# 64-token cells so dry-run compiles take seconds, mirroring
+# test_dryrun_and_loop.test_dse_loop_end_to_end
+TINY_PRELUDE = """
+        import repro.configs as C
+        from repro.configs import get_config as real_get, reduced
+        from repro.configs.base import ShapeCell
+
+        C.SHAPE_BY_NAME["train_4k"] = ShapeCell("train_4k", "train", 64, 8)
+        C.SHAPE_BY_NAME["decode_32k"] = ShapeCell("decode_32k", "decode", 64, 4)
+        tiny = reduced(real_get("qwen3-0.6b"))
+        import repro.launch.dryrun as D
+        import repro.core.evaluator as E
+        for mod in (D, E):
+            mod.get_config = lambda name: tiny
+            mod.SHAPE_BY_NAME = C.SHAPE_BY_NAME
+
+        from repro.core.design_space import PlanTemplate, baseline_point
+        from repro.core.eval_cache import DryRunCache
+        from repro.core.evaluator import Evaluator
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((1, 1), ("data", "model"))
+        cell = C.SHAPE_BY_NAME["train_4k"]
+        template = PlanTemplate(tiny, cell, dict(mesh.shape))
+        base = baseline_point(cell, template)"""
+
+
+# ---------------------------------------------------------------------------
+# cache: pure-python behavior, no jax required
+# ---------------------------------------------------------------------------
+def test_dryrun_cache_roundtrip(tmp_path):
+    c = DryRunCache(tmp_path / "cache")
+    assert c.get("a1", "s1", "m1", "k1") is None
+    c.put("a1", "s1", "m1", "k1", {"status": "ok", "compile_s": 1.5})
+    assert c.get("a1", "s1", "m1", "k1")["compile_s"] == 1.5
+    # a different identity tuple is a different entry
+    assert c.get("a1", "s1", "m2", "k1") is None
+    # persistence: a fresh instance over the same directory serves the entry
+    c2 = DryRunCache(tmp_path / "cache")
+    assert c2.get("a1", "s1", "m1", "k1")["status"] == "ok"
+    assert c2.stats() == {"hits": 1, "misses": 0, "entries": 1}
+    assert c.stats()["misses"] == 2
+
+
+def test_dryrun_cache_beside_db(tmp_path):
+    c = DryRunCache.beside(tmp_path / "dse" / "cost_db.jsonl")
+    assert c.root == tmp_path / "dse" / "dryrun_cache"
+    assert c.root.is_dir()
+
+
+def test_leaderboard_ranks_and_keeps_failures(tmp_path):
+    from repro.core.cost_db import CostDB, DataPoint
+    from repro.launch.campaign import build_leaderboard
+
+    db = CostDB(tmp_path / "db.jsonl")
+    db.append(DataPoint(arch="a1", shape="s", mesh="m", point={"__key__": "k1"},
+                        status="ok", metrics={"bound_s": 2.0, "fits_hbm": True}))
+    db.append(DataPoint(arch="a2", shape="s", mesh="m", point={"__key__": "k2"},
+                        status="ok", metrics={"bound_s": 1.0, "fits_hbm": True}))
+    rows = build_leaderboard(db, [
+        {"arch": "a1", "shape": "s", "mesh": "m", "status": "complete"},
+        {"arch": "a2", "shape": "s", "mesh": "m", "status": "complete"},
+        {"arch": "a3", "shape": "s", "mesh": "m", "status": "unsupported"},
+    ])
+    assert [r["arch"] for r in rows] == ["a2", "a1", "a3"]  # fastest first
+    assert rows[0]["bound_s"] == 1.0 and rows[0]["best_point"] == {}
+    assert rows[0]["feasible"] is True
+    assert rows[-1]["bound_s"] is None  # no-datapoint cell preserved
+
+
+def test_leaderboard_falls_back_to_fastest_infeasible(tmp_path):
+    from repro.core.cost_db import CostDB, DataPoint
+    from repro.launch.campaign import build_leaderboard
+
+    db = CostDB(tmp_path / "db.jsonl")
+    db.append(DataPoint(arch="a1", shape="s", mesh="m", point={"__key__": "k1"},
+                        status="infeasible",
+                        metrics={"bound_s": 9.0, "fits_hbm": False}))
+    db.append(DataPoint(arch="a2", shape="s", mesh="m", point={"__key__": "k2"},
+                        status="ok", metrics={"bound_s": 20.0, "fits_hbm": True}))
+    rows = build_leaderboard(db, [
+        {"arch": "a1", "shape": "s", "mesh": "m", "status": "complete"},
+        {"arch": "a2", "shape": "s", "mesh": "m", "status": "complete"},
+    ])
+    # feasible cells outrank infeasible ones even when nominally slower
+    assert [r["arch"] for r in rows] == ["a2", "a1"]
+    assert rows[1]["feasible"] is False and rows[1]["bound_s"] == 9.0
+
+
+# ---------------------------------------------------------------------------
+# batch evaluation == serial evaluation (and the pool path really runs)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_evaluate_batch_matches_serial(tmp_path):
+    out = run_subprocess(f"""{TINY_PRELUDE}
+        import json
+        points = [base] + [p for p in template.neighbors(base)][:2]
+
+        ser = Evaluator(mesh, "tiny1x1", artifact_dir=r"{tmp_path}/a",
+                        cache=DryRunCache(r"{tmp_path}/cs"), max_workers=1)
+        serial = [ser.evaluate("qwen3-0.6b", "train_4k", p) for p in points]
+
+        par = Evaluator(mesh, "tiny1x1", artifact_dir=r"{tmp_path}/b",
+                        cache=DryRunCache(r"{tmp_path}/cp"), max_workers=2)
+        batch = par.evaluate_batch("qwen3-0.6b", "train_4k", points)
+
+        assert len(serial) == len(batch) == len(points)
+        VOLATILE = ("compile_s",)  # wall-clock; everything else is deterministic
+        for s, b in zip(serial, batch):
+            assert s.point == b.point and s.status == b.status, (s, b)
+            ms = {{k: v for k, v in s.metrics.items() if k not in VOLATILE}}
+            mb = {{k: v for k, v in b.metrics.items() if k not in VOLATILE}}
+            assert ms == mb, (ms, mb)
+        assert par.compile_count == len(points)
+        print("BATCH_OK", [d.status for d in batch])
+    """, n_devices=1, timeout=900)
+    assert "BATCH_OK" in out
+
+
+@pytest.mark.slow
+def test_cache_hits_skip_recompilation(tmp_path):
+    out = run_subprocess(f"""{TINY_PRELUDE}
+        import repro.launch.dryrun as dryrun
+        cache = DryRunCache(r"{tmp_path}/cache")
+        ev = Evaluator(mesh, "tiny1x1", artifact_dir=r"{tmp_path}/a",
+                       cache=cache, max_workers=1)
+        dp1 = ev.evaluate("qwen3-0.6b", "train_4k", base)
+        assert dp1.status == "ok", dp1
+        assert dryrun.N_COMPILES == 1 and ev.compile_count == 1
+
+        # same (arch, shape, mesh, point): served from cache, no recompile
+        dp2 = ev.evaluate("qwen3-0.6b", "train_4k", base)
+        assert dryrun.N_COMPILES == 1 and ev.compile_count == 1
+        assert cache.stats()["hits"] == 1
+        assert dp2.status == dp1.status and dp2.metrics == dp1.metrics
+
+        # a fresh evaluator over the same cache dir: disk hit, no recompile
+        ev2 = Evaluator(mesh, "tiny1x1", artifact_dir=r"{tmp_path}/a",
+                        cache=DryRunCache(r"{tmp_path}/cache"), max_workers=1)
+        dp3 = ev2.evaluate("qwen3-0.6b", "train_4k", base)
+        assert dryrun.N_COMPILES == 1 and ev2.compile_count == 0
+        assert dp3.metrics == dp1.metrics
+        print("CACHE_OK")
+    """, n_devices=1, timeout=900)
+    assert "CACHE_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# campaign sweep: grid, leaderboard, resume skips completed cells
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_campaign_sweep_and_resume(tmp_path):
+    out = run_subprocess(f"""{TINY_PRELUDE}
+        import json
+        import repro.launch.dryrun as dryrun
+        from pathlib import Path
+        from repro.launch.campaign import run_campaign
+
+        grid = dict(archs=["qwen3-0.6b", "stablelm-3b"],
+                    shapes=["train_4k", "decode_32k"])
+        s1 = run_campaign(**grid, mesh=mesh, mesh_name="tiny1x1",
+                          out_dir=r"{tmp_path}/camp", iterations=1, budget=2,
+                          workers=1, verbose=False)
+        assert s1["ran"] == 4 and s1["resumed"] == 0, s1
+        lb = json.loads(Path(s1["leaderboard"]).read_text())
+        assert len(lb) == 4 and lb[0]["bound_s"] is not None
+        assert all(r["status"] == "complete" for r in lb)
+        compiles_before = dryrun.N_COMPILES
+        assert compiles_before > 0
+
+        # resume: every cell report exists -> no loop re-runs, no compiles
+        s2 = run_campaign(**grid, mesh=mesh, mesh_name="tiny1x1",
+                          out_dir=r"{tmp_path}/camp", iterations=1, budget=2,
+                          workers=1, verbose=False)
+        assert s2["ran"] == 0 and s2["resumed"] == 4, s2
+        assert dryrun.N_COMPILES == compiles_before
+        lb2 = json.loads(Path(s2["leaderboard"]).read_text())
+        assert {{(r["arch"], r["shape"]) for r in lb2}} == \\
+               {{(r["arch"], r["shape"]) for r in lb}}
+        print("CAMPAIGN_OK", len(lb))
+    """, n_devices=1, timeout=900)
+    assert "CAMPAIGN_OK" in out

@@ -4,7 +4,7 @@ from pathlib import Path
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import SHAPES, SHAPE_BY_NAME, get_config
 from repro.core.cost_db import CostDB, DataPoint, featurize, workload_features

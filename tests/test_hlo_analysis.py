@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.hlo_analysis import analyze_hlo
 from conftest import run_subprocess
@@ -34,13 +34,15 @@ def test_xla_cost_analysis_undercounts_while():
         y, _ = jax.lax.scan(body, x, w)
         return y.sum()
 
+    from repro.launch.dryrun import xla_cost_dict
+
     M = K = 64
     flops = {}
     for L in (2, 8):
         comp = jax.jit(f).lower(
             jax.ShapeDtypeStruct((L, K, K), jnp.float32),
             jax.ShapeDtypeStruct((M, K), jnp.float32)).compile()
-        flops[L] = (comp.cost_analysis().get("flops", 0.0),
+        flops[L] = (xla_cost_dict(comp).get("flops", 0.0),
                     analyze_hlo(comp.as_text(), 1)["flops"])
     assert flops[2][0] == flops[8][0]  # XLA: body counted once
     assert flops[8][1] == pytest.approx(4 * flops[2][1], rel=1e-6)  # ours: x L
@@ -51,8 +53,8 @@ def test_collective_bytes_sharded():
         import jax, jax.numpy as jnp, json
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.core.hlo_analysis import analyze_hlo
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         L, M, K = 5, 64, 128
         def f(w, x):
             def body(c, wi):

@@ -2,7 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, SHAPES, get_config
