@@ -1,18 +1,26 @@
 import os
 os.environ["XLA_FLAGS"] = os.environ.get(
     "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-"""DSE evaluation throughput: serial vs process-pool vs cached.
+"""DSE evaluation throughput: serial vs process-pool vs cached vs gated.
 
-Evaluates the same candidate set three ways and reports evaluations/minute:
+Default mode evaluates the same candidate set three ways and reports
+evaluations/minute:
 
     serial    in-process compiles, cold cache
     parallel  evaluate_batch over a spawn process pool, cold cache
     cached    same batch again, warm content-addressed dry-run cache
 
+``--gate`` instead runs the surrogate-gated-vs-ungated experiment: a warmup
+slice of candidates is compiled to train the surrogate, then the remaining
+candidates are evaluated twice — with and without the SurrogateGate — and
+the benchmark reports compiles spent per incumbent improvement for each arm
+(the gate's whole point is fewer compiles for the same best design).
+
 Default uses a reduced (CPU-smoke) config so the benchmark finishes in
 seconds; pass --full for the real registry config on the 2x4 mesh.
 
     PYTHONPATH=src python benchmarks/bench_dse_throughput.py --n 6 --workers 2
+    PYTHONPATH=src python benchmarks/bench_dse_throughput.py --gate --n 10
 
 The XLA_FLAGS lines above MUST stay the first statements: jax locks the
 device count at first init.
@@ -70,6 +78,74 @@ def _mode(label: str, evaluator, arch, shape, points) -> dict:
             "evals_per_min": round(60.0 * len(points) / max(wall, 1e-9), 1)}
 
 
+def _bound_of(dps):
+    ok = [d.metrics["bound_s"] for d in dps
+          if d.status == "ok" and d.metrics.get("bound_s")]
+    return min(ok) if ok else None
+
+
+def _gate_mode(args, mesh, mesh_name, points, tmp: Path) -> list:
+    """Gated vs ungated: same candidates, same incumbent, count compiles."""
+    from repro.core.cost_db import CostDB, featurize
+    from repro.core.cost_model import CostModel
+    from repro.core.eval_cache import DryRunCache
+    from repro.core.evaluator import Evaluator
+    from repro.search import SurrogateGate
+
+    n_warm = max(4, len(points) // 3)
+    warmup, rest = points[:n_warm], points[n_warm:]
+    if not rest:
+        raise SystemExit(f"--gate needs --n > {n_warm} (warmup slice)")
+
+    db = CostDB(tmp / "db.jsonl")
+    warm_ev = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / "w"),
+                        cache=DryRunCache(tmp / "cw"),
+                        max_workers=args.workers)
+    db.append_many(warm_ev.evaluate_batch(args.arch, args.shape, warmup))
+    incumbent = _bound_of(db.all())
+    cm = CostModel.create(in_dim=featurize({}, {}).shape[0])
+    # split=None: train on every warmup row — the tiny warmup DB can't
+    # spare a val split, and this arm bypasses the calibration guard anyway
+    loss = cm.pretrain(db, split=None)
+    print(f"warmup: {len(warmup)} compiles, incumbent={incumbent}, "
+          f"surrogate loss={loss:.3f}", flush=True)
+
+    rows = []
+    for label, gate in (
+            ("ungated", None),
+            # require_calibration=False: the warmup DB is far too small to
+            # clear the guard; the benchmark demonstrates the mechanics
+            ("gated", SurrogateGate(cm, factor=args.gate_factor,
+                                    require_calibration=False))):
+        if gate is not None:
+            gate.calibrate(db)
+        ev = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / label),
+                       cache=DryRunCache(tmp / f"c_{label}"),
+                       max_workers=args.workers)
+        t0 = time.time()
+        dps = ev.evaluate_batch(args.arch, args.shape, rest, gate=gate,
+                                incumbent_bound=incumbent)
+        best = _bound_of(dps)
+        improvement = (incumbent / best) if (best and incumbent) else 1.0
+        rows.append({
+            "mode": label, "n": len(rest),
+            "compiles": ev.compile_count, "pruned": ev.pruned_count,
+            "wall_s": round(time.time() - t0, 2),
+            "best_bound_s": best, "incumbent_bound_s": incumbent,
+            "improvement_x": round(improvement, 4),
+            "compiles_per_improvement": round(
+                ev.compile_count / max(improvement, 1e-9), 2),
+        })
+        print(rows[-1], flush=True)
+    u, g = rows
+    print(f"gate verdict: {g['compiles']}/{u['compiles']} compiles "
+          f"({g['pruned']} pruned) for improvement "
+          f"x{g['improvement_x']} vs x{u['improvement_x']} ungated -> "
+          f"{g['compiles_per_improvement']} vs "
+          f"{u['compiles_per_improvement']} compiles/improvement")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -78,6 +154,10 @@ def main():
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--full", action="store_true",
                     help="real registry config instead of the reduced smoke config")
+    ap.add_argument("--gate", action="store_true",
+                    help="surrogate-gated vs ungated evaluation experiment")
+    ap.add_argument("--gate-factor", type=float, default=2.0,
+                    help="SurrogateGate prune factor for --gate")
     ap.add_argument("--out", default=None, help="write results JSON here")
     args = ap.parse_args()
 
@@ -96,6 +176,12 @@ def main():
     tmp = Path(tempfile.mkdtemp(prefix="bench_dse_"))
     rows = []
     try:
+        if args.gate:
+            rows = _gate_mode(args, mesh, mesh_name, points, tmp)
+            if args.out:
+                Path(args.out).write_text(json.dumps(rows, indent=1))
+            return
+
         serial = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / "a"),
                            cache=DryRunCache(tmp / "cache_serial"), max_workers=1)
         rows.append(_mode("serial", serial, args.arch, args.shape, points))

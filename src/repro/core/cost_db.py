@@ -6,6 +6,7 @@ one JSONL record. The DB feeds (i) RAG retrieval of similar prior designs,
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import math
 import time
@@ -24,10 +25,12 @@ class DataPoint:
     shape: str
     mesh: str
     point: Dict[str, Any]  # PlanPoint dims
-    status: str  # ok | infeasible | error | rejected
+    status: str  # ok | infeasible | error | rejected | pruned
     metrics: Dict[str, Any] = field(default_factory=dict)
     reason: str = ""
-    source: str = "explorer"  # explorer | llm | expert
+    source: str = "explorer"  # explorer | llm | expert | search:<strategy>
+    # ``search:<strategy>`` tags record which proposal engine produced the
+    # design — the Ensemble's bandit credit ledger is rebuilt from them
     iteration: int = -1
     ts: float = field(default_factory=time.time)
 
@@ -95,11 +98,24 @@ def workload_features(cfg, cell) -> Dict[str, float]:
     }
 
 
+def _val_row(point_key: str) -> bool:
+    """Deterministic ~20% held-out split by point-key hash: ``val`` rows are
+    never used for surrogate training, so the gate's calibration error is
+    measured on genuinely unseen designs (stable across processes/shards)."""
+    h = hashlib.sha1(point_key.encode()).hexdigest()
+    return int(h[:8], 16) % 5 == 0
+
+
 class CostDB:
     def __init__(self, path: Path | str):
         self.path = Path(path)
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._cache: Optional[List[DataPoint]] = None
+        # per-(arch, shape) {design key -> status} index, kept current by
+        # append_many — dedupe is O(batch), not O(DB), per loop iteration,
+        # and the status lets callers treat gate-pruned designs (predicted,
+        # never measured) as still proposable
+        self._key_index: Optional[Dict[Tuple[str, str], Dict[str, str]]] = None
 
     def append(self, dp: DataPoint) -> None:
         self.append_many([dp])
@@ -113,6 +129,19 @@ class CostDB:
             f.write("".join(dp.to_json() + "\n" for dp in dps))
         if self._cache is not None:
             self._cache.extend(dps)
+        if self._key_index is not None:
+            for d in dps:
+                self._index_one(d)
+
+    def _index_one(self, d: DataPoint) -> None:
+        k = d.point.get("__key__")
+        if not k:
+            return
+        cell = self._key_index.setdefault((d.arch, d.shape), {})
+        # a measured status never regresses to 'pruned' (a pruned row is
+        # only a surrogate prediction, not an outcome)
+        if cell.get(k) is None or cell[k] == "pruned":
+            cell[k] = d.status
 
     def all(self) -> List[DataPoint]:
         if self._cache is None:
@@ -143,9 +172,24 @@ class CostDB:
               if d.metrics.get(key) is not None and d.metrics.get("fits_hbm", True)]
         return min(ok, key=lambda d: d.metrics[key]) if ok else None
 
+    def keys(self, arch: str, shape: str, *,
+             include_pruned: bool = True) -> set:
+        """Recorded design keys for one cell, from the cached index (built
+        lazily from disk once, then maintained incrementally by append_many).
+        ``include_pruned=False`` returns only *measured* designs — the right
+        dedupe set for proposal selection, so a design the surrogate gate
+        once skipped stays reachable if the gate relaxes or improves."""
+        if self._key_index is None:
+            self._key_index = {}
+            for d in self.all():
+                self._index_one(d)
+        cell = self._key_index.get((arch, shape), {})
+        if include_pruned:
+            return set(cell)
+        return {k for k, st in cell.items() if st != "pruned"}
+
     def seen(self, arch: str, shape: str, point_key: str) -> bool:
-        return any(d.point.get("__key__") == point_key
-                   for d in self.query(arch, shape))
+        return point_key in self.keys(arch, shape)
 
     def cells(self) -> List[Tuple[str, str, str]]:
         """Distinct (arch, shape, mesh) cells present — the campaign engine's
@@ -156,13 +200,27 @@ class CostDB:
               status: Optional[str] = None, mesh: Optional[str] = None) -> int:
         return len(self.query(arch, shape, status, mesh))
 
-    def training_set(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """(features, targets [log10 bound_s], feasible mask) for the surrogate."""
+    def training_set(self, split: Optional[str] = None,
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(features, targets [log10 bound_s], feasible mask) for the surrogate.
+
+        ``split``: None = every usable row (legacy behavior); ``"train"`` /
+        ``"val"`` = the deterministic ~80/20 key-hash partition (``val`` rows
+        back the SurrogateGate's calibration guard, see ``_val_row``).
+        ``pruned`` rows are always skipped: they carry only a surrogate
+        *prediction*, never a measured outcome, and training on them would
+        let the gate teach the model its own mistakes.
+        """
         X, y, feas = [], [], []
         for d in self.all():
             wl = d.metrics.get("workload")
-            if not wl:
+            if not wl or d.status == "pruned":
                 continue
+            if split is not None:
+                key = d.point.get("__key__") or json.dumps(
+                    {k: v for k, v in sorted(d.point.items())}, default=str)
+                if _val_row(key) != (split == "val"):
+                    continue
             X.append(featurize(d.point, wl))
             b = d.metrics.get("bound_s")
             ok = d.status == "ok" and d.metrics.get("fits_hbm", False)

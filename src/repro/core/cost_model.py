@@ -74,9 +74,16 @@ class CostModel:
         return np.asarray(b), np.asarray(pf)
 
     # ------------------------------------------------------------------
-    def pretrain(self, db: CostDB, steps: int = 300, lr: float = 1e-2) -> float:
-        """Full-parameter fit of the base model (done once)."""
-        X, y, feas = db.training_set()
+    def pretrain(self, db: CostDB, steps: int = 300, lr: float = 1e-2,
+                 split: Optional[str] = "train") -> float:
+        """Full-parameter fit of the base model (done once).
+
+        Default trains on the deterministic ``train`` key-hash split only —
+        the held-out ``val`` rows back :meth:`validation_error`, which is
+        what the SurrogateGate's calibration guard trusts. ``split=None``
+        uses every row (tiny-DB benchmarks that bypass the guard).
+        """
+        X, y, feas = db.training_set(split=split)
         if X.shape[0] < 4:
             return float("nan")
         grad = jax.jit(jax.grad(_loss))
@@ -89,9 +96,11 @@ class CostModel:
         return float(lossj(self.params, Xj, yj, fj))
 
     def finetune_lora(self, db: CostDB, rank: int = 4, steps: int = 200,
-                      lr: float = 5e-3, seed: int = 1) -> float:
-        """LoRA adaptation: base frozen, adapters trained on the grown DB."""
-        X, y, feas = db.training_set()
+                      lr: float = 5e-3, seed: int = 1,
+                      split: Optional[str] = "train") -> float:
+        """LoRA adaptation: base frozen, adapters trained on the grown DB
+        (``train`` split by default; ``val`` stays held out for the gate)."""
+        X, y, feas = db.training_set(split=split)
         if X.shape[0] < 4:
             return float("nan")
         if self.lora is None:
@@ -106,6 +115,19 @@ class CostModel:
             g = grad(self.lora)
             self.lora = jax.tree.map(lambda p, gg: p - lr * gg, self.lora, g)
         return float(loss_of(self.lora))
+
+    def validation_error(self, db: CostDB) -> Tuple[float, int]:
+        """(RMSE in log10-bound decades, n rows) on the held-out ``val``
+        split, feasible rows only (infeasible rows have no measured bound).
+        Returns (nan, 0) when no validation rows exist — the gate treats
+        that as uncalibrated."""
+        X, y, feas = db.training_set(split="val")
+        mask = feas > 0.5
+        if not mask.any():
+            return float("nan"), 0
+        pred, _ = self.predict(X[mask])
+        rmse = float(np.sqrt(np.mean((pred - y[mask]) ** 2)))
+        return rmse, int(mask.sum())
 
     def rank_candidates(self, feats: np.ndarray) -> np.ndarray:
         """Indices sorted by predicted bound, infeasible-penalised."""

@@ -75,6 +75,7 @@ class Evaluator:
     cache: Optional[DryRunCache] = None
     max_workers: int = 1  # >1 enables the process pool in evaluate_batch
     compile_count: int = 0  # dry-run compile attempts (cache misses; excludes template-skips)
+    pruned_count: int = 0  # candidates the surrogate gate kept out of the pool
 
     # ------------------------------------------------------------------
     def evaluate(self, arch: str, shape: str, point: PlanPoint,
@@ -84,11 +85,25 @@ class Evaluator:
 
     def evaluate_batch(self, arch: str, shape: str,
                        points: Sequence[PlanPoint], *,
-                       source: str = "explorer", iteration: int = -1,
-                       workers: Optional[int] = None) -> List[DataPoint]:
+                       source: str | Sequence[str] = "explorer",
+                       iteration: int = -1,
+                       workers: Optional[int] = None,
+                       gate=None,
+                       incumbent_bound: Optional[float] = None,
+                       ) -> List[DataPoint]:
         """Evaluate ``points`` (order-preserving). Template rejections are
-        decided inline, cached designs are served without recompiling, and
-        the remaining dry-run compiles fan out across the process pool."""
+        decided inline, cached designs are served without recompiling, the
+        optional :class:`~repro.search.gate.SurrogateGate` prunes candidates
+        whose predicted bound is hopeless vs ``incumbent_bound`` (recorded as
+        ``pruned`` data points with the prediction — never a compile), and
+        the remaining dry-run compiles fan out across the process pool.
+
+        ``source`` may be one tag for the whole batch or a per-point
+        sequence (strategy provenance for the cost DB ``source`` field)."""
+        srcs = ([source] * len(points) if isinstance(source, str)
+                else list(source))
+        if len(srcs) != len(points):
+            raise ValueError(f"{len(srcs)} sources for {len(points)} points")
         cfg = get_config(arch)
         cell = SHAPE_BY_NAME[shape]
         template = PlanTemplate(cfg, cell, dict(self.mesh.shape), self.device)
@@ -97,7 +112,7 @@ class Evaluator:
         results: List[Optional[DataPoint]] = [None] * len(points)
         pending: List[Tuple[int, PlanPoint]] = []
         for i, point in enumerate(points):
-            base = self._base(arch, shape, point, source, iteration)
+            base = self._base(arch, shape, point, srcs[i], iteration)
             ok, why = template.validate(point)
             if not ok:
                 results[i] = DataPoint(**base, status="rejected", reason=why,
@@ -109,6 +124,28 @@ class Evaluator:
                 results[i] = self._rec_to_datapoint(rec, wl, base)
                 continue
             pending.append((i, point))
+
+        # the gate only sees candidates that would actually compile: cache
+        # hits are free and template rejections are already negative points
+        if gate is not None and pending:
+            verdicts = gate.prune_verdicts([pt for _, pt in pending], wl,
+                                           incumbent_bound)
+            still: List[Tuple[int, PlanPoint]] = []
+            for (i, pt), v in zip(pending, verdicts):
+                if v is None:
+                    still.append((i, pt))
+                    continue
+                pred, pfeas = v
+                self.pruned_count += 1
+                base = self._base(arch, shape, pt, srcs[i], iteration)
+                results[i] = DataPoint(
+                    **base, status="pruned",
+                    reason=(f"surrogate gate: predicted {pred:.3g}s > "
+                            f"{gate.factor:g}x incumbent {incumbent_bound:.3g}s"),
+                    metrics={"workload": wl, "predicted_bound_s": pred,
+                             "predicted_p_feasible": pfeas,
+                             "gate_factor": gate.factor})
+            pending = still
 
         n_workers = self.max_workers if workers is None else workers
         n_workers = min(n_workers, len(pending))
@@ -126,7 +163,7 @@ class Evaluator:
             # deterministic outcomes are worth replaying forever
             if self.cache is not None and rec.get("status") in ("ok", "skipped"):
                 self.cache.put(arch, shape, self.mesh_name, point.key(), rec)
-            base = self._base(arch, shape, point, source, iteration)
+            base = self._base(arch, shape, point, srcs[i], iteration)
             results[i] = self._rec_to_datapoint(rec, wl, base)
         return results  # type: ignore[return-value]
 

@@ -1,26 +1,25 @@
-"""DSE Explorer (paper §3.1): structured candidate generation + evaluation.
+"""DSE Explorer (paper §3.1) — compatibility facade over the search package.
 
-Per iteration the Explorer takes the incumbent design, generates the
-permutation set (single-dimension mutations within the template's
-device-aware ranges plus LLM-stack refinements), pre-ranks candidates with
-the learned cost model to bound expensive simulations, evaluates the top
-candidates through the Evaluation module, and emits summarized hardware data
-points into the cost DB. Each evaluation leaves a 'design run folder'
-artifact (JSON next to the dry-run HLO summaries).
+The greedy candidate-generation policy that used to live here is now
+:class:`~repro.search.greedy.GreedyNeighborhood`; ``Explorer`` keeps the
+historical one-call API (generate -> dedupe -> rank -> batch-evaluate ->
+record) for scripts and notebooks that drive exploration without a
+``DSELoop``. Dedupe uses the cost DB's cached per-cell key index
+(``CostDB.keys``) instead of rescanning ``db.query(arch, shape)`` on every
+call — O(batch) per iteration, not O(DB).
 """
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
 
 from repro.configs import SHAPE_BY_NAME, get_config
-from repro.core.cost_db import CostDB, DataPoint, featurize, workload_features
+from repro.core.cost_db import CostDB, DataPoint, workload_features
 from repro.core.cost_model import CostModel
 from repro.core.design_space import PlanPoint, PlanTemplate
 from repro.core.evaluator import Evaluator
+from repro.search.base import Candidate, SearchState, select_candidates
 
 
 @dataclass
@@ -33,14 +32,6 @@ class Explorer:
     # points alongside the greedy neighborhood to avoid local optima
     n_random: int = 1
 
-    def _rank(self, cfg, cell, cands: Sequence[PlanPoint]) -> List[PlanPoint]:
-        if self.cost_model is None or not self.cost_model.trained or not cands:
-            return list(cands)
-        wl = workload_features(cfg, cell)
-        feats = np.stack([featurize(dict(c.dims), wl) for c in cands])
-        order = self.cost_model.rank_candidates(feats)
-        return [cands[i] for i in order]
-
     def explore(self, arch: str, shape: str, seeds: Sequence[PlanPoint],
                 *, budget: int = 4, iteration: int = 0,
                 extra_candidates: Sequence[PlanPoint] = ()) -> List[DataPoint]:
@@ -50,24 +41,25 @@ class Explorer:
         template = PlanTemplate(cfg, cell, dict(self.evaluator.mesh.shape))
         rng = random.Random(self.seed + iteration)
 
-        cands: List[PlanPoint] = list(extra_candidates)
+        cands: List[Candidate] = [Candidate(p, "llm") for p in extra_candidates]
         for seed in seeds:
-            cands.extend(template.neighbors(seed))
-        cands.extend(template.random_points(rng, self.n_random))
+            cands += [Candidate(p, "explorer") for p in template.neighbors(seed)]
+        cands += [Candidate(p, "explorer")
+                  for p in template.random_points(rng, self.n_random)]
 
-        # dedupe + drop already-evaluated designs
-        seen_keys = {d.point.get("__key__") for d in self.db.query(arch, shape)}
-        uniq: Dict[str, PlanPoint] = {}
-        for c in cands:
-            k = c.key()
-            if k not in seen_keys and k not in uniq:
-                uniq[k] = c
-        ranked = self._rank(cfg, cell, list(uniq.values()))
+        state = SearchState(arch=arch, shape=shape, cfg=cfg, cell=cell,
+                            template=template, db=self.db, iteration=iteration,
+                            budget=budget, incumbent=None,
+                            cost_model=self.cost_model,
+                            workload=workload_features(cfg, cell))
+        # shared pipeline: key-index dedupe + in-batch dedupe + rank + budget
+        ranked = select_candidates(state, cands)
 
         # the whole ranked budget goes down as ONE batch: cache hits return
         # instantly and the remaining compiles share the evaluator's pool
-        out = self.evaluator.evaluate_batch(arch, shape, ranked[:budget],
-                                            source="explorer",
+        out = self.evaluator.evaluate_batch(arch, shape,
+                                            [c.point for c in ranked],
+                                            source=[c.source for c in ranked],
                                             iteration=iteration)
         self.db.append_many(out)
         return out

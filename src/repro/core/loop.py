@@ -1,26 +1,30 @@
 """The SECDA-DSE iterative loop (paper Fig. 1):
 
-    DSE Explorer permutations  ─┐
-                                ├─> Evaluation module (dry-run 'simulation')
-    LLM Stack refinements      ─┘        │
-          ▲                              ▼
+    search strategies propose    ─┐  (greedy / LLM stack / annealing /
+                                  ├─> surrogate gate ─> Evaluation module
+    Ensemble budget allocation   ─┘        │             (dry-run 'simulation')
+          ▲                                ▼
           │   RAG over cost DB    cost-model DB  ──>  LoRA fine-tuning
-          └──────────────────────────────┘
+          └────────────────────────────────┘
 
-Per iteration: the Explorer proposes parameter permutations around the
-incumbent(s); the LLM Stack consumes the summarized hardware data points +
-retrieved context and proposes reasoning-guided refinements; everything is
-evaluated through the simulator; results (positive AND negative) land in the
-DB; the surrogate cost model is periodically (LoRA-)fine-tuned; diversity is
-maintained by keeping a small incumbent pool plus random template samples.
+``DSELoop`` is pure orchestration: seed the expert design, let the pluggable
+:class:`~repro.search.base.SearchStrategy` propose candidates, dedupe against
+the DB's key index, surrogate-rank, pass the batch through the optional
+:class:`~repro.search.gate.SurrogateGate` (predicted-hopeless candidates are
+recorded as ``pruned`` data points instead of compiled), batch-evaluate the
+survivors, feed every result — positive AND negative — back to the strategy
+and the DB, and periodically (LoRA-)fine-tune the surrogate.
+
+The default strategy is an :class:`~repro.search.ensemble.Ensemble` of
+``GreedyNeighborhood`` + ``LLMGuided`` — the paper's two interchangeable
+proposal engines sharing one evaluation loop. ``--strategy`` on the CLIs
+swaps in annealing, evolutionary, or the full four-member bandit ensemble.
 
 The optional human gate (``approve_fn``) mirrors §3.2.2's human-in-the-loop;
 the default auto-approves (the paper's stated end state once the DB grows).
-
 Each iteration's ranked budget is submitted as ONE ``evaluate_batch`` call:
 cache hits return instantly, the rest fan out over the evaluator's process
-pool, and the gate/negative-datapoint semantics apply to the returned batch
-exactly as they did to the old serial loop.
+pool.
 """
 from __future__ import annotations
 
@@ -29,13 +33,15 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.configs import SHAPE_BY_NAME, get_config
-from repro.core.cost_db import CostDB, DataPoint
+from repro.core.cost_db import CostDB, DataPoint, workload_features
 from repro.core.cost_model import CostModel
 from repro.core.design_space import PlanPoint, PlanTemplate, baseline_point
 from repro.core.evaluator import Evaluator
-from repro.core.explorer import Explorer
 from repro.core.llm_stack import LLMStack
 from repro.core.mcp import Registry, build_registry
+from repro.search import (Candidate, Ensemble, GreedyNeighborhood, LLMGuided,
+                          SearchState, SearchStrategy, SurrogateGate,
+                          select_candidates)
 
 
 @dataclass
@@ -64,12 +70,17 @@ class DSELoop:
     approve_fn: Optional[Callable[[DataPoint], bool]] = None  # human gate
     pool_size: int = 2  # incumbent diversity pool
     finetune_every: int = 2
+    strategy: Optional[SearchStrategy] = None  # None -> greedy+LLM ensemble
+    gate: Optional[SurrogateGate] = None  # surrogate-gated evaluation
 
     def __post_init__(self):
         if self.registry is None:
             self.registry = build_registry(
                 evaluator=self.evaluator, db=self.db,
                 llm_stack=self.llm_stack, cost_model=self.cost_model)
+
+    def _default_strategy(self) -> SearchStrategy:
+        return Ensemble([GreedyNeighborhood(), LLMGuided(self.llm_stack)])
 
     # ------------------------------------------------------------------
     def run(self, arch: str, shape: str, *, iterations: int = 4,
@@ -78,7 +89,12 @@ class DSELoop:
         cfg = get_config(arch)
         cell = SHAPE_BY_NAME[shape]
         template = PlanTemplate(cfg, cell, dict(self.evaluator.mesh.shape))
+        wl = workload_features(cfg, cell)
         report = LoopReport(arch=arch, shape=shape)
+        # strategies carry per-cell state (walker position, population,
+        # bandit credit) — a loop bound to one is single-cell; campaigns
+        # construct a fresh strategy per cell
+        strategy = self.strategy or self._default_strategy()
 
         def log(msg):
             if verbose:
@@ -96,66 +112,70 @@ class DSELoop:
             f"dom={base_dp.metrics.get('dominant')} ({time.time()-t0:.0f}s)")
 
         pool: List[DataPoint] = [base_dp]
-        explorer = Explorer(self.evaluator, self.db, self.cost_model)
-
         for it in range(1, iterations + 1):
             incumbent = _best_of(pool) or base_dp
-            inc_point = PlanPoint(dims={k: v for k, v in incumbent.point.items()
-                                        if k != "__key__"})
+            state = SearchState(
+                arch=arch, shape=shape, cfg=cfg, cell=cell, template=template,
+                db=self.db, iteration=it, budget=eval_budget,
+                incumbent=incumbent, pool=list(pool),
+                cost_model=self.cost_model, workload=wl)
 
-            # paper §3.2.2: refine from unsuccessful data points too — the
-            # fastest *infeasible* design seeds memory-fixing refinements
-            reason_from = [(inc_point, incumbent)]
-            neg = _best_negative(self.db, arch, shape, incumbent)
-            if neg is not None:
-                neg_point = PlanPoint(dims={k: v for k, v in neg.point.items()
-                                            if k != "__key__"})
-                reason_from.append((neg_point, neg))
-                log(f"iter {it}: chaining from negative datapoint "
-                    f"(bound={neg.metrics.get('bound_s'):.2f}s, "
-                    f"{neg.metrics.get('per_device_gib', 0):.1f}GiB)")
+            # --- propose: the pluggable strategy decides where to look ---
+            cands = strategy.propose(state)
+            ranked = select_candidates(state, cands)
+            log(f"iter {it}: {len(cands)} proposed -> {len(ranked)} selected "
+                f"({_source_counts(ranked)})")
 
-            # --- LLM Stack reasoning-guided refinement ---
-            llm_props: List[PlanPoint] = []
-            n_rej = 0
-            for pt, dp in reason_from:
-                res = self.registry.call(
-                    "propose", arch=arch, shape=shape,
-                    point=dict(pt.dims), metrics=dp.metrics, k=eval_budget)
-                llm_props.extend(res["proposals"])
-                n_rej += res["rejected"]
-            log(f"iter {it}: LLM proposed {len(llm_props)} (rejected {n_rej})")
-
-            # --- Explorer: permutations + LLM candidates, cost-model ranked,
-            # submitted as ONE evaluate_batch (pool + dry-run cache) ---
+            # --- gate + batch-evaluate ---
+            if self.gate is not None:
+                self.gate.calibrate(self.db)
             cache = self.evaluator.cache
             hits0 = cache.hits if cache is not None else 0
             compiles0 = self.evaluator.compile_count
-            new_dps = explorer.explore(
-                arch, shape, [inc_point], budget=eval_budget, iteration=it,
-                extra_candidates=llm_props)
+            pruned0 = self.evaluator.pruned_count
+            new_dps = self.evaluator.evaluate_batch(
+                arch, shape, [c.point for c in ranked],
+                source=[c.source for c in ranked], iteration=it,
+                gate=self.gate,
+                incumbent_bound=(incumbent.metrics.get("bound_s")
+                                 if incumbent.status == "ok" else None))
             for dp in new_dps:
-                if self.approve_fn is not None and dp.status == "ok":
-                    if not self.approve_fn(dp):
-                        dp.status = "rejected"
-                        dp.reason = "human-in-the-loop veto"
+                if (self.approve_fn is not None and dp.status == "ok"
+                        and not self.approve_fn(dp)):
+                    dp.status = "rejected"
+                    dp.reason = "human-in-the-loop veto"
                 log(f"  {dp.status:10s} bound={dp.metrics.get('bound_s')} "
                     f"dom={dp.metrics.get('dominant')} mem="
                     f"{dp.metrics.get('per_device_gib', float('nan')):.1f}GiB "
                     f"{_delta_str(dp, incumbent)}")
+            # a design the gate pruned in an earlier iteration stays
+            # proposable (it was never measured) but isn't re-recorded —
+            # one pruned row per design, however often it is re-predicted
+            prior_pruned = (self.db.keys(arch, shape)
+                            - self.db.keys(arch, shape, include_pruned=False))
+            self.db.append_many([
+                dp for dp in new_dps
+                if not (dp.status == "pruned"
+                        and dp.point.get("__key__") in prior_pruned)])
+
+            # --- observe: every result, positive AND negative, feeds back ---
+            strategy.observe(new_dps)
             pool = _select_pool(pool + new_dps, self.pool_size)
 
             # --- periodic surrogate (LoRA) fine-tuning on the grown DB ---
             if self.cost_model is not None and it % self.finetune_every == 0:
                 r = self.registry.call("finetune_cost_model")
-                log(f"  cost model: {r['status']} loss={r.get('loss'):.4f}"
-                    if r.get("loss") == r.get("loss") else f"  cost model: {r['status']}")
+                log("  " + _finetune_msg(r))
 
             report.iterations.append({
                 "iteration": it,
                 "evaluated": len(new_dps),
                 "compiled": self.evaluator.compile_count - compiles0,
+                "pruned": self.evaluator.pruned_count - pruned0,
                 "cache_hits": (cache.hits - hits0) if cache is not None else 0,
+                "sources": _source_counts(ranked),
+                "allocation": (dict(strategy.credit)
+                               if isinstance(strategy, Ensemble) else None),
                 "best_bound": (_best_of(pool).metrics.get("bound_s")
                                if _best_of(pool) else None),
             })
@@ -167,19 +187,25 @@ class DSELoop:
                 f"plan={ {k: v for k, v in report.best.point.items() if k != '__key__'} }")
         return report
 
+def _finetune_msg(r: Dict) -> str:
+    """NaN/None-safe fine-tune log line (a None loss used to TypeError in an
+    eagerly-evaluated f-string ternary)."""
+    loss = r.get("loss")
+    if isinstance(loss, (int, float)) and loss == loss:  # not None, not NaN
+        return f"cost model: {r['status']} loss={loss:.4f}"
+    return f"cost model: {r['status']} loss=n/a"
+
+
+def _source_counts(cands: Sequence[Candidate]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for c in cands:
+        out[c.source] = out.get(c.source, 0) + 1
+    return out
+
 
 def _best_of(pool: Sequence[DataPoint]) -> Optional[DataPoint]:
     ok = [d for d in pool if d.status == "ok" and d.metrics.get("bound_s")]
     return min(ok, key=lambda d: d.metrics["bound_s"]) if ok else None
-
-
-def _best_negative(db: CostDB, arch: str, shape: str,
-                   incumbent: DataPoint) -> Optional[DataPoint]:
-    """Fastest infeasible design that beats the incumbent's bound."""
-    inc = incumbent.metrics.get("bound_s") or float("inf")
-    neg = [d for d in db.query(arch, shape, "infeasible")
-           if d.metrics.get("bound_s") and d.metrics["bound_s"] < 0.9 * inc]
-    return min(neg, key=lambda d: d.metrics["bound_s"]) if neg else None
 
 
 def _select_pool(dps: Sequence[DataPoint], k: int) -> List[DataPoint]:

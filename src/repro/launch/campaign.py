@@ -20,6 +20,35 @@ Quickstart:
     # shared dry-run cache makes re-entered cells near-instant
     PYTHONPATH=src python -m repro.launch.campaign ... (same args)
 
+Search policy and surrogate gating (see ``repro.search``):
+
+    --strategy {greedy,llm,anneal,evolve,ensemble}
+        proposal engine per cell (default ``ensemble``: budget split across
+        all strategies with bandit credit reallocation, provenance in the
+        cost DB ``source`` field)
+    --gate-factor F
+        enable the SurrogateGate: candidates whose *predicted* bound is
+        > F x the incumbent are recorded as ``pruned`` data points instead
+        of compiled; auto-disabled until the surrogate's held-out
+        validation RMSE clears the calibration guard
+
+Scale-out over processes/hosts — shard the grid, then merge:
+
+    # shard i/n deterministically partitions the sorted arch x shape grid
+    PYTHONPATH=src python -m repro.launch.campaign ... \\
+        --out artifacts/shard0 --shard 0/2
+    PYTHONPATH=src python -m repro.launch.campaign ... \\
+        --out artifacts/shard1 --shard 1/2
+
+    # merge shard DBs + reports + caches, rebuild one leaderboard
+    # (dedup by (arch, shape, mesh, design key), earliest record wins)
+    PYTHONPATH=src python -m repro.launch.merge_db \\
+        artifacts/shard0 artifacts/shard1 --out artifacts/campaign
+
+With the deterministic mock LLM and an untrained (or cell-local) surrogate,
+a sharded run + merge reproduces the single-process ``leaderboard.json``
+byte-for-byte — tier-1 asserts it (``tests/test_merge_db.py``).
+
 Outputs under --out:
     cost_db.jsonl                     shared hardware-datapoint DB
     dryrun_cache/                     content-addressed compile cache
@@ -35,11 +64,27 @@ import json
 import os
 import time
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 def cell_report_path(out_dir: Path, arch: str, shape: str, mesh_name: str) -> Path:
     return Path(out_dir) / "reports" / f"{arch}__{shape}__{mesh_name}.json"
+
+
+def shard_cells(archs: Sequence[str], shapes: Sequence[str],
+                shard: Optional[Tuple[int, int]] = None,
+                ) -> List[Tuple[str, str]]:
+    """The campaign's (arch, shape) work list: the full grid in sorted order
+    (so every shard agrees on cell numbering), optionally keeping only cells
+    whose index ``% n == i`` for ``shard=(i, n)``. Disjoint and exhaustive:
+    the union over all shards is exactly the unsharded list."""
+    cells = sorted({(a, s) for a in archs for s in shapes})
+    if shard is None:
+        return cells
+    i, n = shard
+    if not (0 <= i < n):
+        raise ValueError(f"shard index {i} outside 0..{n - 1}")
+    return cells[i::n]
 
 
 def _cell_report(report) -> Dict:
@@ -71,7 +116,10 @@ def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
             "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
             "status": c["status"],
             "feasible": feasible if best is not None else None,
-            "n_points": db.count(c["arch"], c["shape"], mesh=c["mesh"]),
+            # measured designs only: gate-pruned rows are predictions, and
+            # counting them would overstate how thoroughly a cell was explored
+            "n_points": sum(d.status != "pruned" for d in
+                            db.query(c["arch"], c["shape"], mesh=c["mesh"])),
             "improvement": c.get("improvement"),
             "bound_s": None, "mfu_at_bound": None, "dominant": None,
             "per_device_gib": None, "best_point": None,
@@ -82,7 +130,10 @@ def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
                 mfu_at_bound=best.metrics.get("mfu_at_bound"),
                 dominant=best.metrics.get("dominant"),
                 per_device_gib=best.metrics.get("per_device_gib"),
-                best_point={k: v for k, v in best.point.items()
+                # sorted: identical serialization whether the DB is the live
+                # in-memory one or re-read from JSONL (to_json sorts keys),
+                # so a sharded run + merge_db reproduces this byte-for-byte
+                best_point={k: v for k, v in sorted(best.point.items())
                             if k != "__key__"},
             )
         rows.append(row)
@@ -94,8 +145,14 @@ def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
 def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: str,
                  *, out_dir: Path | str, iterations: int = 2, budget: int = 3,
                  workers: int = 1, llm_client=None, db=None, resume: bool = True,
+                 strategy: str = "ensemble", gate_factor: Optional[float] = None,
+                 shard: Optional[Tuple[int, int]] = None,
                  verbose: bool = True) -> Dict:
-    """Run (or resume) the full grid; returns the campaign summary dict."""
+    """Run (or resume) the grid — or one deterministic ``shard=(i, n)`` slice
+    of it — and return the campaign summary dict. Each cell gets a *fresh*
+    search strategy (strategies carry per-cell state: walker position,
+    population, bandit credit); the cost DB, dry-run cache, surrogate cost
+    model, and evaluator pool are shared across cells."""
     from repro.core.cost_db import CostDB, featurize
     from repro.core.cost_model import CostModel
     from repro.core.eval_cache import DryRunCache
@@ -104,6 +161,7 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     from repro.core.llm_stack import LLMStack
     from repro.core.loop import DSELoop
     from repro.models import model as M
+    from repro.search import SurrogateGate, make_strategy
 
     out_dir = Path(out_dir)
     (out_dir / "reports").mkdir(parents=True, exist_ok=True)
@@ -114,8 +172,12 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
                           artifact_dir=str(out_dir / "dryrun"))
     stack = LLMStack(client=llm_client or MockLLM(), db=db)
     cost_model = CostModel.create(in_dim=featurize({}, {}).shape[0])
-    loop = DSELoop(evaluator=evaluator, db=db, llm_stack=stack,
-                   cost_model=cost_model)
+    if gate_factor is not None and gate_factor <= 1.0:
+        raise ValueError(f"gate_factor must be > 1 (got {gate_factor}): the "
+                         "gate prunes candidates predicted SLOWER than "
+                         "factor x the incumbent")
+    gate = (SurrogateGate(cost_model, factor=gate_factor)
+            if gate_factor is not None else None)
 
     def log(msg):
         if verbose:
@@ -124,56 +186,64 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     t0 = time.time()
     cell_rows: List[Dict] = []
     counts = {"ran": 0, "resumed": 0, "unsupported": 0}
-    for arch in archs:
-        for shape in shapes:
-            rpath = cell_report_path(out_dir, arch, shape, mesh_name)
-            if resume and rpath.exists():
-                prior = json.loads(rpath.read_text())
-                counts["resumed" if prior.get("status") != "unsupported"
-                       else "unsupported"] += 1
-                cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
-                                  "status": "resumed" if prior.get("status") != "unsupported"
-                                  else "unsupported",
-                                  "improvement": prior.get("improvement")})
-                log(f"{arch}/{shape}: resumed (report exists)")
-                continue
-
-            from repro.configs import SHAPE_BY_NAME, get_config
-            supported, why = M.cell_supported(get_config(arch), SHAPE_BY_NAME[shape])
-            if not supported:
-                rpath.write_text(json.dumps(
-                    {"arch": arch, "shape": shape, "status": "unsupported",
-                     "reason": why}, indent=1))
-                counts["unsupported"] += 1
-                cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
-                                  "status": "unsupported", "improvement": None})
-                log(f"{arch}/{shape}: unsupported ({why})")
-                continue
-
-            t_cell = time.time()
-            report = loop.run(arch, shape, iterations=iterations,
-                              eval_budget=budget, verbose=verbose)
-            out = _cell_report(report)
-            out["status"] = "complete"
-            out["wall_s"] = round(time.time() - t_cell, 1)
-            rpath.write_text(json.dumps(out, indent=1, default=str))
-            counts["ran"] += 1
+    for arch, shape in shard_cells(archs, shapes, shard):
+        rpath = cell_report_path(out_dir, arch, shape, mesh_name)
+        if resume and rpath.exists():
+            prior = json.loads(rpath.read_text())
+            counts["resumed" if prior.get("status") != "unsupported"
+                   else "unsupported"] += 1
             cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
-                              "status": "complete",
-                              "improvement": report.improvement()})
-            log(f"{arch}/{shape}: done in {out['wall_s']}s "
-                f"(improvement {report.improvement():.2%}, "
-                f"cache {cache.stats()})")
+                              "status": "resumed" if prior.get("status") != "unsupported"
+                              else "unsupported",
+                              "improvement": prior.get("improvement")})
+            log(f"{arch}/{shape}: resumed (report exists)")
+            continue
 
+        from repro.configs import SHAPE_BY_NAME, get_config
+        supported, why = M.cell_supported(get_config(arch), SHAPE_BY_NAME[shape])
+        if not supported:
+            rpath.write_text(json.dumps(
+                {"arch": arch, "shape": shape, "status": "unsupported",
+                 "reason": why}, indent=1))
+            counts["unsupported"] += 1
+            cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
+                              "status": "unsupported", "improvement": None})
+            log(f"{arch}/{shape}: unsupported ({why})")
+            continue
+
+        t_cell = time.time()
+        loop = DSELoop(evaluator=evaluator, db=db, llm_stack=stack,
+                       cost_model=cost_model, gate=gate,
+                       strategy=make_strategy(strategy, llm_stack=stack))
+        report = loop.run(arch, shape, iterations=iterations,
+                          eval_budget=budget, verbose=verbose)
+        out = _cell_report(report)
+        out["status"] = "complete"
+        out["wall_s"] = round(time.time() - t_cell, 1)
+        rpath.write_text(json.dumps(out, indent=1, default=str))
+        counts["ran"] += 1
+        cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
+                          "status": "complete",
+                          "improvement": report.improvement()})
+        log(f"{arch}/{shape}: done in {out['wall_s']}s "
+            f"(improvement {report.improvement():.2%}, "
+            f"cache {cache.stats()})")
+
+    # sorted rows -> deterministic leaderboard tie order, and the exact
+    # order merge_db reconstructs from report files after a sharded run
+    cell_rows.sort(key=lambda c: (c["arch"], c["shape"], c["mesh"]))
     leaderboard = build_leaderboard(db, cell_rows)
     lb_path = out_dir / "leaderboard.json"
     lb_path.write_text(json.dumps(leaderboard, indent=1, default=str))
 
     summary = {
         "mesh": mesh_name, "cells": len(cell_rows), **counts,
+        "shard": f"{shard[0]}/{shard[1]}" if shard else None,
+        "strategy": strategy,
         "wall_s": round(time.time() - t0, 1),
         "evaluations": db.count(),
         "compiles": evaluator.compile_count,
+        "pruned": evaluator.pruned_count,
         "cache": cache.stats(),
         "leaderboard": str(lb_path),
     }
@@ -204,7 +274,33 @@ def main():
     ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
     ap.add_argument("--force", action="store_true",
                     help="re-run cells even if their reports exist")
+    # literal choices, not repro.search.STRATEGIES: importing the search
+    # package pulls jax in, and --help must stay instant
+    ap.add_argument("--strategy", default="ensemble",
+                    choices=["greedy", "llm", "anneal", "evolve", "ensemble"],
+                    help="search strategy per cell (fresh instance each cell)")
+    ap.add_argument("--gate-factor", type=float, default=None,
+                    help="enable the surrogate gate: prune candidates whose "
+                         "predicted bound is > FACTOR x the incumbent "
+                         "(must be > 1)")
+    ap.add_argument("--shard", default=None, metavar="I/N",
+                    help="run only cells i, i+n, i+2n, ... of the sorted "
+                         "arch x shape grid (merge shards with "
+                         "repro.launch.merge_db)")
     args = ap.parse_args()
+
+    if args.gate_factor is not None and args.gate_factor <= 1.0:
+        ap.error(f"--gate-factor must be > 1, got {args.gate_factor}")
+
+    shard = None
+    if args.shard:
+        try:
+            i, n = (int(x) for x in args.shard.split("/"))
+        except ValueError:
+            ap.error(f"--shard must look like i/n, got {args.shard!r}")
+        if not (0 <= i < n):
+            ap.error(f"--shard index must satisfy 0 <= i < n, got {args.shard}")
+        shard = (i, n)
 
     archs = list(ARCH_NAMES) if args.archs == "all" else args.archs.split(",")
     shapes = ([s.name for s in SHAPES] if args.shapes == "all"
@@ -232,7 +328,8 @@ def main():
     run_campaign(archs, shapes, mesh, mesh_name, out_dir=args.out,
                  iterations=args.iterations, budget=args.budget,
                  workers=args.workers, llm_client=llm_client,
-                 resume=not args.force)
+                 strategy=args.strategy, gate_factor=args.gate_factor,
+                 shard=shard, resume=not args.force)
 
 
 if __name__ == "__main__":

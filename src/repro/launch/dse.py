@@ -37,8 +37,17 @@ def main():
     ap.add_argument("--approve", action="store_true",
                     help="human-in-the-loop: confirm each accepted design")
     ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
+    ap.add_argument("--strategy", default="ensemble",
+                    choices=["greedy", "llm", "anneal", "evolve", "ensemble"],
+                    help="search strategy (see repro.search)")
+    ap.add_argument("--gate-factor", type=float, default=None,
+                    help="enable the surrogate gate: prune candidates whose "
+                         "predicted bound is > FACTOR x the incumbent "
+                         "(must be > 1)")
     ap.add_argument("--report", default=None, help="write the loop report JSON here")
     args = ap.parse_args()
+    if args.gate_factor is not None and args.gate_factor <= 1.0:
+        ap.error(f"--gate-factor must be > 1, got {args.gate_factor}")
 
     from repro.core.cost_db import CostDB, featurize
     from repro.core.cost_model import CostModel
@@ -49,6 +58,7 @@ def main():
     from repro.core.loop import DSELoop
     from repro.core.rag import CodeIndex
     from repro.launch.mesh import make_mesh, make_production_mesh
+    from repro.search import SurrogateGate, make_strategy
 
     if args.mesh == "pod":
         mesh, mesh_name = make_production_mesh(), "pod16x16"
@@ -72,12 +82,19 @@ def main():
     cache = None if args.no_cache else DryRunCache.beside(db.path)
     evaluator = Evaluator(mesh, mesh_name, cache=cache,
                           max_workers=max(args.workers, 1))
+    gate = (SurrogateGate(cost_model, factor=args.gate_factor)
+            if args.gate_factor is not None else None)
     loop = DSELoop(evaluator=evaluator, db=db,
-                   llm_stack=stack, cost_model=cost_model, approve_fn=approve)
+                   llm_stack=stack, cost_model=cost_model, approve_fn=approve,
+                   strategy=make_strategy(args.strategy, llm_stack=stack),
+                   gate=gate)
     report = loop.run(args.arch, args.shape, iterations=args.iterations,
                       eval_budget=args.budget)
     if cache is not None:
         print(f"dry-run cache: {cache.stats()}")
+    if gate is not None:
+        print(f"surrogate gate: active={gate.active} pruned={gate.pruned_total} "
+              f"val_rmse={gate.last_rmse:.3f} (n={gate.last_val_n})")
 
     if args.report:
         out = {

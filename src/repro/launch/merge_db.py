@@ -1,0 +1,173 @@
+"""Merge per-shard campaign outputs into one canonical campaign directory.
+
+A sharded campaign (``repro.launch.campaign --shard i/n``) leaves n disjoint
+output dirs, each with its own ``cost_db.jsonl``, ``reports/`` and
+``dryrun_cache/``. This CLI folds them into one:
+
+* **cost DB** — records deduplicated by ``(arch, shape, mesh,
+  point.__key__)``, keeping the *earliest* record (by timestamp, then input
+  order); the merged JSONL is timestamp-sorted so the result reads like one
+  chronological campaign;
+* **reports** — per-cell report JSONs copied over (shards own disjoint
+  cells; on a collision the earliest-mtime report wins and a warning is
+  printed);
+* **dryrun cache** — content-addressed entries unioned (existing entries are
+  never overwritten — they are identical by construction);
+* **leaderboard** — rebuilt from the merged DB + the merged report set,
+  using the same ranking/serialization as ``run_campaign``. With the
+  deterministic mock LLM this reproduces the single-process
+  ``leaderboard.json`` byte-for-byte (tier-1 asserts it).
+
+Usage:
+
+    PYTHONPATH=src python -m repro.launch.merge_db \\
+        artifacts/shard0 artifacts/shard1 --out artifacts/campaign
+
+Pure file manipulation — no jax import, safe to run anywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+from pathlib import Path
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.cost_db import CostDB, DataPoint
+from repro.launch.campaign import build_leaderboard
+
+
+def merge_cost_dbs(shard_dbs: Sequence[Path], out_db: Path,
+                   ) -> Tuple[int, int]:
+    """Merge shard JSONL DBs into ``out_db``; returns (kept, dropped_dups).
+    Identity is ``(arch, shape, mesh, point.__key__, status)``; the earliest
+    record (timestamp, then input order) wins. Status is part of the
+    identity so a gate-``pruned`` prediction and the later *measured* row
+    for the same design both survive — exactly the pair a single-process
+    campaign's DB holds when the gate relaxes and a once-pruned design gets
+    compiled. Unreadable lines are skipped."""
+    rows: List[DataPoint] = []
+    for p in shard_dbs:
+        if not p.exists():
+            continue
+        for line in p.read_text().splitlines():
+            if not line.strip():
+                continue
+            try:
+                rows.append(DataPoint.from_json(line))
+            except (json.JSONDecodeError, TypeError):
+                print(f"merge_db: skipping unreadable row in {p}")
+    rows.sort(key=lambda d: d.ts or 0.0)  # stable: input order breaks ties
+    seen = set()
+    kept: List[DataPoint] = []
+    for d in rows:
+        ident = (d.arch, d.shape, d.mesh, d.point.get("__key__"), d.status)
+        if ident[3] is not None and ident in seen:
+            continue
+        seen.add(ident)
+        kept.append(d)
+    out_db.parent.mkdir(parents=True, exist_ok=True)
+    with out_db.open("w") as f:
+        f.write("".join(d.to_json() + "\n" for d in kept))
+    return len(kept), len(rows) - len(kept)
+
+
+def merge_reports(shard_dirs: Sequence[Path], out_dir: Path) -> List[Path]:
+    """Copy per-cell report JSONs into ``out_dir/reports``. Shards own
+    disjoint cells; on a collision the earliest-mtime file wins."""
+    dest = out_dir / "reports"
+    dest.mkdir(parents=True, exist_ok=True)
+    srcs: Dict[str, Path] = {}
+    for sd in shard_dirs:
+        for f in sorted((sd / "reports").glob("*.json")):
+            prev = srcs.get(f.name)
+            if prev is None:
+                srcs[f.name] = f
+            else:
+                keep, drop = ((prev, f) if prev.stat().st_mtime <= f.stat().st_mtime
+                              else (f, prev))
+                print(f"merge_db: duplicate report {f.name}: keeping "
+                      f"{keep} (earlier), ignoring {drop}")
+                srcs[f.name] = keep
+    out = []
+    for name, src in sorted(srcs.items()):
+        shutil.copyfile(src, dest / name)
+        out.append(dest / name)
+    return out
+
+
+def merge_caches(shard_dirs: Sequence[Path], out_dir: Path) -> int:
+    """Union the content-addressed dry-run caches (same key = same record,
+    so existing entries are never overwritten). Returns entries copied."""
+    dest = out_dir / "dryrun_cache"
+    dest.mkdir(parents=True, exist_ok=True)
+    n = 0
+    for sd in shard_dirs:
+        for f in sorted((sd / "dryrun_cache").glob("*.json")):
+            target = dest / f.name
+            if not target.exists():
+                shutil.copyfile(f, target)
+                n += 1
+    return n
+
+
+def rebuild_leaderboard(out_dir: Path) -> Path:
+    """Reconstruct cell rows from the merged report set and rank them with
+    the same ``build_leaderboard`` + serialization as ``run_campaign``."""
+    rows: List[Dict] = []
+    for f in (out_dir / "reports").glob("*.json"):
+        parts = f.stem.split("__")
+        if len(parts) != 3:
+            print(f"merge_db: skipping unrecognized report name {f.name}")
+            continue
+        arch, shape, mesh = parts
+        d = json.loads(f.read_text())
+        rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                     "status": d.get("status", "complete"),
+                     "improvement": d.get("improvement")})
+    rows.sort(key=lambda c: (c["arch"], c["shape"], c["mesh"]))
+    db = CostDB(out_dir / "cost_db.jsonl")
+    lb_path = out_dir / "leaderboard.json"
+    lb_path.write_text(json.dumps(build_leaderboard(db, rows), indent=1,
+                                  default=str))
+    return lb_path
+
+
+def merge(shard_dirs: Sequence[Path | str], out_dir: Path | str,
+          verbose: bool = True) -> Dict:
+    shard_dirs = [Path(s) for s in shard_dirs]
+    out_dir = Path(out_dir)
+    for sd in shard_dirs:
+        if not sd.is_dir():
+            raise FileNotFoundError(f"shard dir {sd} does not exist")
+    if out_dir in shard_dirs:
+        raise ValueError("--out must not be one of the shard dirs")
+    kept, dups = merge_cost_dbs([sd / "cost_db.jsonl" for sd in shard_dirs],
+                                out_dir / "cost_db.jsonl")
+    reports = merge_reports(shard_dirs, out_dir)
+    cached = merge_caches(shard_dirs, out_dir)
+    lb_path = rebuild_leaderboard(out_dir)
+    summary = {
+        "shards": [str(s) for s in shard_dirs],
+        "out": str(out_dir),
+        "datapoints": kept, "duplicates_dropped": dups,
+        "reports": len(reports), "cache_entries_copied": cached,
+        "leaderboard": str(lb_path),
+    }
+    if verbose:
+        print(f"merge_db: {summary}")
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="merge sharded campaign outputs (cost DBs, reports, "
+                    "dry-run caches) and rebuild one leaderboard")
+    ap.add_argument("shards", nargs="+", help="per-shard campaign --out dirs")
+    ap.add_argument("--out", required=True, help="merged campaign dir")
+    args = ap.parse_args()
+    merge(args.shards, args.out)
+
+
+if __name__ == "__main__":
+    main()

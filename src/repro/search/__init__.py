@@ -1,0 +1,53 @@
+"""Pluggable search-strategy subsystem for the SECDA-DSE loop.
+
+``DSELoop`` orchestrates (seed -> propose -> gate -> evaluate -> observe ->
+fine-tune); the strategies here decide where to look. ``make_strategy``
+builds any registered strategy by name — ``--strategy`` on the ``dse`` and
+``campaign`` CLIs resolves through it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.search.annealing import SimulatedAnnealing
+from repro.search.base import (Candidate, SearchState, SearchStrategy,
+                               best_negative, bound_of, point_of,
+                               rank_candidates, select_candidates)
+from repro.search.ensemble import Ensemble
+from repro.search.evolutionary import Evolutionary
+from repro.search.gate import SurrogateGate
+from repro.search.greedy import GreedyNeighborhood
+from repro.search.llm_guided import LLMGuided
+
+STRATEGIES = ("greedy", "llm", "anneal", "evolve", "ensemble")
+
+
+def make_strategy(name: str, *, llm_stack=None, seed: int = 0) -> SearchStrategy:
+    """Build a fresh strategy instance (strategies carry per-cell state —
+    campaigns must construct one per (arch, shape, mesh) cell)."""
+    if name == "greedy":
+        return GreedyNeighborhood(seed=seed)
+    if name == "llm":
+        if llm_stack is None:
+            raise ValueError("strategy 'llm' needs llm_stack=")
+        return LLMGuided(llm_stack)
+    if name == "anneal":
+        return SimulatedAnnealing(seed=seed)
+    if name == "evolve":
+        return Evolutionary(seed=seed)
+    if name == "ensemble":
+        members: list = [GreedyNeighborhood(seed=seed)]
+        if llm_stack is not None:
+            members.append(LLMGuided(llm_stack))
+        members += [SimulatedAnnealing(seed=seed), Evolutionary(seed=seed)]
+        return Ensemble(members)
+    raise ValueError(f"unknown strategy {name!r}; have {STRATEGIES}")
+
+
+__all__ = [
+    "Candidate", "SearchState", "SearchStrategy", "STRATEGIES",
+    "GreedyNeighborhood", "LLMGuided", "SimulatedAnnealing", "Evolutionary",
+    "Ensemble", "SurrogateGate", "make_strategy",
+    "best_negative", "bound_of", "point_of", "rank_candidates",
+    "select_candidates",
+]

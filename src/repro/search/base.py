@@ -1,0 +1,136 @@
+"""Pluggable search-strategy protocol (SECDA-DSE's interchangeable engines).
+
+The paper's pitch is that the DSE Explorer and the LLM Stack are
+*interchangeable proposal engines* feeding one evaluation loop. This module
+makes that literal: a :class:`SearchStrategy` is anything with
+
+    propose(state)  -> candidates to evaluate this iteration
+    observe(dps)    -> ingest the evaluated results (positive AND negative)
+
+``DSELoop`` owns the rest (dedupe, surrogate ranking, the surrogate gate,
+batch evaluation, DB appends, periodic fine-tuning); strategies only decide
+*where to look next*. Every candidate carries a provenance ``source`` tag
+that lands in the cost DB's ``source`` field, so credit assignment (see
+:class:`~repro.search.ensemble.Ensemble`) is reconstructable from the DB
+alone.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.cost_db import CostDB, DataPoint, featurize
+from repro.core.design_space import PlanPoint, PlanTemplate
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """A proposed design plus its provenance (recorded as DB ``source``)."""
+
+    point: PlanPoint
+    source: str
+
+
+@dataclass
+class SearchState:
+    """Read-only view of the loop's state handed to strategies each iteration."""
+
+    arch: str
+    shape: str
+    cfg: Any
+    cell: Any
+    template: PlanTemplate
+    db: CostDB
+    iteration: int
+    budget: int
+    incumbent: Optional[DataPoint]
+    pool: List[DataPoint] = field(default_factory=list)
+    cost_model: Any = None  # Optional[CostModel]; avoids a jax import here
+    workload: Dict[str, float] = field(default_factory=dict)
+
+
+@runtime_checkable
+class SearchStrategy(Protocol):
+    """propose(state) -> candidates; observe(datapoints) -> None."""
+
+    name: str
+
+    def propose(self, state: SearchState) -> List[Candidate]: ...
+
+    def observe(self, datapoints: Sequence[DataPoint]) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+def point_of(dp: DataPoint) -> PlanPoint:
+    """A DataPoint's design, stripped of the derived ``__key__`` entry."""
+    return PlanPoint(dims={k: v for k, v in dp.point.items() if k != "__key__"})
+
+
+def bound_of(dp: Optional[DataPoint]) -> Optional[float]:
+    if dp is None or dp.status != "ok":
+        return None
+    return dp.metrics.get("bound_s")
+
+
+def best_negative(db: CostDB, arch: str, shape: str,
+                  incumbent: DataPoint) -> Optional[DataPoint]:
+    """Fastest *infeasible* design that beats the incumbent's bound — the
+    paper's §3.2.2 negative-datapoint chaining seed."""
+    inc = incumbent.metrics.get("bound_s") or float("inf")
+    neg = [d for d in db.query(arch, shape, "infeasible")
+           if d.metrics.get("bound_s") and d.metrics["bound_s"] < 0.9 * inc]
+    return min(neg, key=lambda d: d.metrics["bound_s"]) if neg else None
+
+
+def rank_candidates(state: SearchState,
+                    cands: Sequence[Candidate]) -> List[Candidate]:
+    """Surrogate pre-ranking (cheapest-predicted-bound first); insertion
+    order when the model is absent/untrained — exactly the old Explorer
+    behavior, now shared by the loop and the Ensemble's per-member cuts."""
+    cm = state.cost_model
+    if cm is None or not getattr(cm, "trained", False) or not cands:
+        return list(cands)
+    feats = np.stack([featurize(dict(c.point.dims), state.workload)
+                      for c in cands])
+    order = cm.rank_candidates(feats)
+    return [cands[i] for i in order]
+
+
+def select_candidates(state: SearchState, cands: Sequence[Candidate],
+                      ) -> List[Candidate]:
+    """The shared selection pipeline (DSELoop, Explorer): dedupe against the
+    cell's *measured* design keys (gate-pruned designs stay proposable) and
+    in-batch, surrogate-rank, truncate to the iteration budget."""
+    seen = state.db.keys(state.arch, state.shape, include_pruned=False)
+    uniq: Dict[str, Candidate] = {}
+    for c in cands:
+        k = c.point.key()
+        if k not in seen and k not in uniq:
+            uniq[k] = c
+    return rank_candidates(state, list(uniq.values()))[: state.budget]
+
+
+def repair(template: PlanTemplate, point: PlanPoint) -> PlanPoint:
+    """Cross-dimension repair mirroring ``PlanTemplate.random_points``: a
+    microbatch/batch-rule clash is fixed by dropping to microbatches=1."""
+    ok, _ = template.validate(point)
+    if not ok:
+        point = PlanPoint(dims={**point.dims, "microbatches": 1})
+    return point
+
+
+def mutate(template: PlanTemplate, point: PlanPoint, rng: random.Random,
+           n_dims: int = 1) -> PlanPoint:
+    """Mutate ``n_dims`` randomly-chosen dimensions to random legal values."""
+    legal = template.dims()
+    keys = sorted(legal)
+    dims = dict(point.dims)
+    for k in rng.sample(keys, min(n_dims, len(keys))):
+        pool = [v for v in legal[k] if v != dims.get(k)] or list(legal[k])
+        dims[k] = pool[rng.randrange(len(pool))]
+    return repair(template, PlanPoint(dims=dims))

@@ -1,0 +1,108 @@
+"""Budget-splitting ensemble with bandit-style credit assignment.
+
+Each iteration the per-iteration evaluation budget is divided among member
+strategies in proportion to their credit — an exponentially-decayed count of
+incumbent improvements their candidates produced. Because every candidate's
+provenance is recorded in the cost DB ``source`` field (``search:<member>``),
+the credit ledger is reconstructable offline from the DB alone.
+
+Allocation uses largest-remainder rounding and, when the budget allows,
+guarantees every member at least one slot — a standing exploration floor so
+a cold strategy can always earn credit back (the classic bandit tension).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.cost_db import DataPoint
+from repro.search.base import (Candidate, SearchState, SearchStrategy,
+                               bound_of, rank_candidates)
+
+
+@dataclass
+class Ensemble:
+    members: List[SearchStrategy]
+    name: str = "ensemble"
+    decay: float = 0.8    # credit half-life ~3 iterations
+    credit: Dict[str, float] = field(default_factory=dict)
+
+    _best_seen: Optional[float] = field(default=None, init=False)
+
+    def __post_init__(self):
+        for m in self.members:
+            self.credit.setdefault(m.name, 0.0)
+
+    # ------------------------------------------------------------------
+    def allocation(self, budget: int) -> Dict[str, int]:
+        """Split ``budget`` proportionally to (1 + credit), largest remainder."""
+        if budget <= 0 or not self.members:
+            return {m.name: 0 for m in self.members}
+        weights = {m.name: 1.0 + self.credit.get(m.name, 0.0) for m in self.members}
+        total = sum(weights.values())
+        floor = 1 if budget >= len(self.members) else 0
+        spendable = budget - floor * len(self.members)
+        exact = {n: spendable * w / total for n, w in weights.items()}
+        alloc = {n: floor + int(exact[n]) for n in weights}
+        # largest remainder, ties broken by member order (deterministic)
+        remainders = sorted(weights, key=lambda n: (-(exact[n] - int(exact[n])),
+                                                    [m.name for m in self.members].index(n)))
+        for n in remainders[: budget - sum(alloc.values())]:
+            alloc[n] += 1
+        return alloc
+
+    def propose(self, state: SearchState) -> List[Candidate]:
+        # credit baseline = the loop's actual incumbent (which includes the
+        # expert seed the members never proposed) — beating a stale
+        # internal best-seen is not an improvement worth budget
+        inc_b = bound_of(state.incumbent)
+        if inc_b is not None and (self._best_seen is None
+                                  or inc_b < self._best_seen):
+            self._best_seen = inc_b
+        alloc = self.allocation(state.budget)
+        # dedupe against the DB *before* cutting each member to its share —
+        # otherwise a member re-proposing already-evaluated designs (greedy
+        # around an unchanged incumbent) silently shrinks the iteration.
+        # Measured keys only: gate-pruned designs remain proposable.
+        seen = set(state.db.keys(state.arch, state.shape,
+                                 include_pruned=False))
+        out: List[Candidate] = []
+        surplus: List[Candidate] = []
+        for m in self.members:
+            share = alloc.get(m.name, 0)
+            if share <= 0:
+                continue
+            sub = replace(state, budget=share)
+            # each member's cut is surrogate-ranked before truncation so a
+            # wide proposer (greedy's full neighborhood) spends its share well
+            taken = 0
+            for c in rank_candidates(sub, m.propose(sub)):
+                k = c.point.key()
+                if k in seen:
+                    continue
+                seen.add(k)
+                if taken < share:
+                    out.append(c)
+                    taken += 1
+                else:
+                    surplus.append(c)
+        # a member that ran out of novel designs forfeits its slots to the
+        # others' surplus, keeping the evaluation budget fully spent
+        out += surplus[: state.budget - len(out)]
+        return out
+
+    def observe(self, datapoints: Sequence[DataPoint]) -> None:
+        for name in self.credit:
+            self.credit[name] *= self.decay
+        for d in datapoints:
+            if d.status != "ok" or not d.metrics.get("bound_s"):
+                continue
+            b = d.metrics["bound_s"]
+            if self._best_seen is None or b < self._best_seen:
+                if self._best_seen is not None:  # an actual improvement
+                    name = d.source.split(":", 1)[-1]
+                    if name in self.credit:
+                        self.credit[name] += 1.0
+                self._best_seen = b
+        for m in self.members:
+            m.observe(datapoints)

@@ -1,0 +1,73 @@
+"""Surrogate-gated evaluation: skip compiles the cost model rules out.
+
+LLM-DSE's "amortize expensive evaluations" lever: before a candidate reaches
+a dry-run compile, predict its roofline bound with the learned surrogate and
+prune it when the prediction is more than ``factor``x off the incumbent.
+Pruned candidates are recorded as ``pruned`` data points carrying the
+prediction (so RAG retrieval still surfaces them and later analysis can
+audit the gate) — they are *not* used as fine-tuning targets, since they
+have no measured outcome (see ``CostDB.training_set``).
+
+Calibration guard: the gate stays disabled until the surrogate's validation
+RMSE on held-out DB rows (a deterministic ~20% key-hash split the model
+never trains on) drops below ``max_val_rmse`` decades of log10(bound).
+``require_calibration=False`` bypasses the guard — benchmarks/tests only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost_db import CostDB, featurize
+from repro.core.design_space import PlanPoint
+
+
+@dataclass
+class SurrogateGate:
+    cost_model: object  # CostModel (typed loosely: jax import stays deferred)
+    factor: float = 4.0
+    max_val_rmse: float = 0.35   # decades of log10(bound_s)
+    min_val_points: int = 4
+    require_calibration: bool = True
+
+    last_rmse: float = field(default=float("nan"), init=False)
+    last_val_n: int = field(default=0, init=False)
+    pruned_total: int = field(default=0, init=False)
+    _active: bool = field(default=False, init=False)
+
+    @property
+    def active(self) -> bool:
+        return self._active
+
+    def calibrate(self, db: CostDB) -> bool:
+        """(Re)measure held-out validation error; enable/disable the gate."""
+        cm = self.cost_model
+        if cm is None or not getattr(cm, "trained", False):
+            self._active = False
+            return False
+        if not self.require_calibration:
+            self._active = True
+            return True
+        rmse, n = cm.validation_error(db)
+        self.last_rmse, self.last_val_n = rmse, n
+        self._active = bool(n >= self.min_val_points and rmse <= self.max_val_rmse)
+        return self._active
+
+    def prune_verdicts(self, points: Sequence[PlanPoint], workload: dict,
+                       incumbent_bound: Optional[float],
+                       ) -> List[Optional[Tuple[float, float]]]:
+        """Per-point verdict: ``None`` = evaluate; ``(predicted_bound_s,
+        p_feasible)`` = prune. Inactive gate / no incumbent = all pass."""
+        if not self._active or incumbent_bound is None or not points:
+            return [None] * len(points)
+        feats = np.stack([featurize(dict(p.dims), workload) for p in points])
+        b, pf = self.cost_model.predict(feats)
+        out: List[Optional[Tuple[float, float]]] = []
+        for bi, pfi in zip(b, pf):
+            pred = float(10.0 ** float(bi))
+            out.append((pred, float(pfi))
+                       if pred > self.factor * incumbent_bound else None)
+        self.pruned_total += sum(v is not None for v in out)
+        return out

@@ -1,0 +1,41 @@
+"""LLM-guided refinement as a SearchStrategy — wraps the LLM Stack.
+
+Chains from the incumbent AND (paper §3.2.2) the fastest *infeasible* prior
+design, so memory-violating near-winners seed memory-fixing refinements.
+Unparseable or template-violating responses become ``rejected`` negative
+data points appended straight to the DB (never silently dropped).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+from repro.core.cost_db import DataPoint
+from repro.core.llm_stack import LLMStack
+from repro.search.base import (Candidate, SearchState, best_negative,
+                               point_of)
+
+
+@dataclass
+class LLMGuided:
+    llm_stack: LLMStack
+    name: str = "llm"
+
+    def propose(self, state: SearchState) -> List[Candidate]:
+        if state.incumbent is None:
+            return []
+        seeds = [(point_of(state.incumbent), state.incumbent)]
+        neg = best_negative(state.db, state.arch, state.shape, state.incumbent)
+        if neg is not None:
+            seeds.append((point_of(neg), neg))
+        out: List[Candidate] = []
+        for pt, dp in seeds:
+            valid, rejected, _raw = self.llm_stack.propose(
+                state.arch, state.shape, state.cfg, state.cell,
+                state.template, pt, dp.metrics, k=max(state.budget, 1))
+            state.db.append_many(rejected)
+            out += [Candidate(p, f"search:{self.name}") for p in valid]
+        return out
+
+    def observe(self, datapoints: Sequence[DataPoint]) -> None:
+        pass  # the stack re-reads the DB (RAG context) on every propose

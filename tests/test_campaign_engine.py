@@ -58,6 +58,29 @@ def test_dryrun_cache_beside_db(tmp_path):
     assert c.root.is_dir()
 
 
+def test_dryrun_cache_corruption_is_a_miss(tmp_path):
+    """A truncated/invalid cache entry must read as a miss (recompile), never
+    crash the batch or poison the campaign resume path."""
+    rec = {"status": "ok", "compile_s": 1.5, "roofline": {"bound_s": 2.0}}
+    c = DryRunCache(tmp_path / "cache")
+    c.put("a1", "s1", "m1", "k1", rec)
+    entry = c.root / f"{DryRunCache.key_for('a1', 's1', 'm1', 'k1')}.json"
+
+    for corruption in (json.dumps(rec)[: len(json.dumps(rec)) // 2],  # truncated
+                       "", "not json at all {{{"):
+        entry.write_text(corruption)
+        fresh = DryRunCache(tmp_path / "cache")  # no warm in-memory copy
+        assert fresh.get("a1", "s1", "m1", "k1") is None
+        assert fresh.stats()["misses"] == 1
+        # the recompile's put() repairs the entry for the next reader
+        fresh.put("a1", "s1", "m1", "k1", rec)
+        assert DryRunCache(tmp_path / "cache").get("a1", "s1", "m1", "k1") == rec
+
+    # the corrupted file never poisons an already-warm instance either
+    entry.write_text("garbage")
+    assert c.get("a1", "s1", "m1", "k1") == rec  # served from memory
+
+
 def test_leaderboard_ranks_and_keeps_failures(tmp_path):
     from repro.core.cost_db import CostDB, DataPoint
     from repro.launch.campaign import build_leaderboard
@@ -150,6 +173,20 @@ def test_cache_hits_skip_recompilation(tmp_path):
         dp3 = ev2.evaluate("qwen3-0.6b", "train_4k", base)
         assert dryrun.N_COMPILES == 1 and ev2.compile_count == 0
         assert dp3.metrics == dp1.metrics
+
+        # corrupt the entry on disk: treated as a miss -> recompiled, and
+        # the repaired entry serves the next evaluator without compiling
+        entry = next(cache.root.glob("*.json"))
+        entry.write_text(entry.read_text()[:40])
+        ev3 = Evaluator(mesh, "tiny1x1", artifact_dir=r"{tmp_path}/a",
+                        cache=DryRunCache(r"{tmp_path}/cache"), max_workers=1)
+        dp4 = ev3.evaluate("qwen3-0.6b", "train_4k", base)
+        assert dryrun.N_COMPILES == 2 and ev3.compile_count == 1, dryrun.N_COMPILES
+        assert dp4.status == "ok" and dp4.metrics["bound_s"] == dp1.metrics["bound_s"]
+        ev4 = Evaluator(mesh, "tiny1x1", artifact_dir=r"{tmp_path}/a",
+                        cache=DryRunCache(r"{tmp_path}/cache"), max_workers=1)
+        assert ev4.evaluate("qwen3-0.6b", "train_4k", base).status == "ok"
+        assert dryrun.N_COMPILES == 2 and ev4.compile_count == 0
         print("CACHE_OK")
     """, n_devices=1, timeout=900)
     assert "CACHE_OK" in out

@@ -1,0 +1,404 @@
+"""Search-strategy subsystem: protocol, the four strategies, the budget
+ensemble, the surrogate gate, and the cost-DB key index they lean on."""
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, SHAPE_BY_NAME, get_config
+from repro.core.cost_db import CostDB, DataPoint, featurize, workload_features
+from repro.core.design_space import PlanPoint, PlanTemplate, baseline_point
+from repro.search import (Candidate, Ensemble, Evolutionary,
+                          GreedyNeighborhood, SearchState, SimulatedAnnealing,
+                          STRATEGIES, SurrogateGate, make_strategy)
+from repro.search.base import point_of, rank_candidates, select_candidates
+
+MESH = {"data": 16, "model": 16}
+ARCH, SHAPE = "llama3-8b", "train_4k"
+
+
+def _template():
+    return PlanTemplate(get_config(ARCH), SHAPE_BY_NAME[SHAPE], MESH)
+
+
+def _dp(bound=1.0, status="ok", source="expert", **dims) -> DataPoint:
+    cfg, cell = get_config(ARCH), SHAPE_BY_NAME[SHAPE]
+    t = _template()
+    p = PlanPoint(dims={**baseline_point(cell, t).dims, **dims})
+    return DataPoint(arch=ARCH, shape=SHAPE, mesh="m",
+                     point={**p.dims, "__key__": p.key()}, status=status,
+                     source=source,
+                     metrics={"workload": workload_features(cfg, cell),
+                              "bound_s": bound, "fits_hbm": status == "ok",
+                              "dominant": "collective"})
+
+
+def _state(db, incumbent, budget=3, iteration=1, cost_model=None) -> SearchState:
+    cfg, cell = get_config(ARCH), SHAPE_BY_NAME[SHAPE]
+    return SearchState(arch=ARCH, shape=SHAPE, cfg=cfg, cell=cell,
+                       template=_template(), db=db, iteration=iteration,
+                       budget=budget, incumbent=incumbent,
+                       pool=[incumbent] if incumbent else [],
+                       cost_model=cost_model,
+                       workload=workload_features(cfg, cell))
+
+
+# ---------------------------------------------------------------------------
+# registry + protocol
+# ---------------------------------------------------------------------------
+def test_registry_builds_every_strategy():
+    class _Stack:  # llm strategies only need .propose at call time
+        pass
+
+    assert set(STRATEGIES) == {"greedy", "llm", "anneal", "evolve", "ensemble"}
+    for name in STRATEGIES:
+        s = make_strategy(name, llm_stack=_Stack())
+        assert hasattr(s, "propose") and hasattr(s, "observe") and s.name
+
+    with pytest.raises(ValueError):
+        make_strategy("nope")
+    with pytest.raises(ValueError):
+        make_strategy("llm")  # needs llm_stack
+
+
+# ---------------------------------------------------------------------------
+# greedy: the extracted Explorer policy
+# ---------------------------------------------------------------------------
+def test_greedy_proposes_neighborhood_plus_randoms(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    inc = _dp()
+    cands = GreedyNeighborhood().propose(_state(db, inc))
+    assert len(cands) > 10
+    assert all(c.source == "search:greedy" for c in cands)
+    t = _template()
+    inc_pt = point_of(inc)
+    n_single = sum(
+        1 for c in cands
+        if sum(c.point.dims.get(k) != inc_pt.dims.get(k)
+               for k in c.point.dims) == 1)
+    assert n_single >= 10  # the single-dimension permutation set is in there
+    for c in cands[:-1]:  # all neighbors legal (the random tail is repaired)
+        ok, why = t.validate(c.point)
+        assert ok, why
+
+
+# ---------------------------------------------------------------------------
+# simulated annealing
+# ---------------------------------------------------------------------------
+def test_annealing_accepts_better_and_cools(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    inc = _dp(bound=4.0)
+    sa = SimulatedAnnealing(seed=3)
+    t0 = sa.temperature
+    cands = sa.propose(_state(db, inc, budget=3))
+    assert len(cands) == 3
+    assert all(c.source == "search:anneal" for c in cands)
+    t = _template()
+    for c in cands:
+        ok, why = t.validate(c.point)
+        assert ok, why
+
+    # a strictly better evaluated candidate is always adopted as the walker
+    better = cands[0].point
+    dp = DataPoint(arch=ARCH, shape=SHAPE, mesh="m",
+                   point={**better.dims, "__key__": better.key()}, status="ok",
+                   metrics={"bound_s": 2.0, "workload": {}})
+    sa.observe([dp])
+    assert sa._current[0].dims == dict(better.dims)
+    assert sa._current[1] == 2.0
+    assert sa.temperature < t0  # geometric cooling
+
+    # deterministic: same seed, same state -> same proposals
+    sa2 = SimulatedAnnealing(seed=3)
+    cands2 = sa2.propose(_state(db, inc, budget=3))
+    assert [c.point.key() for c in cands2] == [c.point.key() for c in cands]
+
+
+def test_annealing_radius_shrinks_when_cold(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    inc = _dp(bound=4.0)
+    sa = SimulatedAnnealing(seed=0)
+    for _ in range(30):  # cool to t_min
+        sa.observe([])
+    cands = sa.propose(_state(db, inc, budget=6, iteration=9))
+    inc_pt = point_of(inc)
+    for c in cands:  # cold walker = (near-)single-dimension moves
+        n_changed = sum(c.point.dims.get(k) != inc_pt.dims.get(k)
+                        for k in c.point.dims)
+        assert n_changed <= 2  # 1 mutation + possible microbatch repair
+
+
+# ---------------------------------------------------------------------------
+# evolutionary
+# ---------------------------------------------------------------------------
+def test_evolutionary_crossover_recombines_parents(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    ev = Evolutionary(seed=1, p_mutate=0.0)  # pure crossover
+    parents = [_dp(bound=1.0, remat="dots"), _dp(bound=2.0, microbatches=2)]
+    ev.observe(parents)
+    assert len(ev.population()) == 2
+    cands = ev.propose(_state(db, parents[0], budget=5))
+    assert len(cands) == 5
+    assert all(c.source == "search:evolve" for c in cands)
+    t = _template()
+    parent_dims = [dict(point_of(p).dims) for p in parents]
+    for c in cands:
+        ok, why = t.validate(c.point)
+        assert ok, why
+        for k, v in c.point.dims.items():
+            if k == "microbatches":  # repair may reset it
+                continue
+            assert any(v == pd.get(k) for pd in parent_dims), (k, v)
+
+
+def test_evolutionary_seeds_population_from_db(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    db.append(_dp(bound=1.5, remat="none"))
+    db.append(_dp(bound=9.0, status="infeasible"))  # negatives excluded
+    ev = Evolutionary(seed=0)
+    ev.propose(_state(db, None, budget=1))
+    assert len(ev.population()) == 1  # only the feasible row joined the pool
+
+
+# ---------------------------------------------------------------------------
+# ensemble: budget split + bandit credit
+# ---------------------------------------------------------------------------
+class _Stub:
+    def __init__(self, name, points):
+        self.name = name
+        self._points = points
+        self.observed = []
+
+    def propose(self, state):
+        return [Candidate(p, f"search:{self.name}")
+                for p in self._points[: state.budget]]
+
+    def observe(self, dps):
+        self.observed.append(list(dps))
+
+
+def test_ensemble_splits_budget_and_tags_sources(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    t = _template()
+    pts = t.random_points(__import__("random").Random(0), 8)
+    a, b = _Stub("a", pts[:4]), _Stub("b", pts[4:])
+    ens = Ensemble([a, b])
+    cands = ens.propose(_state(db, _dp(), budget=4))
+    assert len(cands) == 4
+    srcs = {c.source for c in cands}
+    assert srcs == {"search:a", "search:b"}  # both members got slots
+
+
+def test_ensemble_credit_follows_winning_source(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    ens = Ensemble([_Stub("a", []), _Stub("b", [])])
+    # b's candidates keep improving the best-seen bound; a's never do
+    ens.observe([_dp(bound=4.0, source="search:a")])  # first sets best_seen
+    ens.observe([_dp(bound=3.0, source="search:b")])
+    ens.observe([_dp(bound=2.0, source="search:b"),
+                 _dp(bound=5.0, source="search:a")])
+    assert ens.credit["b"] > ens.credit["a"]
+    alloc = ens.allocation(10)
+    assert alloc["b"] > alloc["a"]
+    assert sum(alloc.values()) == 10
+    assert min(alloc.values()) >= 1  # exploration floor
+    # members saw every observation (they filter for themselves)
+    assert len(ens.members[0].observed) == 3
+
+
+# ---------------------------------------------------------------------------
+# surrogate gate
+# ---------------------------------------------------------------------------
+class _StubModel:
+    """Predicts a constant log10 bound; calibration report is injectable."""
+
+    def __init__(self, log_bound, rmse=0.1, n=10, trained=True):
+        self.trained = trained
+        self._log_bound, self._rmse, self._n = log_bound, rmse, n
+
+    def validation_error(self, db):
+        return self._rmse, self._n
+
+    def predict(self, feats):
+        k = feats.shape[0]
+        return np.full(k, self._log_bound), np.full(k, 0.9)
+
+
+def test_gate_calibration_guard(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    good = SurrogateGate(_StubModel(2.0, rmse=0.1, n=10), max_val_rmse=0.35)
+    assert good.calibrate(db) and good.active
+
+    bad_rmse = SurrogateGate(_StubModel(2.0, rmse=1.5, n=10), max_val_rmse=0.35)
+    assert not bad_rmse.calibrate(db)
+
+    too_few = SurrogateGate(_StubModel(2.0, rmse=0.1, n=1), min_val_points=4)
+    assert not too_few.calibrate(db)
+
+    untrained = SurrogateGate(_StubModel(2.0, trained=False),
+                              require_calibration=False)
+    assert not untrained.calibrate(db)  # never active without a trained model
+
+    forced = SurrogateGate(_StubModel(2.0, rmse=99.0, n=0),
+                           require_calibration=False)
+    assert forced.calibrate(db)  # benchmarks-only bypass
+
+    # inactive gate passes everything through
+    verdicts = bad_rmse.prune_verdicts([PlanPoint(dims={})], {}, 1.0)
+    assert verdicts == [None]
+
+
+def test_gate_prunes_hopeless_predictions(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    cell, t = SHAPE_BY_NAME[SHAPE], _template()
+    wl = workload_features(get_config(ARCH), cell)
+    pts = [baseline_point(cell, t)] + t.random_points(
+        __import__("random").Random(1), 2)
+    # predicts 100s for everything; incumbent at 1s, factor 4 -> all pruned
+    gate = SurrogateGate(_StubModel(2.0), factor=4.0)
+    gate.calibrate(db)
+    verdicts = gate.prune_verdicts(pts, wl, 1.0)
+    assert all(v is not None for v in verdicts)
+    assert all(abs(v[0] - 100.0) < 1e-6 for v in verdicts)
+    assert gate.pruned_total == len(pts)
+    # same predictions but a slow incumbent -> everything passes
+    assert gate.prune_verdicts(pts, wl, 50.0) == [None] * len(pts)
+    # no incumbent yet -> gate stands down
+    assert gate.prune_verdicts(pts, wl, None) == [None] * len(pts)
+
+
+def test_gated_evaluate_batch_records_pruned_without_compiling(tmp_path, single_mesh):
+    from repro.core.evaluator import Evaluator
+
+    db = CostDB(tmp_path / "db.jsonl")
+    cell, t = SHAPE_BY_NAME[SHAPE], PlanTemplate(
+        get_config(ARCH), SHAPE_BY_NAME[SHAPE], {"data": 1, "model": 1})
+    pts = [baseline_point(cell, t),
+           PlanPoint(dims={**baseline_point(cell, t).dims, "remat": "dots"})]
+    gate = SurrogateGate(_StubModel(2.0), factor=2.0)
+    gate.calibrate(db)
+    ev = Evaluator(single_mesh, "m1x1")
+    dps = ev.evaluate_batch(ARCH, SHAPE, pts, source=["search:a", "search:b"],
+                            iteration=3, gate=gate, incumbent_bound=1.0)
+    assert [d.status for d in dps] == ["pruned", "pruned"]
+    assert ev.compile_count == 0 and ev.pruned_count == 2
+    assert [d.source for d in dps] == ["search:a", "search:b"]  # per-point
+    for d in dps:
+        assert d.metrics["predicted_bound_s"] == pytest.approx(100.0)
+        assert d.metrics["workload"]  # RAG featurization still possible
+        assert "surrogate gate" in d.reason
+    # pruned rows are recorded in the DB but never become training targets
+    db.append_many(dps)
+    X, y, feas = db.training_set()
+    assert X.shape[0] == 0
+
+
+def test_evaluate_batch_rejects_mismatched_sources(single_mesh):
+    from repro.core.evaluator import Evaluator
+
+    cell = SHAPE_BY_NAME[SHAPE]
+    t = PlanTemplate(get_config(ARCH), cell, {"data": 1, "model": 1})
+    with pytest.raises(ValueError):
+        Evaluator(single_mesh, "m1x1").evaluate_batch(
+            ARCH, SHAPE, [baseline_point(cell, t)], source=["a", "b"])
+
+
+# ---------------------------------------------------------------------------
+# cost-DB key index (the dedupe satellite) + held-out split
+# ---------------------------------------------------------------------------
+def test_costdb_key_index_stays_current(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    assert db.keys(ARCH, SHAPE) == set()
+    d1, d2 = _dp(remat="dots"), _dp(microbatches=2)
+    db.append_many([d1, d2])
+    expect = {d1.point["__key__"], d2.point["__key__"]}
+    assert db.keys(ARCH, SHAPE) == expect
+    assert db.seen(ARCH, SHAPE, d1.point["__key__"])
+    assert not db.seen(ARCH, SHAPE, "nope")
+    # appends after the index is built keep it current (no rescan)
+    d3 = _dp(zero1=False)
+    db.append(d3)
+    assert d3.point["__key__"] in db.keys(ARCH, SHAPE)
+    # a fresh handle over the same file rebuilds the same index from disk
+    db2 = CostDB(tmp_path / "db.jsonl")
+    assert db2.keys(ARCH, SHAPE) == expect | {d3.point["__key__"]}
+    assert db2.keys("other-arch", SHAPE) == set()
+
+
+def test_costdb_pruned_keys_stay_proposable(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    measured = _dp(remat="dots")
+    pruned = _dp(microbatches=2, status="pruned")
+    db.append_many([measured, pruned])
+    pk = pruned.point["__key__"]
+    assert pk in db.keys(ARCH, SHAPE)  # recorded...
+    assert pk not in db.keys(ARCH, SHAPE, include_pruned=False)  # ...not measured
+    # select_candidates re-admits the pruned design but not the measured one
+    cands = [Candidate(point_of(measured), "x"), Candidate(point_of(pruned), "x")]
+    sel = select_candidates(_state(db, None), cands)
+    assert [c.point.key() for c in sel] == [pk]
+    # once actually evaluated, the measured status wins and sticks
+    db.append(_dp(microbatches=2, status="ok"))
+    assert pk in db.keys(ARCH, SHAPE, include_pruned=False)
+    # ...including when the index is rebuilt from disk in any row order
+    db2 = CostDB(tmp_path / "db.jsonl")
+    assert pk in db2.keys(ARCH, SHAPE, include_pruned=False)
+
+
+def test_training_set_split_partitions_rows(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    for mb in (1, 2, 4, 8):
+        for lc in (0, 512, 1024):
+            for z in (True, False):
+                db.append(_dp(bound=10.0 / mb, microbatches=mb,
+                              loss_chunk=lc, zero1=z))
+    X_all, _, _ = db.training_set()
+    X_tr, _, _ = db.training_set(split="train")
+    X_val, _, _ = db.training_set(split="val")
+    assert X_tr.shape[0] + X_val.shape[0] == X_all.shape[0] == 24
+    assert X_val.shape[0] > 0, "deterministic hash split left val empty"
+    # deterministic: same DB, same partition
+    X_val2, _, _ = CostDB(tmp_path / "db.jsonl").training_set(split="val")
+    assert X_val.shape == X_val2.shape
+
+
+def test_rank_candidates_insertion_order_without_model(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    t = _template()
+    cands = [Candidate(p, "x") for p in
+             t.random_points(__import__("random").Random(2), 4)]
+    assert rank_candidates(_state(db, None), cands) == cands
+
+
+# ---------------------------------------------------------------------------
+# soak: annealing + evolutionary drive the full loop end-to-end (excluded
+# from fast runs via the `slow` marker: real dry-run compiles)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_annealing_and_evolutionary_loops_end_to_end(tmp_path):
+    from conftest import run_subprocess
+    from test_campaign_engine import TINY_PRELUDE
+
+    out = run_subprocess(f"""{TINY_PRELUDE}
+        from repro.core.cost_db import CostDB
+        from repro.core.llm_client import MockLLM
+        from repro.core.llm_stack import LLMStack
+        from repro.core.loop import DSELoop
+        from repro.search import make_strategy
+
+        for name in ("anneal", "evolve"):
+            db = CostDB(rf"{tmp_path}/db_{{name}}.jsonl")
+            loop = DSELoop(
+                evaluator=Evaluator(mesh, "tiny1x1",
+                                    artifact_dir=rf"{tmp_path}/{{name}}",
+                                    cache=DryRunCache(rf"{tmp_path}/c_{{name}}")),
+                db=db, llm_stack=LLMStack(client=MockLLM(), db=db),
+                strategy=make_strategy(name))
+            report = loop.run("qwen3-0.6b", "train_4k", iterations=2,
+                              eval_budget=2, verbose=False)
+            assert report.baseline is not None and report.baseline.status == "ok"
+            assert report.best is not None and report.improvement() <= 1.001
+            srcs = {{d.source for d in db.all()}}
+            assert f"search:{{name}}" in srcs, srcs
+            assert len(db.all()) >= 3, len(db.all())
+            print("SOAK_OK", name, report.improvement())
+    """, n_devices=1, timeout=900)
+    assert "SOAK_OK anneal" in out and "SOAK_OK evolve" in out
