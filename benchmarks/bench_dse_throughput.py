@@ -16,6 +16,13 @@ candidates are evaluated twice — with and without the SurrogateGate — and
 the benchmark reports compiles spent per incumbent improvement for each arm
 (the gate's whole point is fewer compiles for the same best design).
 
+``--transfer`` runs the cross-workload transfer experiment: a donor cell is
+explored first, then a *fresh* cell is searched twice — cold (greedy, empty
+DB) vs transfer-seeded (the donor's winners transplanted via the shared
+DB) — and the benchmark reports each arm's best bound and compiles spent
+(transfer's whole point is matching the cold arm's best design on fewer
+compiles by skipping re-discovery).
+
 Default uses a reduced (CPU-smoke) config so the benchmark finishes in
 seconds; pass --full for the real registry config on the 2x4 mesh.
 
@@ -146,6 +153,51 @@ def _gate_mode(args, mesh, mesh_name, points, tmp: Path) -> list:
     return rows
 
 
+def _transfer_mode(args, mesh, mesh_name, tmp: Path) -> list:
+    """Cold vs transfer-seeded search on a fresh cell, donor DB warm."""
+    from repro.core.cost_db import CostDB
+    from repro.core.eval_cache import DryRunCache
+    from repro.core.evaluator import Evaluator
+    from repro.core.llm_client import MockLLM
+    from repro.core.llm_stack import LLMStack
+    from repro.core.loop import DSELoop
+    from repro.search import make_strategy
+
+    donor, target = args.arch, args.transfer_target
+    budget = max(2, args.n // 3)
+
+    def run_arm(label, arch, db, strategy):
+        ev = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / label),
+                       cache=DryRunCache(tmp / f"c_{label}"),
+                       max_workers=args.workers)
+        loop = DSELoop(evaluator=ev, db=db,
+                       llm_stack=LLMStack(client=MockLLM(), db=db),
+                       strategy=make_strategy(strategy))
+        t0 = time.time()
+        rep = loop.run(arch, args.shape, iterations=2, eval_budget=budget,
+                       verbose=False)
+        best = rep.best.metrics.get("bound_s") if rep.best else None
+        return {"mode": label, "arch": arch, "strategy": strategy,
+                "compiles": ev.compile_count, "best_bound_s": best,
+                "improvement": round(rep.improvement(), 4),
+                "wall_s": round(time.time() - t0, 2)}
+
+    shared_db = CostDB(tmp / "shared_db.jsonl")
+    rows = [run_arm("donor", donor, shared_db, "greedy")]
+    print(rows[-1], flush=True)
+    rows.append(run_arm("cold", target, CostDB(tmp / "cold_db.jsonl"),
+                        "greedy"))
+    print(rows[-1], flush=True)
+    rows.append(run_arm("transfer", target, shared_db, "transfer"))
+    print(rows[-1], flush=True)
+    cold, xfer = rows[1], rows[2]
+    print(f"transfer verdict: best {xfer['best_bound_s']} in "
+          f"{xfer['compiles']} compiles vs cold {cold['best_bound_s']} in "
+          f"{cold['compiles']} compiles "
+          f"(donor knowledge {'helped' if (xfer['best_bound_s'] or 9e9) <= (cold['best_bound_s'] or 9e9) else 'did not transfer'})")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -158,6 +210,10 @@ def main():
                     help="surrogate-gated vs ungated evaluation experiment")
     ap.add_argument("--gate-factor", type=float, default=2.0,
                     help="SurrogateGate prune factor for --gate")
+    ap.add_argument("--transfer", action="store_true",
+                    help="cold vs transfer-seeded search experiment")
+    ap.add_argument("--transfer-target", default="stablelm-3b",
+                    help="fresh cell arch for --transfer (donor is --arch)")
     ap.add_argument("--out", default=None, help="write results JSON here")
     args = ap.parse_args()
 
@@ -178,6 +234,12 @@ def main():
     try:
         if args.gate:
             rows = _gate_mode(args, mesh, mesh_name, points, tmp)
+            if args.out:
+                Path(args.out).write_text(json.dumps(rows, indent=1))
+            return
+
+        if args.transfer:
+            rows = _transfer_mode(args, mesh, mesh_name, tmp)
             if args.out:
                 Path(args.out).write_text(json.dumps(rows, indent=1))
             return

@@ -1,0 +1,117 @@
+"""Quickstart drift guard: documented CLI commands must actually parse.
+
+Extracts every ``python -m repro.launch.<module> ...`` command from the
+fenced code blocks of README.md and ROADMAP.md (joining ``\\``-continued
+lines, stripping env-var prefixes) and validates its arguments against the
+module's real ``build_parser()`` — unknown flags, removed choices, renamed
+modules, or malformed values fail the run with the offending file and
+command. CI runs this in the orchestrator smoke job, so the docs cannot
+drift from the CLIs without breaking the build.
+
+Usage:  PYTHONPATH=src python scripts/check_quickstart.py [files...]
+        (defaults to README.md and ROADMAP.md beside the repo root)
+
+Exit codes: 0 = every documented command parsed (and at least MIN_COMMANDS
+were found — an extraction regression cannot silently pass), 1 otherwise.
+No jax import, no command execution: parsers only.
+"""
+from __future__ import annotations
+
+import contextlib
+import io
+import re
+import shlex
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+MIN_COMMANDS = 3
+_ENV_ASSIGN = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*=")
+
+
+def parser_registry():
+    """Lazy map of documented launch modules to their parser factories.
+    A documented module missing from here (or from the codebase) is drift."""
+    from repro.launch import campaign, dse, merge_db, orchestrator
+
+    return {
+        "repro.launch.campaign": campaign.build_parser,
+        "repro.launch.dse": dse.build_parser,
+        "repro.launch.merge_db": merge_db.build_parser,
+        "repro.launch.orchestrator": orchestrator.build_parser,
+    }
+
+
+def fenced_blocks(text: str):
+    """Yield the contents of every ``` fenced code block."""
+    for m in re.finditer(r"```[^\n]*\n(.*?)```", text, re.DOTALL):
+        yield m.group(1)
+
+
+def extract_commands(text: str):
+    """``python -m repro.launch.*`` command token lists from fenced blocks,
+    with backslash continuations joined and env assignments stripped."""
+    out = []
+    for block in fenced_blocks(text):
+        joined = re.sub(r"\\\s*\n\s*", " ", block)
+        for line in joined.splitlines():
+            line = line.split("#", 1)[0].strip()
+            if "-m repro.launch." not in line:
+                continue
+            toks = shlex.split(line)
+            while toks and _ENV_ASSIGN.match(toks[0]):
+                toks.pop(0)
+            out.append(toks)
+    return out
+
+
+def check_command(toks, registry):
+    """Validate one command's argv against its module parser; returns an
+    error string or None. Never executes the command."""
+    if len(toks) < 3 or toks[1] != "-m":
+        return f"not a `python -m` invocation: {toks}"
+    module = toks[2]
+    factory = registry.get(module)
+    if factory is None:
+        return (f"module {module} is not in the checker registry "
+                f"(documented module renamed/removed, or the registry in "
+                f"{__file__} needs the new module)")
+    parser = factory()
+    try:
+        # argparse prints usage noise on failure and exits; capture both
+        with contextlib.redirect_stderr(io.StringIO()) as err, \
+                contextlib.redirect_stdout(io.StringIO()):
+            parser.parse_args(toks[3:])
+    except SystemExit:
+        return f"`{' '.join(toks)}` rejected:\n    {err.getvalue().strip()}"
+    return None
+
+
+def main(paths):
+    """Check every file; print each command's verdict; exit 1 on failure."""
+    registry = parser_registry()
+    failures, n = [], 0
+    for path in paths:
+        text = Path(path).read_text()
+        for toks in extract_commands(text):
+            n += 1
+            err = check_command(toks, registry)
+            status = "FAIL" if err else "ok"
+            print(f"[{status}] {Path(path).name}: {' '.join(toks)}")
+            if err:
+                failures.append(f"{path}: {err}")
+    if n < MIN_COMMANDS:
+        failures.append(
+            f"only {n} documented command(s) found across {list(paths)} — "
+            f"expected >= {MIN_COMMANDS}; did the quickstart sections move "
+            f"out of fenced code blocks?")
+    for f in failures:
+        print(f"\nDRIFT: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    files = sys.argv[1:] or [REPO / "README.md", REPO / "ROADMAP.md"]
+    sys.exit(main(files))

@@ -144,12 +144,20 @@ class CostDB:
             cell[k] = d.status
 
     def all(self) -> List[DataPoint]:
+        """Every row, file order, cached in memory after the first read.
+        Unparseable lines (e.g. a torn tail line after a SIGKILL mid-append)
+        are skipped with a warning, never raised — a campaign must always be
+        able to resume over its own crash debris."""
         if self._cache is None:
             self._cache = []
             if self.path.exists():
                 for line in self.path.read_text().splitlines():
-                    if line.strip():
+                    if not line.strip():
+                        continue
+                    try:
                         self._cache.append(DataPoint.from_json(line))
+                    except (json.JSONDecodeError, TypeError, AttributeError):
+                        print(f"cost_db: skipping unreadable row in {self.path}")
         return list(self._cache)
 
     def query(self, arch: Optional[str] = None, shape: Optional[str] = None,
@@ -195,6 +203,44 @@ class CostDB:
         """Distinct (arch, shape, mesh) cells present — the campaign engine's
         view of which workloads already hold data."""
         return sorted({(d.arch, d.shape, d.mesh) for d in self.all()})
+
+    def winners(self, arch: str, shape: str, k: int = 3,
+                mesh: Optional[str] = None) -> List[DataPoint]:
+        """The cell's ``k`` fastest *feasible* designs, one row per design key.
+
+        Sorted by measured ``bound_s`` ascending (seconds), ties broken by
+        earliest ``ts`` then append order — deterministic for a fixed DB
+        file. Rows without a ``bound_s`` metric or failing ``fits_hbm`` are
+        excluded; an empty list means the cell has no feasible design yet.
+        This is the donor query behind cross-workload transfer seeding
+        (:class:`repro.search.transfer.TransferSeeded`)."""
+        ok = [d for d in self.query(arch, shape, "ok", mesh)
+              if d.metrics.get("bound_s") and d.metrics.get("fits_hbm", True)]
+        ok.sort(key=lambda d: (d.metrics["bound_s"], d.ts or 0.0))
+        seen, out = set(), []
+        for d in ok:
+            key = d.point.get("__key__")
+            if key is not None and key in seen:
+                continue
+            seen.add(key)
+            out.append(d)
+            if len(out) == k:
+                break
+        return out
+
+    def iteration_batches(self, arch: str, shape: str,
+                          mesh: Optional[str] = None,
+                          ) -> List[Tuple[int, List[DataPoint]]]:
+        """The cell's rows grouped by loop iteration, ascending, preserving
+        append order within each group — the provenance replay stream
+        :meth:`repro.search.ensemble.Ensemble.rebuild_credit` consumes to
+        reconstruct bandit credit from the ``source`` field alone. Rows with
+        no recorded iteration sort first under index ``-1``."""
+        groups: Dict[int, List[DataPoint]] = {}
+        for d in self.query(arch, shape, mesh=mesh):
+            it = int(d.iteration) if d.iteration is not None else -1
+            groups.setdefault(it, []).append(d)
+        return sorted(groups.items())
 
     def count(self, arch: Optional[str] = None, shape: Optional[str] = None,
               status: Optional[str] = None, mesh: Optional[str] = None) -> int:

@@ -118,7 +118,8 @@ class DSELoop:
                 arch=arch, shape=shape, cfg=cfg, cell=cell, template=template,
                 db=self.db, iteration=it, budget=eval_budget,
                 incumbent=incumbent, pool=list(pool),
-                cost_model=self.cost_model, workload=wl)
+                cost_model=self.cost_model, workload=wl,
+                mesh=self.evaluator.mesh_name)
 
             # --- propose: the pluggable strategy decides where to look ---
             cands = strategy.propose(state)

@@ -32,7 +32,9 @@ Search policy and surrogate gating (see ``repro.search``):
         of compiled; auto-disabled until the surrogate's held-out
         validation RMSE clears the calibration guard
 
-Scale-out over processes/hosts — shard the grid, then merge:
+Scale-out over processes/hosts — shard the grid, then merge (or let
+``repro.launch.orchestrator`` spawn, supervise, and merge the shards for
+you in one command):
 
     # shard i/n deterministically partitions the sorted arch x shape grid
     PYTHONPATH=src python -m repro.launch.campaign ... \\
@@ -45,15 +47,33 @@ Scale-out over processes/hosts — shard the grid, then merge:
     PYTHONPATH=src python -m repro.launch.merge_db \\
         artifacts/shard0 artifacts/shard1 --out artifacts/campaign
 
-With the deterministic mock LLM and an untrained (or cell-local) surrogate,
-a sharded run + merge reproduces the single-process ``leaderboard.json``
-byte-for-byte — tier-1 asserts it (``tests/test_merge_db.py``).
+With the deterministic mock LLM, an untrained (or cell-local) surrogate,
+and a transfer-free strategy, a sharded run + merge reproduces the
+single-process ``leaderboard.json`` byte-for-byte — tier-1 asserts it
+(``tests/test_merge_db.py``). The ``transfer`` / ``ensemble+transfer``
+strategies deliberately couple cells through the shared DB (warm starts
+from similar cells), so with them a shard layout is its own experiment.
 
 Outputs under --out:
     cost_db.jsonl                     shared hardware-datapoint DB
     dryrun_cache/                     content-addressed compile cache
     reports/{arch}__{shape}__{mesh}.json   per-cell loop reports
     leaderboard.json                  cells ranked by best bound_s
+    progress.json                     live heartbeat (atomically replaced
+                                      after every cell; the orchestrator's
+                                      hang detection and leaderboard
+                                      aggregation read it)
+
+Test/CI hooks (environment variables, ignored when unset):
+    REPRO_CAMPAIGN_PRELUDE      path to a python file exec()d by ``main()``
+                                before any jax-touching import — CI shrinks
+                                configs to 64-token cells this way so shard
+                                subprocesses compile in seconds
+    REPRO_CAMPAIGN_CRASH_TOKEN  one-shot crash injection: once the file at
+                                this path exists and CRASH_AFTER_CELLS cells
+                                finished, the file is unlinked and the
+                                process dies via os._exit(86) at a cell
+                                boundary (the orchestrator restart test)
 
 Unlike the other launchers this module is import-safe (tests import
 ``build_leaderboard``/``run_campaign``): XLA_FLAGS is set inside ``main()``,
@@ -67,8 +87,49 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
 
+PROGRESS_FILE = "progress.json"
+MESH_CHOICES = ("tiny", "small", "pod", "multipod")
+STRATEGY_CHOICES = ("greedy", "llm", "anneal", "evolve", "transfer",
+                    "ensemble", "ensemble+transfer")
+
+
 def cell_report_path(out_dir: Path, arch: str, shape: str, mesh_name: str) -> Path:
+    """Canonical per-cell report location: ``reports/{arch}__{shape}__{mesh}.json``
+    under the campaign dir (``merge_db`` parses cells back out of the name)."""
     return Path(out_dir) / "reports" / f"{arch}__{shape}__{mesh_name}.json"
+
+
+def resolve_grid(archs: str, shapes: str) -> Tuple[List[str], List[str]]:
+    """Expand the CLI ``--archs`` / ``--shapes`` strings (comma-separated ids
+    or the literal ``all``) into validated name lists. Raises ``ValueError``
+    naming every unknown id — shared by the campaign and orchestrator CLIs so
+    the two can never drift."""
+    from repro.configs import ARCH_NAMES, SHAPES
+
+    arch_list = list(ARCH_NAMES) if archs == "all" else archs.split(",")
+    shape_list = ([s.name for s in SHAPES] if shapes == "all"
+                  else shapes.split(","))
+    unknown = [a for a in arch_list if a not in ARCH_NAMES]
+    unknown += [s for s in shape_list if s not in {c.name for c in SHAPES}]
+    if unknown:
+        raise ValueError(f"unknown arch/shape: {unknown}")
+    return arch_list, shape_list
+
+
+def make_campaign_mesh(name: str):
+    """Build the jax mesh for a ``--mesh`` choice; returns ``(mesh,
+    mesh_name)``. Must only be called after XLA_FLAGS is pinned (jax locks
+    the device count at first init); ``tiny`` (1x1) exists so smoke tests
+    and CI runs need a single device."""
+    from repro.launch.mesh import make_mesh, make_production_mesh
+
+    if name == "pod":
+        return make_production_mesh(), "pod16x16"
+    if name == "multipod":
+        return make_production_mesh(multi_pod=True), "multipod2x16x16"
+    if name == "tiny":
+        return make_mesh((1, 1), ("data", "model")), "tiny1x1"
+    return make_mesh((2, 4), ("data", "model")), "small2x4"
 
 
 def shard_cells(archs: Sequence[str], shapes: Sequence[str],
@@ -142,6 +203,51 @@ def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
     return rows
 
 
+def write_json_atomic(path: Path, payload) -> Path:
+    """Serialize ``payload`` to ``path`` via temp-file + ``os.replace`` so a
+    reader (or a restarted campaign) never sees a torn file, even if this
+    process is SIGKILLed mid-write. Returns ``path``."""
+    path = Path(path)
+    tmp = path.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(payload, indent=1, default=str))
+    tmp.replace(path)
+    return path
+
+
+def write_progress(out_dir: Path, payload: Dict) -> Path:
+    """Atomically replace ``progress.json`` under ``out_dir`` (see
+    :func:`write_json_atomic`) so a concurrently-polling supervisor never
+    reads a torn heartbeat. Returns the progress path."""
+    return write_json_atomic(Path(out_dir) / PROGRESS_FILE, payload)
+
+
+def read_progress(out_dir: Path) -> Dict:
+    """Best-effort read of a shard's ``progress.json``: returns ``{}`` for a
+    missing, torn, or mid-replace file (the supervisor treats that as 'no
+    news', never as a crash)."""
+    try:
+        return json.loads((Path(out_dir) / PROGRESS_FILE).read_text())
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def _injected_crash_hook(cells_done: int) -> None:
+    """Test-only one-shot fault injection (see module docstring): when the
+    ``REPRO_CAMPAIGN_CRASH_TOKEN`` file exists and ``cells_done`` reached
+    ``REPRO_CAMPAIGN_CRASH_AFTER_CELLS`` (default 1), unlink the token and
+    die abruptly — ``os._exit(86)``, no summary, no cleanup — at a cell
+    boundary. The unlink disarms the fault, so a supervisor restart of the
+    same command runs clean."""
+    token = os.environ.get("REPRO_CAMPAIGN_CRASH_TOKEN")
+    if not token:
+        return
+    after = int(os.environ.get("REPRO_CAMPAIGN_CRASH_AFTER_CELLS", "1"))
+    p = Path(token)
+    if cells_done >= after and p.exists():
+        p.unlink()
+        os._exit(86)
+
+
 def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: str,
                  *, out_dir: Path | str, iterations: int = 2, budget: int = 3,
                  workers: int = 1, llm_client=None, db=None, resume: bool = True,
@@ -184,12 +290,43 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
             print(f"[campaign {mesh_name}] {msg}", flush=True)
 
     t0 = time.time()
+    cells = shard_cells(archs, shapes, shard)
     cell_rows: List[Dict] = []
+    cell_best: List[Dict] = []  # {"cell": "arch/shape", "bound_s": float|None}
     counts = {"ran": 0, "resumed": 0, "unsupported": 0}
-    for arch, shape in shard_cells(archs, shapes, shard):
+
+    def progress(status: str) -> None:
+        top = sorted((r for r in cell_best if r["bound_s"] is not None),
+                     key=lambda r: r["bound_s"])[:5]
+        write_progress(out_dir, {
+            "pid": os.getpid(), "mesh": mesh_name,
+            "shard": f"{shard[0]}/{shard[1]}" if shard else None,
+            "status": status,
+            "cells_total": len(cells), "cells_done": len(cell_rows),
+            **counts,
+            "evaluations": db.count(), "compiles": evaluator.compile_count,
+            "best": top, "ts": round(time.time(), 3)})
+
+    def note_cell(arch: str, shape: str) -> None:
+        best = db.best(arch, shape, mesh=mesh_name)
+        cell_best.append({"cell": f"{arch}/{shape}",
+                          "bound_s": best.metrics.get("bound_s")
+                          if best else None})
+        progress("running")
+        _injected_crash_hook(len(cell_rows))
+
+    progress("starting")
+    for arch, shape in cells:
         rpath = cell_report_path(out_dir, arch, shape, mesh_name)
+        prior = None
         if resume and rpath.exists():
-            prior = json.loads(rpath.read_text())
+            try:
+                prior = json.loads(rpath.read_text())
+            except json.JSONDecodeError:
+                # a torn report (kill mid-write before reports were atomic,
+                # or external damage) means the cell never finished: re-run
+                log(f"{arch}/{shape}: unreadable report — re-running cell")
+        if prior is not None:
             counts["resumed" if prior.get("status") != "unsupported"
                    else "unsupported"] += 1
             cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
@@ -197,18 +334,20 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
                               else "unsupported",
                               "improvement": prior.get("improvement")})
             log(f"{arch}/{shape}: resumed (report exists)")
+            note_cell(arch, shape)
             continue
 
         from repro.configs import SHAPE_BY_NAME, get_config
         supported, why = M.cell_supported(get_config(arch), SHAPE_BY_NAME[shape])
         if not supported:
-            rpath.write_text(json.dumps(
-                {"arch": arch, "shape": shape, "status": "unsupported",
-                 "reason": why}, indent=1))
+            write_json_atomic(rpath,
+                              {"arch": arch, "shape": shape,
+                               "status": "unsupported", "reason": why})
             counts["unsupported"] += 1
             cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
                               "status": "unsupported", "improvement": None})
             log(f"{arch}/{shape}: unsupported ({why})")
+            note_cell(arch, shape)
             continue
 
         t_cell = time.time()
@@ -220,7 +359,9 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
         out = _cell_report(report)
         out["status"] = "complete"
         out["wall_s"] = round(time.time() - t_cell, 1)
-        rpath.write_text(json.dumps(out, indent=1, default=str))
+        # atomic: a SIGKILL (supervisor hang-heal) mid-write must never
+        # leave a torn report that poisons every subsequent resume
+        write_json_atomic(rpath, out)
         counts["ran"] += 1
         cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
                           "status": "complete",
@@ -228,6 +369,7 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
         log(f"{arch}/{shape}: done in {out['wall_s']}s "
             f"(improvement {report.improvement():.2%}, "
             f"cache {cache.stats()})")
+        note_cell(arch, shape)
 
     # sorted rows -> deterministic leaderboard tie order, and the exact
     # order merge_db reconstructs from report files after a sharded run
@@ -247,24 +389,22 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
         "cache": cache.stats(),
         "leaderboard": str(lb_path),
     }
+    progress("done")
     log(f"summary: {summary}")
     return summary
 
 
-def main():
-    # before any jax-touching import: jax locks the device count at first init
-    os.environ["XLA_FLAGS"] = os.environ.get(
-        "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
-    from repro.configs import ARCH_NAMES, SHAPES
-
+def build_parser() -> argparse.ArgumentParser:
+    """The campaign CLI surface, importable without touching jax (the
+    quickstart drift checker parses documented commands against it)."""
     ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.campaign",
         description="parallel, cached, resumable multi-workload DSE campaign")
     ap.add_argument("--archs", default="qwen3-0.6b,stablelm-3b",
                     help="comma-separated arch ids, or 'all'")
     ap.add_argument("--shapes", default="train_4k,decode_32k",
                     help="comma-separated shape cells, or 'all'")
-    ap.add_argument("--mesh", default="small", choices=["small", "pod", "multipod"])
+    ap.add_argument("--mesh", default="small", choices=list(MESH_CHOICES))
     ap.add_argument("--iterations", type=int, default=2)
     ap.add_argument("--budget", type=int, default=3,
                     help="evaluations per loop iteration")
@@ -277,8 +417,10 @@ def main():
     # literal choices, not repro.search.STRATEGIES: importing the search
     # package pulls jax in, and --help must stay instant
     ap.add_argument("--strategy", default="ensemble",
-                    choices=["greedy", "llm", "anneal", "evolve", "ensemble"],
-                    help="search strategy per cell (fresh instance each cell)")
+                    choices=list(STRATEGY_CHOICES),
+                    help="search strategy per cell (fresh instance each "
+                         "cell); *transfer variants seed cells from similar "
+                         "finished cells in the shared DB")
     ap.add_argument("--gate-factor", type=float, default=None,
                     help="enable the surrogate gate: prune candidates whose "
                          "predicted bound is > FACTOR x the incumbent "
@@ -286,38 +428,55 @@ def main():
     ap.add_argument("--shard", default=None, metavar="I/N",
                     help="run only cells i, i+n, i+2n, ... of the sorted "
                          "arch x shape grid (merge shards with "
-                         "repro.launch.merge_db)")
+                         "repro.launch.merge_db, or let "
+                         "repro.launch.orchestrator drive the whole thing)")
+    return ap
+
+
+def parse_shard(spec: Optional[str]) -> Optional[Tuple[int, int]]:
+    """Parse an ``i/n`` shard spec into ``(i, n)``; ``None``/empty passes
+    through. Raises ``ValueError`` on malformed specs or ``i`` outside
+    ``0..n-1`` — shared by the campaign and orchestrator CLIs."""
+    if not spec:
+        return None
+    try:
+        i, n = (int(x) for x in spec.split("/"))
+    except ValueError:
+        raise ValueError(f"shard spec must look like i/n, got {spec!r}")
+    if not (0 <= i < n):
+        raise ValueError(f"shard index must satisfy 0 <= i < n, got {spec}")
+    return (i, n)
+
+
+def main():
+    """CLI entry: pin XLA_FLAGS, run the optional test prelude, validate the
+    grid, and hand off to :func:`run_campaign`. Exits 2 on bad arguments."""
+    # before any jax-touching import: jax locks the device count at first init
+    os.environ["XLA_FLAGS"] = os.environ.get(
+        "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+    ap = build_parser()
     args = ap.parse_args()
+
+    # test/CI hook: shrink configs (etc.) before anything jax-touching runs —
+    # this is how shard subprocesses inherit the suite's tiny workloads
+    prelude = os.environ.get("REPRO_CAMPAIGN_PRELUDE")
+    if prelude:
+        src = Path(prelude).read_text()
+        exec(compile(src, prelude, "exec"), {"__name__": "__repro_prelude__"})
 
     if args.gate_factor is not None and args.gate_factor <= 1.0:
         ap.error(f"--gate-factor must be > 1, got {args.gate_factor}")
+    try:
+        shard = parse_shard(args.shard)
+    except ValueError as e:
+        ap.error(str(e))
+    try:
+        archs, shapes = resolve_grid(args.archs, args.shapes)
+    except ValueError as e:
+        ap.error(str(e))
 
-    shard = None
-    if args.shard:
-        try:
-            i, n = (int(x) for x in args.shard.split("/"))
-        except ValueError:
-            ap.error(f"--shard must look like i/n, got {args.shard!r}")
-        if not (0 <= i < n):
-            ap.error(f"--shard index must satisfy 0 <= i < n, got {args.shard}")
-        shard = (i, n)
-
-    archs = list(ARCH_NAMES) if args.archs == "all" else args.archs.split(",")
-    shapes = ([s.name for s in SHAPES] if args.shapes == "all"
-              else args.shapes.split(","))
-    unknown = [a for a in archs if a not in ARCH_NAMES]
-    unknown += [s for s in shapes if s not in {c.name for c in SHAPES}]
-    if unknown:
-        ap.error(f"unknown arch/shape: {unknown}")
-
-    from repro.launch.mesh import make_mesh, make_production_mesh
-
-    if args.mesh == "pod":
-        mesh, mesh_name = make_production_mesh(), "pod16x16"
-    elif args.mesh == "multipod":
-        mesh, mesh_name = make_production_mesh(multi_pod=True), "multipod2x16x16"
-    else:
-        mesh, mesh_name = make_mesh((2, 4), ("data", "model")), "small2x4"
+    mesh, mesh_name = make_campaign_mesh(args.mesh)
 
     llm_client = None
     if args.llm == "ollama":

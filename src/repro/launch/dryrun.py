@@ -109,6 +109,15 @@ def build_cell(arch: str, shape_name: str, mesh, plan=None, *,
 
 def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, plan=None,
              artifact_dir: Path = ARTIFACT_DIR, *, cfg=None, cell=None):
+    """Dry-run one cell: lower+compile the step, extract memory/cost/HLO
+    analyses and roofline terms (seconds), and write the JSON artifact.
+
+    Never raises — unsupported cells return ``status="skipped"`` and any
+    compile/lowering exception becomes a ``status="error"`` record with the
+    truncated traceback (the evaluator turns both into negative data
+    points). ``lower_s``/``compile_s``/``wall_s`` are wall-clock and the
+    only non-deterministic fields; everything else is reproducible for a
+    fixed (config, cell, plan, mesh, jax version)."""
     global N_COMPILES
     t0 = time.time()
     cfg = cfg if cfg is not None else get_config(arch)
@@ -174,6 +183,9 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, plan=None,
 
 
 def main():
+    """CLI entry: sweep the requested arch x shape x mesh grid, skipping
+    cells whose artifacts already exist (``--force`` recomputes). Exits 1
+    if any cell errored, 0 otherwise."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all", help="arch id or 'all'")
     ap.add_argument("--shape", default="all", help="shape cell name or 'all'")

@@ -22,8 +22,10 @@ from pathlib import Path
 from repro.configs import ARCH_NAMES, SHAPES
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The single-cell DSE CLI surface, importable cheaply (the quickstart
+    drift checker parses documented commands against it)."""
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.dse")
     ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
     ap.add_argument("--shape", required=True, choices=[s.name for s in SHAPES])
     ap.add_argument("--iterations", type=int, default=4)
@@ -36,15 +38,24 @@ def main():
                     help="disable the content-addressed dry-run cache")
     ap.add_argument("--approve", action="store_true",
                     help="human-in-the-loop: confirm each accepted design")
+    from repro.launch.campaign import STRATEGY_CHOICES  # light import, no jax
+
     ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
     ap.add_argument("--strategy", default="ensemble",
-                    choices=["greedy", "llm", "anneal", "evolve", "ensemble"],
+                    choices=list(STRATEGY_CHOICES),
                     help="search strategy (see repro.search)")
     ap.add_argument("--gate-factor", type=float, default=None,
                     help="enable the surrogate gate: prune candidates whose "
                          "predicted bound is > FACTOR x the incumbent "
                          "(must be > 1)")
     ap.add_argument("--report", default=None, help="write the loop report JSON here")
+    return ap
+
+
+def main():
+    """CLI entry: run one SECDA-DSE loop cell end-to-end on the chosen mesh
+    and optionally write the loop-report JSON. Exits 2 on bad arguments."""
+    ap = build_parser()
     args = ap.parse_args()
     if args.gate_factor is not None and args.gate_factor <= 1.0:
         ap.error(f"--gate-factor must be > 1, got {args.gate_factor}")

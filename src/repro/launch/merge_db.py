@@ -135,6 +135,12 @@ def rebuild_leaderboard(out_dir: Path) -> Path:
 
 def merge(shard_dirs: Sequence[Path | str], out_dir: Path | str,
           verbose: bool = True) -> Dict:
+    """Fold the shard dirs into ``out_dir`` (DB dedup + reports + caches +
+    rebuilt leaderboard, see module docstring); returns the merge summary.
+    Raises ``FileNotFoundError`` for a missing shard dir and ``ValueError``
+    when ``out_dir`` aliases a shard dir. Deterministic: the same shard
+    contents produce byte-identical merged outputs regardless of input
+    order (identity dedup is timestamp-, then input-order-stable)."""
     shard_dirs = [Path(s) for s in shard_dirs]
     out_dir = Path(out_dir)
     for sd in shard_dirs:
@@ -159,13 +165,23 @@ def merge(shard_dirs: Sequence[Path | str], out_dir: Path | str,
     return summary
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    """The merge CLI surface, importable without touching jax (the
+    quickstart drift checker parses documented commands against it)."""
     ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.merge_db",
         description="merge sharded campaign outputs (cost DBs, reports, "
                     "dry-run caches) and rebuild one leaderboard")
     ap.add_argument("shards", nargs="+", help="per-shard campaign --out dirs")
     ap.add_argument("--out", required=True, help="merged campaign dir")
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    """CLI entry: merge the given shard dirs into ``--out``. Exits nonzero
+    (FileNotFoundError/ValueError) on missing shard dirs or ``--out``
+    aliasing a shard dir."""
+    args = build_parser().parse_args()
     merge(args.shards, args.out)
 
 

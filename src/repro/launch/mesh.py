@@ -20,6 +20,10 @@ except ImportError:  # older jax: make_mesh has no axis_types kwarg; Auto is imp
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The paper-scale mesh: 16x16 (data, model), or 2x16x16 with a leading
+    ``pod`` axis. Requires >= mesh-size visible devices — pin
+    ``XLA_FLAGS=--xla_force_host_platform_device_count`` *before* the first
+    jax import or jax raises at mesh construction."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
@@ -31,4 +35,6 @@ def make_mesh(shape, axes):
 
 
 def single_device_mesh():
+    """A 1-device ``("data",)`` mesh — always constructible, no XLA_FLAGS
+    needed (smoke tests and benches run on the real single CPU device)."""
     return make_mesh((1,), ("data",))

@@ -1,0 +1,421 @@
+"""Self-orchestrating sharded DSE campaigns: one command, n supervised shards.
+
+Replaces the manual quickstart workflow (run n ``campaign --shard i/n``
+processes by hand, then ``merge_db``) with a supervisor that owns the whole
+lifecycle:
+
+* **spawn** — launches the n shard subprocesses (``python -m
+  repro.launch.campaign --shard i/n --out OUT/shards/shard{i}``), each with
+  its own log file and output dir;
+* **monitor** — polls every shard's atomically-replaced ``progress.json``
+  heartbeat (cells done, evaluations, compiles, per-cell incumbent bounds)
+  and streams an aggregated live leaderboard to stdout;
+* **heal** — a shard that exits nonzero, or whose heartbeat goes stale for
+  ``--hang-timeout`` seconds, is killed and relaunched with the same
+  command. Campaign resume semantics make the restart cheap and safe:
+  completed cells are skipped via their report files, and the shard's
+  content-addressed dry-run cache replays any compiles the crashed attempt
+  already paid for — no cell is evaluated twice. A shard that crashes more
+  than ``--max-restarts`` times fails the run (every other shard is
+  terminated, nothing is merged);
+* **merge** — on success, folds the shard dirs into ``--out`` via
+  ``repro.launch.merge_db`` (dedup by design identity, earliest record
+  wins), so the single invocation ends with the same byte-stable
+  ``leaderboard.json`` the manual shard+merge flow produces.
+
+Quickstart (the whole campaign, supervised, one command):
+
+    PYTHONPATH=src python -m repro.launch.orchestrator \\
+        --archs all --shapes all --shards 2 --out artifacts/run
+
+Fault injection (tests/CI): ``--inject-kill I:K`` arms a one-shot crash in
+shard I after K completed cells — the shard dies abruptly at a cell boundary
+(exit code 86, via the campaign's ``REPRO_CAMPAIGN_CRASH_TOKEN`` hook) and
+the supervisor must restart it. Because the crash lands between cells, the
+healed run's merged leaderboard is byte-identical to an uninterrupted one;
+tier-1 asserts exactly that (``tests/test_orchestrator.py``).
+
+Pure supervision — this module never imports jax, so ``--help`` and the
+monitoring loop stay instant no matter what the shards are compiling.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.launch.campaign import (MESH_CHOICES, STRATEGY_CHOICES,
+                                   read_progress, resolve_grid,
+                                   write_json_atomic)
+
+CRASH_TOKEN_FILE = ".crash_token"
+
+
+@dataclass
+class ShardProc:
+    """Supervisor-side state for one shard subprocess: its launch command,
+    output dir, the live ``Popen`` handle, restart count, and the last
+    heartbeat payload/time used for hang detection."""
+
+    index: int
+    out_dir: Path
+    cmd: List[str]
+    env: Dict[str, str]
+    proc: Optional[subprocess.Popen] = None
+    log_handle: Optional[object] = None
+    restarts: int = 0
+    done: bool = False
+    failed: bool = False
+    last_beat: float = field(default_factory=time.time)
+    last_payload: Dict = field(default_factory=dict)
+
+    @property
+    def log_path(self) -> Path:
+        """The shard's combined stdout+stderr log (appended across restarts,
+        so post-mortems see every attempt)."""
+        return self.out_dir / "shard.log"
+
+    def spawn(self) -> None:
+        """(Re)launch the shard subprocess, appending to its log file. The
+        shard leads its own session/process group so :meth:`signal_group`
+        reaches its evaluator pool workers too."""
+        self.out_dir.mkdir(parents=True, exist_ok=True)
+        self.log_handle = self.log_path.open("ab")
+        self.proc = subprocess.Popen(self.cmd, stdout=self.log_handle,
+                                     stderr=subprocess.STDOUT, env=self.env,
+                                     start_new_session=True)
+        self.last_beat = time.time()
+
+    def signal_group(self, sig: int) -> None:
+        """Deliver ``sig`` to the shard's whole process group (the campaign
+        process AND its spawned compile-pool workers — killing only the
+        leader would orphan workers that keep burning CPU against the
+        restarted attempt). Falls back to signalling the leader alone if
+        the group is already gone; a fully-reaped shard is a no-op."""
+        if self.proc is None:
+            return
+        try:
+            os.killpg(self.proc.pid, sig)  # pgid == pid (start_new_session)
+        except (ProcessLookupError, PermissionError):
+            try:
+                self.proc.send_signal(sig)
+            except (ProcessLookupError, OSError):
+                pass
+
+    def close_log(self) -> None:
+        """Close the log handle (idempotent)."""
+        if self.log_handle is not None:
+            self.log_handle.close()
+            self.log_handle = None
+
+
+def child_env() -> Dict[str, str]:
+    """The shard subprocess environment: the supervisor's env with this
+    checkout's ``src`` prepended to PYTHONPATH, so ``python -m
+    repro.launch.campaign`` resolves the same code the supervisor runs."""
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[2])
+    prior = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + prior if prior else "")
+    return env
+
+
+def shard_dirs_for(out_dir: Path, shards: int) -> List[Path]:
+    """The canonical per-shard output dirs: ``OUT/shards/shard{i}`` —
+    deliberately *inside* ``--out`` but distinct from it, satisfying
+    ``merge_db``'s out-must-not-alias-a-shard rule."""
+    return [Path(out_dir) / "shards" / f"shard{i}" for i in range(shards)]
+
+
+def build_shard_cmd(i: int, shards: int, shard_dir: Path, *, archs: str,
+                    shapes: str, mesh: str, iterations: int, budget: int,
+                    workers: int, strategy: str,
+                    gate_factor: Optional[float], llm: str) -> List[str]:
+    """The exact ``repro.launch.campaign`` argv for shard ``i`` of
+    ``shards`` — one place, so supervisor restarts always replay the
+    original command (campaign resume makes that idempotent)."""
+    cmd = [sys.executable, "-m", "repro.launch.campaign",
+           "--archs", archs, "--shapes", shapes, "--mesh", mesh,
+           "--iterations", str(iterations), "--budget", str(budget),
+           "--workers", str(workers), "--strategy", strategy,
+           "--llm", llm, "--out", str(shard_dir),
+           "--shard", f"{i}/{shards}"]
+    if gate_factor is not None:
+        cmd += ["--gate-factor", str(gate_factor)]
+    return cmd
+
+
+def parse_inject_kill(spec: Optional[str]) -> Optional[Tuple[int, int]]:
+    """Parse an ``--inject-kill I:K`` spec into ``(shard_index,
+    after_cells)``; ``None`` passes through. Raises ``ValueError`` on
+    malformed specs or non-positive K."""
+    if not spec:
+        return None
+    try:
+        i, k = (int(x) for x in spec.split(":"))
+    except ValueError:
+        raise ValueError(f"--inject-kill must look like I:K, got {spec!r}")
+    if i < 0 or k < 1:
+        raise ValueError(f"--inject-kill needs I >= 0 and K >= 1, got {spec}")
+    return (i, k)
+
+
+def aggregate_best(shard_states: Sequence[ShardProc], k: int = 5) -> List[Dict]:
+    """Fold the shards' heartbeat leaderboards into one: the ``k`` fastest
+    cells (bound_s seconds, ascending) across every shard's last
+    ``progress.json``. Purely cosmetic/streaming — the authoritative
+    leaderboard is rebuilt from the merged DB at the end."""
+    rows = [r for s in shard_states
+            for r in s.last_payload.get("best", [])
+            if r.get("bound_s") is not None]
+    rows.sort(key=lambda r: (r["bound_s"], r.get("cell", "")))
+    return rows[:k]
+
+
+def _status_line(shard_states: Sequence[ShardProc]) -> str:
+    """One-line aggregated view of every shard + the global incumbent."""
+    parts = []
+    for s in shard_states:
+        p = s.last_payload
+        done, total = p.get("cells_done", 0), p.get("cells_total", "?")
+        tag = ("failed" if s.failed else "done" if s.done else
+               p.get("status", "starting"))
+        extra = f", {p.get('evaluations', 0)} evals" if p else ""
+        restarts = f", restarts {s.restarts}" if s.restarts else ""
+        parts.append(f"shard{s.index} {done}/{total} {tag}{extra}{restarts}")
+    best = aggregate_best(shard_states, k=1)
+    if best:
+        parts.append(f"best {best[0]['bound_s']:.4g}s ({best[0]['cell']})")
+    return " | ".join(parts)
+
+
+def run_orchestrator(*, archs: str, shapes: str, shards: int,
+                     out_dir: Path | str, mesh: str = "small",
+                     iterations: int = 2, budget: int = 3, workers: int = 2,
+                     strategy: str = "ensemble",
+                     gate_factor: Optional[float] = None, llm: str = "mock",
+                     poll_interval: float = 1.0, hang_timeout: float = 900.0,
+                     max_restarts: int = 2,
+                     inject_kill: Optional[Tuple[int, int]] = None,
+                     verbose: bool = True) -> Dict:
+    """Run the full supervised campaign; returns the summary dict (also
+    written to ``OUT/summary.json``).
+
+    Spawns ``shards`` campaign subprocesses over the sorted arch x shape
+    grid, supervises them (crash/hang restart with resume, up to
+    ``max_restarts`` per shard), and merges their outputs into ``out_dir``
+    on success. ``hang_timeout`` is wall seconds without a heartbeat
+    *change* — it must exceed the slowest single cell, since the campaign
+    heartbeats at cell boundaries. Raises ``RuntimeError`` when a shard
+    exhausts its restart budget (remaining shards are terminated and
+    nothing is merged — the shard dirs stay resumable). ``archs`` /
+    ``shapes`` are the raw CLI strings (``"all"`` or comma-separated) and
+    are validated up front via :func:`repro.launch.campaign.resolve_grid`.
+    Determinism: with the mock LLM and a transfer-free strategy the merged
+    leaderboard is byte-identical to the manual shard+merge flow, kills or
+    not (injected crashes land at cell boundaries; resume skips completed
+    cells)."""
+    resolve_grid(archs, shapes)  # fail fast, before any process spawns
+    if shards < 1:
+        raise ValueError(f"need shards >= 1, got {shards}")
+    if inject_kill is not None and not (0 <= inject_kill[0] < shards):
+        raise ValueError(f"--inject-kill shard {inject_kill[0]} outside "
+                         f"0..{shards - 1}")
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    def log(msg: str) -> None:
+        if verbose:
+            print(f"[orchestrator] {msg}", flush=True)
+
+    states: List[ShardProc] = []
+    for i, sd in enumerate(shard_dirs_for(out_dir, shards)):
+        env = child_env()
+        if inject_kill is not None and inject_kill[0] == i:
+            sd.mkdir(parents=True, exist_ok=True)
+            token = sd / CRASH_TOKEN_FILE
+            token.write_text("armed")
+            env["REPRO_CAMPAIGN_CRASH_TOKEN"] = str(token)
+            env["REPRO_CAMPAIGN_CRASH_AFTER_CELLS"] = str(inject_kill[1])
+            log(f"shard{i}: armed one-shot crash after "
+                f"{inject_kill[1]} cell(s)")
+        cmd = build_shard_cmd(i, shards, sd, archs=archs, shapes=shapes,
+                              mesh=mesh, iterations=iterations, budget=budget,
+                              workers=workers, strategy=strategy,
+                              gate_factor=gate_factor, llm=llm)
+        states.append(ShardProc(index=i, out_dir=sd, cmd=cmd, env=env))
+
+    t0 = time.time()
+    total_restarts = 0
+    last_line = ""
+    try:
+        for s in states:
+            s.spawn()
+            log(f"shard{s.index}: pid {s.proc.pid} -> {s.out_dir}")
+
+        while not all(s.done or s.failed for s in states):
+            time.sleep(poll_interval)
+            now = time.time()
+            for s in states:
+                if s.done or s.failed:
+                    continue
+                payload = read_progress(s.out_dir)
+                if payload and payload != s.last_payload:
+                    s.last_payload = payload
+                    s.last_beat = now
+                rc = s.proc.poll()
+                crashed = rc is not None and rc != 0
+                hung = rc is None and (now - s.last_beat) > hang_timeout
+                if rc == 0:
+                    s.done = True
+                    s.close_log()
+                    # one final read: the shard's last heartbeat ("done",
+                    # full counts) may have landed after this poll's read
+                    s.last_payload = read_progress(s.out_dir) or s.last_payload
+                    log(f"shard{s.index}: completed "
+                        f"({s.last_payload.get('cells_done', '?')} cells)")
+                elif crashed or hung:
+                    # unconditional: a crashed leader can leave pool workers
+                    # mid-compile just like a hung one; no-op once reaped
+                    s.signal_group(signal.SIGKILL)
+                    if hung:
+                        s.proc.wait()
+                    s.close_log()
+                    why = (f"no heartbeat for {hang_timeout:.0f}s" if hung
+                           else f"exit code {rc}")
+                    if s.restarts >= max_restarts:
+                        # fail fast: terminating the healthy shards (finally
+                        # block) beats burning hours on a run that can no
+                        # longer merge
+                        s.failed = True
+                        log(f"shard{s.index}: {why}; restart budget "
+                            f"({max_restarts}) exhausted — giving up "
+                            f"(log: {s.log_path})")
+                        raise RuntimeError(
+                            f"shard {s.index} failed after {max_restarts} "
+                            f"restart(s) ({why}); shard dirs under "
+                            f"{out_dir / 'shards'} remain resumable "
+                            f"(re-run the same command)")
+                    s.restarts += 1
+                    total_restarts += 1
+                    log(f"shard{s.index}: {why}; restarting with resume "
+                        f"(attempt {s.restarts + 1})")
+                    s.spawn()
+            line = _status_line(states)
+            if line != last_line:
+                last_line = line
+                log(line)
+    finally:
+        for s in states:
+            if s.proc is not None and s.proc.poll() is None:
+                s.signal_group(signal.SIGTERM)
+                try:
+                    s.proc.wait(timeout=10)
+                except subprocess.TimeoutExpired:
+                    s.signal_group(signal.SIGKILL)
+                    s.proc.wait()
+            s.close_log()
+
+    from repro.launch.merge_db import merge
+
+    merged = merge([s.out_dir for s in states], out_dir, verbose=verbose)
+    summary = {
+        "out": str(out_dir),
+        "shards": shards,
+        "cells": sum(s.last_payload.get("cells_done", 0) for s in states),
+        "restarts": total_restarts,
+        "restarts_per_shard": {f"shard{s.index}": s.restarts for s in states},
+        "evaluations": merged["datapoints"],
+        "duplicates_dropped": merged["duplicates_dropped"],
+        "best": aggregate_best(states),
+        "wall_s": round(time.time() - t0, 1),
+        "leaderboard": merged["leaderboard"],
+    }
+    write_json_atomic(out_dir / "summary.json", summary)
+    log(f"summary: {summary}")
+    return summary
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The orchestrator CLI surface, importable without touching jax (the
+    quickstart drift checker parses documented commands against it)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.orchestrator",
+        description="spawn, supervise, heal, and merge a sharded DSE "
+                    "campaign in one command")
+    ap.add_argument("--archs", default="qwen3-0.6b,stablelm-3b",
+                    help="comma-separated arch ids, or 'all'")
+    ap.add_argument("--shapes", default="train_4k,decode_32k",
+                    help="comma-separated shape cells, or 'all'")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="number of campaign subprocesses to spawn")
+    ap.add_argument("--out", default="artifacts/run",
+                    help="merged campaign dir (shards live in OUT/shards/)")
+    ap.add_argument("--mesh", default="small", choices=list(MESH_CHOICES))
+    ap.add_argument("--iterations", type=int, default=2)
+    ap.add_argument("--budget", type=int, default=3,
+                    help="evaluations per loop iteration")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="parallel dry-run compile processes per shard")
+    ap.add_argument("--strategy", default="ensemble",
+                    choices=list(STRATEGY_CHOICES))
+    ap.add_argument("--gate-factor", type=float, default=None,
+                    help="surrogate gate factor, forwarded to every shard "
+                         "(must be > 1)")
+    ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
+    ap.add_argument("--poll-interval", type=float, default=1.0,
+                    help="seconds between supervisor polls")
+    ap.add_argument("--hang-timeout", type=float, default=900.0,
+                    help="seconds without a heartbeat change before a shard "
+                         "is declared hung and restarted (must exceed the "
+                         "slowest single cell)")
+    ap.add_argument("--max-restarts", type=int, default=2,
+                    help="crash/hang restarts allowed per shard before the "
+                         "run fails")
+    ap.add_argument("--inject-kill", default=None, metavar="I:K",
+                    help="fault injection (tests/CI): crash shard I once "
+                         "after K completed cells and let the supervisor "
+                         "heal it")
+    return ap
+
+
+def main():
+    """CLI entry: validate arguments and hand off to
+    :func:`run_orchestrator`. Exits 2 on bad arguments, 1 when a shard
+    exhausts its restart budget."""
+    ap = build_parser()
+    args = ap.parse_args()
+    if args.gate_factor is not None and args.gate_factor <= 1.0:
+        ap.error(f"--gate-factor must be > 1, got {args.gate_factor}")
+    if args.shards < 1:
+        ap.error(f"--shards must be >= 1, got {args.shards}")
+    try:
+        inject = parse_inject_kill(args.inject_kill)
+    except ValueError as e:
+        ap.error(str(e))
+    try:
+        resolve_grid(args.archs, args.shapes)
+    except ValueError as e:
+        ap.error(str(e))
+    try:
+        run_orchestrator(archs=args.archs, shapes=args.shapes,
+                         shards=args.shards, out_dir=args.out,
+                         mesh=args.mesh, iterations=args.iterations,
+                         budget=args.budget, workers=args.workers,
+                         strategy=args.strategy, gate_factor=args.gate_factor,
+                         llm=args.llm, poll_interval=args.poll_interval,
+                         hang_timeout=args.hang_timeout,
+                         max_restarts=args.max_restarts, inject_kill=inject)
+    except RuntimeError as e:
+        print(f"[orchestrator] FAILED: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,9 @@ from repro.sharding.plan import ShardingPlan
 
 
 def main():
+    """CLI entry: run the continuous batcher over synthetic requests for a
+    reduced text architecture. Exits via SystemExit for vlm/audio archs
+    (their frontends are dry-run stubs, not servable)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
     ap.add_argument("--requests", type=int, default=8)

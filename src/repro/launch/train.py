@@ -18,6 +18,10 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 
 def main():
+    """CLI entry: train the (reduced) arch on this host's devices, or — for
+    full configs — build and lower the production-mesh train step without
+    executing it. Loss values depend on the synthetic-data seed but are
+    deterministic per invocation."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
     ap.add_argument("--reduced", action="store_true",

@@ -2,12 +2,10 @@
 
 ``DSELoop`` orchestrates (seed -> propose -> gate -> evaluate -> observe ->
 fine-tune); the strategies here decide where to look. ``make_strategy``
-builds any registered strategy by name — ``--strategy`` on the ``dse`` and
-``campaign`` CLIs resolves through it.
+builds any registered strategy by name — ``--strategy`` on the ``dse``,
+``campaign``, and ``orchestrator`` CLIs resolves through it.
 """
 from __future__ import annotations
-
-from typing import Optional
 
 from repro.search.annealing import SimulatedAnnealing
 from repro.search.base import (Candidate, SearchState, SearchStrategy,
@@ -18,13 +16,22 @@ from repro.search.evolutionary import Evolutionary
 from repro.search.gate import SurrogateGate
 from repro.search.greedy import GreedyNeighborhood
 from repro.search.llm_guided import LLMGuided
+from repro.search.transfer import TransferSeeded
 
-STRATEGIES = ("greedy", "llm", "anneal", "evolve", "ensemble")
+STRATEGIES = ("greedy", "llm", "anneal", "evolve", "transfer", "ensemble",
+              "ensemble+transfer")
 
 
 def make_strategy(name: str, *, llm_stack=None, seed: int = 0) -> SearchStrategy:
     """Build a fresh strategy instance (strategies carry per-cell state —
-    campaigns must construct one per (arch, shape, mesh) cell)."""
+    campaigns must construct one per (arch, shape, mesh) cell).
+
+    ``"ensemble"`` is the transfer-free bandit portfolio whose sharded
+    campaigns merge byte-for-byte; ``"ensemble+transfer"`` adds the
+    cross-workload :class:`~repro.search.transfer.TransferSeeded` member,
+    trading that byte-reproducibility for warm starts from similar cells.
+    Raises ``ValueError`` for an unknown name or for ``"llm"`` /
+    ``"ensemble*"``-with-LLM without an ``llm_stack``."""
     if name == "greedy":
         return GreedyNeighborhood(seed=seed)
     if name == "llm":
@@ -35,11 +42,15 @@ def make_strategy(name: str, *, llm_stack=None, seed: int = 0) -> SearchStrategy
         return SimulatedAnnealing(seed=seed)
     if name == "evolve":
         return Evolutionary(seed=seed)
-    if name == "ensemble":
+    if name == "transfer":
+        return TransferSeeded(seed=seed)
+    if name in ("ensemble", "ensemble+transfer"):
         members: list = [GreedyNeighborhood(seed=seed)]
         if llm_stack is not None:
             members.append(LLMGuided(llm_stack))
         members += [SimulatedAnnealing(seed=seed), Evolutionary(seed=seed)]
+        if name == "ensemble+transfer":
+            members.append(TransferSeeded(seed=seed))
         return Ensemble(members)
     raise ValueError(f"unknown strategy {name!r}; have {STRATEGIES}")
 
@@ -47,7 +58,7 @@ def make_strategy(name: str, *, llm_stack=None, seed: int = 0) -> SearchStrategy
 __all__ = [
     "Candidate", "SearchState", "SearchStrategy", "STRATEGIES",
     "GreedyNeighborhood", "LLMGuided", "SimulatedAnnealing", "Evolutionary",
-    "Ensemble", "SurrogateGate", "make_strategy",
+    "TransferSeeded", "Ensemble", "SurrogateGate", "make_strategy",
     "best_negative", "bound_of", "point_of", "rank_candidates",
     "select_candidates",
 ]

@@ -22,6 +22,10 @@ from repro.search.base import (Candidate, SearchState, bound_of, mutate,
 
 @dataclass
 class SimulatedAnnealing:
+    """Single-walker Metropolis search over the plan template (see module
+    docstring). Temperatures are in decades of log10(bound_s); cooling is
+    geometric per :meth:`observe` call. Deterministic given ``seed``."""
+
     name: str = "anneal"
     seed: int = 0
     t0: float = 0.5       # initial temperature, in log10-bound decades
@@ -34,14 +38,21 @@ class SimulatedAnnealing:
     _rng: random.Random = field(init=False)
 
     def __post_init__(self):
+        """Initialise the walker temperature and the acceptance RNG."""
         self._temp = self.t0
         self._rng = random.Random(self.seed * 7919 + 17)
 
     @property
     def temperature(self) -> float:
+        """Current walker temperature in log10(bound_s) decades; cools
+        geometrically toward ``t_min`` with every observed iteration."""
         return self._temp
 
     def propose(self, state: SearchState) -> List[Candidate]:
+        """``budget`` mutations of the walker position (adopted from the
+        incumbent on first call): hot walkers mutate up to 3 dimensions,
+        cold walkers exactly 1. Falls back to random template samples when
+        the cell has no incumbent yet. Deterministic per iteration."""
         if self._current is None:
             inc_b = bound_of(state.incumbent)
             if state.incumbent is not None and inc_b is not None:
@@ -64,6 +75,10 @@ class SimulatedAnnealing:
         return out
 
     def observe(self, datapoints: Sequence[DataPoint]) -> None:
+        """Metropolis step on the fastest own-proposed feasible result — a
+        better design always moves the walker, a worse one moves it with
+        probability ``exp(-delta_decades / T)`` — then cool one step.
+        Results this walker never proposed are ignored."""
         mine = [d for d in datapoints
                 if d.point.get("__key__") in self._proposed
                 and d.status == "ok" and d.metrics.get("bound_s")]

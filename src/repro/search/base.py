@@ -50,6 +50,10 @@ class SearchState:
     pool: List[DataPoint] = field(default_factory=list)
     cost_model: Any = None  # Optional[CostModel]; avoids a jax import here
     workload: Dict[str, float] = field(default_factory=dict)
+    # the evaluator's mesh name; mesh-scoped DB lookups (credit rebuild,
+    # transfer donors) use it so a DB holding the same (arch, shape) on two
+    # meshes never mixes measurements. None = unscoped (legacy/tests).
+    mesh: Optional[str] = None
 
 
 @runtime_checkable
@@ -58,9 +62,21 @@ class SearchStrategy(Protocol):
 
     name: str
 
-    def propose(self, state: SearchState) -> List[Candidate]: ...
+    def propose(self, state: SearchState) -> List[Candidate]:
+        """Return candidate designs for this iteration. May over-propose:
+        the loop dedupes against measured DB keys, surrogate-ranks, and
+        truncates to ``state.budget``. Must be deterministic given the
+        strategy's seed, the state, and the DB contents; must never raise
+        on an empty DB or missing incumbent. Each candidate carries its
+        provenance ``source`` tag (``search:<name>``) for the DB."""
+        ...
 
-    def observe(self, datapoints: Sequence[DataPoint]) -> None: ...
+    def observe(self, datapoints: Sequence[DataPoint]) -> None:
+        """Ingest every evaluated result of the iteration — positive,
+        negative (infeasible/error/rejected), and gate-``pruned`` rows
+        alike; strategies self-filter. Called exactly once per loop
+        iteration, after the batch lands in the DB."""
+        ...
 
 
 # ---------------------------------------------------------------------------
@@ -72,6 +88,8 @@ def point_of(dp: DataPoint) -> PlanPoint:
 
 
 def bound_of(dp: Optional[DataPoint]) -> Optional[float]:
+    """The measured roofline bound in seconds, or ``None`` for a missing,
+    failed, or infeasible data point."""
     if dp is None or dp.status != "ok":
         return None
     return dp.metrics.get("bound_s")

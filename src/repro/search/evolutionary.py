@@ -22,6 +22,10 @@ from repro.search.base import (Candidate, SearchState, mutate, point_of,
 
 @dataclass
 class Evolutionary:
+    """Tournament-selection + uniform-crossover search (see module
+    docstring). Fitness is measured ``bound_s`` (seconds, lower is
+    fitter); deterministic given ``seed`` and the iteration index."""
+
     name: str = "evolve"
     seed: int = 0
     pop_size: int = 8
@@ -33,6 +37,9 @@ class Evolutionary:
                                                      init=False)
 
     def population(self) -> List[Tuple[float, PlanPoint]]:
+        """The ``pop_size`` fittest observed ``(bound_s, point)`` pairs,
+        fastest first; empty until a feasible design has been observed or
+        seeded from the DB."""
         return sorted(self._pop.values(), key=lambda t: t[0])[: self.pop_size]
 
     def _seed_population(self, state: SearchState) -> None:
@@ -48,6 +55,11 @@ class Evolutionary:
         return min(contenders, key=lambda t: t[0])[1]
 
     def propose(self, state: SearchState) -> List[Candidate]:
+        """``budget`` children bred by tournament + uniform crossover (with
+        ``p_mutate`` single-dimension mutation), falling back to mutating
+        the incumbent or a random sample while the gene pool holds fewer
+        than two designs. The population self-seeds from the cell's
+        feasible DB rows on first call (resume inherits the gene pool)."""
         if not self._pop:
             self._seed_population(state)
         rng = random.Random(self.seed * 6007 + state.iteration)
@@ -73,6 +85,8 @@ class Evolutionary:
         return out
 
     def observe(self, datapoints: Sequence[DataPoint]) -> None:
+        """Add every feasible result to the gene pool (negatives never
+        breed); compact the pool when it outgrows 4x ``pop_size``."""
         for d in datapoints:
             b = d.metrics.get("bound_s")
             if d.status == "ok" and b:

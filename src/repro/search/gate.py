@@ -26,6 +26,12 @@ from repro.core.design_space import PlanPoint
 
 @dataclass
 class SurrogateGate:
+    """Calibration-guarded pre-compile filter (see module docstring).
+    ``factor`` is the prune threshold as a multiple of the incumbent's
+    measured ``bound_s``; ``max_val_rmse`` is in decades of log10(bound_s).
+    Fails safe: an untrained or badly-calibrated surrogate leaves the gate
+    inactive and every candidate passes through to evaluation."""
+
     cost_model: object  # CostModel (typed loosely: jax import stays deferred)
     factor: float = 4.0
     max_val_rmse: float = 0.35   # decades of log10(bound_s)
@@ -39,6 +45,7 @@ class SurrogateGate:
 
     @property
     def active(self) -> bool:
+        """Whether the last :meth:`calibrate` call armed the gate."""
         return self._active
 
     def calibrate(self, db: CostDB) -> bool:

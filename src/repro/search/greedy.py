@@ -16,11 +16,19 @@ from repro.search.base import Candidate, SearchState, point_of
 
 @dataclass
 class GreedyNeighborhood:
+    """The extracted Explorer policy: exhaustive single-dimension mutations
+    of the incumbent plus ``n_random`` random template samples. Stateless
+    and deterministic given ``seed`` and the iteration index."""
+
     name: str = "greedy"
     seed: int = 0
     n_random: int = 1
 
     def propose(self, state: SearchState) -> List[Candidate]:
+        """The incumbent's full device-legal neighborhood (empty when the
+        cell has no incumbent yet) plus ``n_random`` repaired random
+        samples; typically far more candidates than the budget — the loop's
+        surrogate ranking decides which survive the cut."""
         rng = random.Random(self.seed + state.iteration)
         out: List[Candidate] = []
         if state.incumbent is not None:
@@ -31,4 +39,4 @@ class GreedyNeighborhood:
         return out
 
     def observe(self, datapoints: Sequence[DataPoint]) -> None:
-        pass  # greedy state lives in the loop's incumbent pool
+        """No-op: greedy state lives in the loop's incumbent pool."""

@@ -18,10 +18,19 @@ from repro.search.base import (Candidate, SearchState, best_negative,
 
 @dataclass
 class LLMGuided:
+    """LLM-Stack-backed proposal engine (see module docstring). Determinism
+    follows the client: exact with the mock LLM, best-effort with a live
+    model. Failure mode: an unreachable/garbled LLM yields ``rejected``
+    negative data points and an empty candidate list, never an exception."""
+
     llm_stack: LLMStack
     name: str = "llm"
 
     def propose(self, state: SearchState) -> List[Candidate]:
+        """Ask the stack for refinements of the incumbent and (when one
+        exists) the fastest infeasible near-winner; unparseable or
+        template-violating responses are appended to the DB as ``rejected``
+        rows. Empty until the cell has an incumbent."""
         if state.incumbent is None:
             return []
         seeds = [(point_of(state.incumbent), state.incumbent)]
@@ -38,4 +47,4 @@ class LLMGuided:
         return out
 
     def observe(self, datapoints: Sequence[DataPoint]) -> None:
-        pass  # the stack re-reads the DB (RAG context) on every propose
+        """No-op: the stack re-reads the DB (RAG context) on every propose."""

@@ -1,0 +1,216 @@
+"""Orchestrator supervision: CLI surface, quickstart drift guard, and the
+kill/restart/merge fault-handling contract (supervisor restarts a killed
+shard, no cell is evaluated twice, the healed merged leaderboard is
+byte-identical to an uninterrupted run AND to the manual shard+merge flow)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.launch import orchestrator as orch
+from repro.launch.campaign import parse_shard, read_progress, write_progress
+
+REPO = Path(__file__).resolve().parents[1]
+TINY_PRELUDE_FILE = REPO / "tests" / "ci" / "tiny_prelude.py"
+
+
+# ---------------------------------------------------------------------------
+# CLI surface + spec parsing (no jax, no subprocesses)
+# ---------------------------------------------------------------------------
+def test_build_parser_flags_and_defaults():
+    ns = orch.build_parser().parse_args(
+        ["--archs", "all", "--shapes", "all", "--shards", "2",
+         "--out", "artifacts/run"])
+    assert ns.shards == 2 and ns.strategy == "ensemble"
+    assert ns.max_restarts == 2 and ns.hang_timeout == 900.0
+    with pytest.raises(SystemExit):
+        orch.build_parser().parse_args(["--strategy", "nope"])
+    with pytest.raises(SystemExit):
+        orch.build_parser().parse_args(["--mesh", "huge"])
+
+
+def test_parse_inject_kill_and_shard_specs():
+    assert orch.parse_inject_kill(None) is None
+    assert orch.parse_inject_kill("0:1") == (0, 1)
+    assert orch.parse_inject_kill("3:7") == (3, 7)
+    for bad in ("1", "a:b", "0:0", "-1:2"):
+        with pytest.raises(ValueError):
+            orch.parse_inject_kill(bad)
+    assert parse_shard(None) is None
+    assert parse_shard("1/4") == (1, 4)
+    for bad in ("x/y", "4/4", "1-4"):
+        with pytest.raises(ValueError):
+            parse_shard(bad)
+
+
+def test_build_shard_cmd_replays_campaign_flags(tmp_path):
+    cmd = orch.build_shard_cmd(
+        1, 3, tmp_path / "s1", archs="all", shapes="train_4k", mesh="tiny",
+        iterations=2, budget=3, workers=1, strategy="ensemble+transfer",
+        gate_factor=2.5, llm="mock")
+    assert cmd[:3] == [sys.executable, "-m", "repro.launch.campaign"]
+    assert cmd[cmd.index("--shard") + 1] == "1/3"
+    assert cmd[cmd.index("--strategy") + 1] == "ensemble+transfer"
+    assert cmd[cmd.index("--gate-factor") + 1] == "2.5"
+    # the command must parse against the campaign CLI it replays
+    from repro.launch.campaign import build_parser
+
+    build_parser().parse_args(cmd[3:])
+
+
+def test_shard_dirs_never_alias_out(tmp_path):
+    dirs = orch.shard_dirs_for(tmp_path / "run", 3)
+    assert len(dirs) == 3 and len(set(dirs)) == 3
+    assert all(d != tmp_path / "run" for d in dirs)
+    assert all(d.parent == tmp_path / "run" / "shards" for d in dirs)
+
+
+def test_run_orchestrator_rejects_bad_specs(tmp_path):
+    with pytest.raises(ValueError):
+        orch.run_orchestrator(archs="nope-arch", shapes="train_4k", shards=1,
+                              out_dir=tmp_path / "x")
+    with pytest.raises(ValueError):
+        orch.run_orchestrator(archs="qwen3-0.6b", shapes="train_4k", shards=0,
+                              out_dir=tmp_path / "x")
+    with pytest.raises(ValueError):
+        orch.run_orchestrator(archs="qwen3-0.6b", shapes="train_4k", shards=2,
+                              out_dir=tmp_path / "x", inject_kill=(5, 1))
+    assert not (tmp_path / "x" / "summary.json").exists()  # failed fast
+
+
+# ---------------------------------------------------------------------------
+# heartbeat file contract
+# ---------------------------------------------------------------------------
+def test_progress_roundtrip_and_torn_reads(tmp_path):
+    assert read_progress(tmp_path) == {}  # missing file = no news
+    write_progress(tmp_path, {"cells_done": 2, "ts": 1.0})
+    assert read_progress(tmp_path)["cells_done"] == 2
+    (tmp_path / "progress.json").write_text('{"cells_done": ')  # torn
+    assert read_progress(tmp_path) == {}
+    # atomic replace leaves no temp droppings
+    write_progress(tmp_path, {"cells_done": 3, "ts": 2.0})
+    assert [p.name for p in tmp_path.glob("*.tmp")] == []
+
+
+def test_aggregate_best_merges_shard_heartbeats(tmp_path):
+    a = orch.ShardProc(index=0, out_dir=tmp_path, cmd=[], env={})
+    b = orch.ShardProc(index=1, out_dir=tmp_path, cmd=[], env={})
+    a.last_payload = {"best": [{"cell": "x/s", "bound_s": 2.0},
+                              {"cell": "y/s", "bound_s": None}]}
+    b.last_payload = {"best": [{"cell": "z/s", "bound_s": 1.0}]}
+    top = orch.aggregate_best([a, b])
+    assert [r["cell"] for r in top] == ["z/s", "x/s"]  # fastest first, no Nones
+
+
+# ---------------------------------------------------------------------------
+# quickstart drift guard: the documented commands parse, and the checker
+# actually fails on drift (a never-silent canary for the CI smoke job)
+# ---------------------------------------------------------------------------
+def test_check_quickstart_passes_on_repo_docs():
+    r = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_quickstart.py")],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert r.stdout.count("[ok]") >= 3
+
+
+def test_check_quickstart_fails_on_drifted_command(tmp_path):
+    drifted = tmp_path / "README.md"
+    drifted.write_text("```bash\nPYTHONPATH=src python -m "
+                       "repro.launch.orchestrator --no-such-flag 1\n"
+                       "python -m repro.launch.dse --arch llama3-8b --shape train_4k\n"
+                       "python -m repro.launch.merge_db a b --out c\n```\n")
+    r = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_quickstart.py"),
+         str(drifted)],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+    assert r.returncode == 1
+    assert "--no-such-flag" in r.stdout + r.stderr
+
+
+def test_orchestrator_fails_fast_on_unhealable_shard(tmp_path, monkeypatch):
+    """A shard whose every attempt crashes (poisoned prelude) must fail the
+    run as soon as its restart budget is spent — terminating the other
+    shards — instead of letting them run to completion first."""
+    poison = tmp_path / "poison_prelude.py"
+    poison.write_text("raise RuntimeError('poisoned prelude')\n")
+    monkeypatch.setenv("REPRO_CAMPAIGN_PRELUDE", str(poison))
+    t0 = __import__("time").time()
+    with pytest.raises(RuntimeError, match="restart"):
+        orch.run_orchestrator(archs="qwen3-0.6b", shapes="train_4k",
+                              shards=2, out_dir=tmp_path / "run",
+                              mesh="tiny", iterations=1, budget=2, workers=1,
+                              poll_interval=0.1, max_restarts=1,
+                              verbose=False)
+    assert __import__("time").time() - t0 < 60  # no waiting out healthy shards
+    assert not (tmp_path / "run" / "leaderboard.json").exists()  # no merge
+    # crash logs survive for the post-mortem
+    assert (tmp_path / "run" / "shards" / "shard0" / "shard.log").exists()
+
+
+# ---------------------------------------------------------------------------
+# the fault-handling contract, end-to-end (real subprocesses, tiny configs)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_orchestrator_heals_killed_shard_and_merges_identically(tmp_path,
+                                                                monkeypatch):
+    """Kill shard 0 after its first completed cell; the supervisor must
+    restart it, the restarted shard must not re-run the finished cell, and
+    the merged leaderboard must be byte-identical to (a) an uninterrupted
+    orchestrator run and (b) the manual shard+merge_db flow."""
+    monkeypatch.setenv("REPRO_CAMPAIGN_PRELUDE", str(TINY_PRELUDE_FILE))
+    grid = dict(archs="qwen3-0.6b,stablelm-3b", shapes="train_4k,decode_32k",
+                mesh="tiny", iterations=1, budget=2, workers=1,
+                poll_interval=0.2, hang_timeout=300.0, verbose=False)
+
+    s_kill = orch.run_orchestrator(shards=2, out_dir=tmp_path / "killed",
+                                   inject_kill=(0, 1), **grid)
+    assert s_kill["restarts"] == 1, s_kill
+    assert s_kill["restarts_per_shard"]["shard0"] == 1
+
+    # the healed shard resumed its finished cell instead of re-running it
+    final = read_progress(tmp_path / "killed" / "shards" / "shard0")
+    assert final["status"] == "done" and final["cells_done"] == 2
+    assert final["resumed"] == 1 and final["ran"] == 1, final
+    # and the one-shot crash token disarmed itself
+    assert not (tmp_path / "killed" / "shards" / "shard0"
+                / orch.CRASH_TOKEN_FILE).exists()
+
+    s_clean = orch.run_orchestrator(shards=2, out_dir=tmp_path / "clean",
+                                    **grid)
+    assert s_clean["restarts"] == 0, s_clean
+
+    # manual flow: the two campaign commands + merge_db, same env hooks
+    from repro.launch.merge_db import merge
+
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "REPRO_CAMPAIGN_PRELUDE": str(TINY_PRELUDE_FILE)}
+    for i in range(2):
+        cmd = orch.build_shard_cmd(
+            i, 2, tmp_path / f"manual{i}", archs=grid["archs"],
+            shapes=grid["shapes"], mesh="tiny", iterations=1, budget=2,
+            workers=1, strategy="ensemble", gate_factor=None, llm="mock")
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=600)
+        assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+    merge([tmp_path / "manual0", tmp_path / "manual1"],
+          tmp_path / "manual", verbose=False)
+
+    killed = (tmp_path / "killed" / "leaderboard.json").read_bytes()
+    clean = (tmp_path / "clean" / "leaderboard.json").read_bytes()
+    manual = (tmp_path / "manual" / "leaderboard.json").read_bytes()
+    assert killed == clean == manual, (killed[:300], clean[:300], manual[:300])
+    rows = json.loads(killed)
+    assert len(rows) == 4 and all(r["status"] == "complete" for r in rows)
+    # every cell appears exactly once (no double evaluation survived merge)
+    cells = [(r["arch"], r["shape"]) for r in rows]
+    assert len(cells) == len(set(cells))
+
+    # summary written and internally consistent
+    summary = json.loads((tmp_path / "killed" / "summary.json").read_text())
+    assert summary["restarts"] == 1 and summary["shards"] == 2

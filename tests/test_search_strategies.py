@@ -48,7 +48,14 @@ def test_registry_builds_every_strategy():
     class _Stack:  # llm strategies only need .propose at call time
         pass
 
-    assert set(STRATEGIES) == {"greedy", "llm", "anneal", "evolve", "ensemble"}
+    assert set(STRATEGIES) == {"greedy", "llm", "anneal", "evolve",
+                               "transfer", "ensemble", "ensemble+transfer"}
+    # the CLI-side literal (kept separate so --help never imports jax) must
+    # track the registry exactly, or a strategy becomes CLI-unreachable /
+    # fails only at the first cell of an already-spawned campaign
+    from repro.launch.campaign import STRATEGY_CHOICES
+
+    assert set(STRATEGY_CHOICES) == set(STRATEGIES)
     for name in STRATEGIES:
         s = make_strategy(name, llm_stack=_Stack())
         assert hasattr(s, "propose") and hasattr(s, "observe") and s.name
