@@ -123,9 +123,12 @@ def _gate_mode(args, mesh, mesh_name, points, tmp: Path) -> list:
             # require_calibration=False: the warmup DB is far too small to
             # clear the guard; the benchmark demonstrates the mechanics
             ("gated", SurrogateGate(cm, factor=args.gate_factor,
+                                    min_factor=args.gate_min_factor,
                                     require_calibration=False))):
         if gate is not None:
             gate.calibrate(db)
+            print(f"gate: effective factor {gate.effective_factor:g} "
+                  f"(configured {gate.factor:g})", flush=True)
         ev = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / label),
                        cache=DryRunCache(tmp / f"c_{label}"),
                        max_workers=args.workers)
@@ -210,6 +213,9 @@ def main():
                     help="surrogate-gated vs ungated evaluation experiment")
     ap.add_argument("--gate-factor", type=float, default=2.0,
                     help="SurrogateGate prune factor for --gate")
+    ap.add_argument("--gate-min-factor", type=float, default=None,
+                    help="anneal the gate factor toward this as calibration "
+                         "improves (see SurrogateGate.min_factor)")
     ap.add_argument("--transfer", action="store_true",
                     help="cold vs transfer-seeded search experiment")
     ap.add_argument("--transfer-target", default="stablelm-3b",

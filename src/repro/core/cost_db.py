@@ -246,19 +246,28 @@ class CostDB:
               status: Optional[str] = None, mesh: Optional[str] = None) -> int:
         return len(self.query(arch, shape, status, mesh))
 
-    def training_set(self, split: Optional[str] = None,
+    def training_set(self, split: Optional[str] = None, *,
+                     arch: Optional[str] = None, shape: Optional[str] = None,
+                     mesh: Optional[str] = None,
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(features, targets [log10 bound_s], feasible mask) for the surrogate.
 
         ``split``: None = every usable row (legacy behavior); ``"train"`` /
         ``"val"`` = the deterministic ~80/20 key-hash partition (``val`` rows
         back the SurrogateGate's calibration guard, see ``_val_row``).
-        ``pruned`` rows are always skipped: they carry only a surrogate
-        *prediction*, never a measured outcome, and training on them would
-        let the gate teach the model its own mistakes.
+        ``arch``/``shape``/``mesh`` restrict to one cell's rows — the
+        gate's per-cell calibration measures validation error on exactly
+        the workload it is about to prune for. ``pruned`` rows are always
+        skipped: they carry only a surrogate *prediction*, never a measured
+        outcome, and training on them would let the gate teach the model
+        its own mistakes.
         """
         X, y, feas = [], [], []
         for d in self.all():
+            if ((arch is not None and d.arch != arch)
+                    or (shape is not None and d.shape != shape)
+                    or (mesh is not None and d.mesh != mesh)):
+                continue
             wl = d.metrics.get("workload")
             if not wl or d.status == "pruned":
                 continue

@@ -116,12 +116,16 @@ class CostModel:
             self.lora = jax.tree.map(lambda p, gg: p - lr * gg, self.lora, g)
         return float(loss_of(self.lora))
 
-    def validation_error(self, db: CostDB) -> Tuple[float, int]:
+    def validation_error(self, db: CostDB, *, arch: Optional[str] = None,
+                         shape: Optional[str] = None,
+                         mesh: Optional[str] = None) -> Tuple[float, int]:
         """(RMSE in log10-bound decades, n rows) on the held-out ``val``
         split, feasible rows only (infeasible rows have no measured bound).
-        Returns (nan, 0) when no validation rows exist — the gate treats
-        that as uncalibrated."""
-        X, y, feas = db.training_set(split="val")
+        ``arch``/``shape``/``mesh`` restrict to one cell's validation rows
+        (the SurrogateGate's per-cell guard). Returns (nan, 0) when no
+        validation rows exist — the gate treats that as uncalibrated."""
+        X, y, feas = db.training_set(split="val", arch=arch, shape=shape,
+                                     mesh=mesh)
         mask = feas > 0.5
         if not mask.any():
             return float("nan"), 0

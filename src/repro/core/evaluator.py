@@ -138,13 +138,16 @@ class Evaluator:
                 pred, pfeas = v
                 self.pruned_count += 1
                 base = self._base(arch, shape, pt, srcs[i], iteration)
+                # the threshold in force, annealing included — not the
+                # configured maximum (audit rows must match the decision)
+                factor = getattr(gate, "effective_factor", gate.factor)
                 results[i] = DataPoint(
                     **base, status="pruned",
                     reason=(f"surrogate gate: predicted {pred:.3g}s > "
-                            f"{gate.factor:g}x incumbent {incumbent_bound:.3g}s"),
+                            f"{factor:g}x incumbent {incumbent_bound:.3g}s"),
                     metrics={"workload": wl, "predicted_bound_s": pred,
                              "predicted_p_feasible": pfeas,
-                             "gate_factor": gate.factor})
+                             "gate_factor": factor})
             pending = still
 
         n_workers = self.max_workers if workers is None else workers

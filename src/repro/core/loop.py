@@ -85,7 +85,22 @@ class DSELoop:
     # ------------------------------------------------------------------
     def run(self, arch: str, shape: str, *, iterations: int = 4,
             eval_budget: int = 3, seed_point: Optional[PlanPoint] = None,
-            verbose: bool = True) -> LoopReport:
+            verbose: bool = True,
+            heartbeat: Optional[Callable[[Dict], None]] = None) -> LoopReport:
+        """Run the loop for one cell and return its :class:`LoopReport`.
+
+        ``heartbeat``, when given, is called with a small progress dict —
+        ``{"iteration", "phase", "evaluated", "compiled", "pruned",
+        "cache_hits", "best_bound"}`` — after the baseline evaluation
+        (iteration 0), after every proposal round (``phase="proposed"``),
+        after every completed ``evaluate_batch`` (``phase="evaluated"``),
+        and at the end of every iteration (``phase="iteration"``).
+        Campaigns use it to refresh their ``progress.json`` at
+        iteration/batch granularity: no supervisor-visible gap ever spans
+        more than one slow step (one LLM proposal round, one evaluation
+        batch, or one observe+fine-tune tail), which is what lets a hang
+        timeout sit far below one cell's wall time; the callback must be
+        cheap and must not raise."""
         cfg = get_config(arch)
         cell = SHAPE_BY_NAME[shape]
         template = PlanTemplate(cfg, cell, dict(self.evaluator.mesh.shape))
@@ -104,10 +119,20 @@ class DSELoop:
         # accelerator design with pre-defined parameters as its input)
         seed = seed_point or baseline_point(cell, template)
         t0 = time.time()
+        cache = self.evaluator.cache
+        base_hits0 = cache.hits if cache is not None else 0
+        base_compiles0 = self.evaluator.compile_count
         base_dp = self.registry.call("simulate", arch=arch, shape=shape,
                                      point=dict(seed.dims), iteration=0,
                                      source="expert")
         report.baseline = base_dp
+        if heartbeat is not None:
+            heartbeat({"iteration": 0, "phase": "baseline", "evaluated": 1,
+                       "compiled": self.evaluator.compile_count - base_compiles0,
+                       "pruned": 0,
+                       "cache_hits": (cache.hits - base_hits0)
+                       if cache is not None else 0,
+                       "best_bound": base_dp.metrics.get("bound_s")})
         log(f"baseline: {base_dp.status} bound={base_dp.metrics.get('bound_s')}s "
             f"dom={base_dp.metrics.get('dominant')} ({time.time()-t0:.0f}s)")
 
@@ -126,11 +151,19 @@ class DSELoop:
             ranked = select_candidates(state, cands)
             log(f"iter {it}: {len(cands)} proposed -> {len(ranked)} selected "
                 f"({_source_counts(ranked)})")
+            if heartbeat is not None:
+                # propose can be slow (a real LLM call) — beat before the
+                # batch so no single supervisor gap spans propose AND eval
+                heartbeat({"iteration": it, "phase": "proposed",
+                           "evaluated": 0, "compiled": 0, "pruned": 0,
+                           "cache_hits": 0,
+                           "best_bound": (incumbent.metrics.get("bound_s")
+                                          if incumbent else None)})
 
             # --- gate + batch-evaluate ---
             if self.gate is not None:
-                self.gate.calibrate(self.db)
-            cache = self.evaluator.cache
+                self.gate.calibrate(self.db, arch=arch, shape=shape,
+                                    mesh=self.evaluator.mesh_name)
             hits0 = cache.hits if cache is not None else 0
             compiles0 = self.evaluator.compile_count
             pruned0 = self.evaluator.pruned_count
@@ -140,6 +173,17 @@ class DSELoop:
                 gate=self.gate,
                 incumbent_bound=(incumbent.metrics.get("bound_s")
                                  if incumbent.status == "ok" else None))
+            if heartbeat is not None:
+                # batch done: refresh the supervisor heartbeat before the
+                # (possibly slow) observe/fine-tune tail of the iteration
+                heartbeat({"iteration": it, "phase": "evaluated",
+                           "evaluated": len(new_dps),
+                           "compiled": self.evaluator.compile_count - compiles0,
+                           "pruned": self.evaluator.pruned_count - pruned0,
+                           "cache_hits": (cache.hits - hits0)
+                           if cache is not None else 0,
+                           "best_bound": (incumbent.metrics.get("bound_s")
+                                          if incumbent else None)})
             for dp in new_dps:
                 if (self.approve_fn is not None and dp.status == "ok"
                         and not self.approve_fn(dp)):
@@ -168,7 +212,7 @@ class DSELoop:
                 r = self.registry.call("finetune_cost_model")
                 log("  " + _finetune_msg(r))
 
-            report.iterations.append({
+            entry = {
                 "iteration": it,
                 "evaluated": len(new_dps),
                 "compiled": self.evaluator.compile_count - compiles0,
@@ -179,7 +223,10 @@ class DSELoop:
                                if isinstance(strategy, Ensemble) else None),
                 "best_bound": (_best_of(pool).metrics.get("bound_s")
                                if _best_of(pool) else None),
-            })
+            }
+            report.iterations.append(entry)
+            if heartbeat is not None:
+                heartbeat({**entry, "phase": "iteration"})
 
         report.best = _best_of(pool) or self.db.best(arch, shape)
         if report.best:

@@ -60,9 +60,23 @@ Outputs under --out:
     reports/{arch}__{shape}__{mesh}.json   per-cell loop reports
     leaderboard.json                  cells ranked by best bound_s
     progress.json                     live heartbeat (atomically replaced
-                                      after every cell; the orchestrator's
+                                      after every loop iteration, every
+                                      completed evaluation batch, and every
+                                      cell boundary; the orchestrator's
                                       hang detection and leaderboard
                                       aggregation read it)
+
+Heartbeat payload contract (what the orchestrator and dashboards rely on):
+``evaluations`` / ``compiles`` / ``pruned`` are *run-local* — they count
+only this attempt's work, so a shard restarted with resume never appears to
+redo the cells it skipped; the cumulative view (prior attempts included)
+lives under ``evaluations_total`` / ``compiles_total`` / ``pruned_total``.
+``cell_in_progress`` ("arch/shape") and ``iteration`` identify the work
+mid-cell (both null at cell boundaries), and ``iter_evaluated`` /
+``iter_compiled`` / ``iter_pruned`` / ``iter_cache_hits`` carry the last
+iteration's deltas. Because the heartbeat moves at proposal/batch/
+iteration granularity, a supervisor hang timeout only has to exceed the
+slowest single iteration step, never a whole cell.
 
 Test/CI hooks (environment variables, ignored when unset):
     REPRO_CAMPAIGN_PRELUDE      path to a python file exec()d by ``main()``
@@ -295,17 +309,55 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     cell_best: List[Dict] = []  # {"cell": "arch/shape", "bound_s": float|None}
     counts = {"ran": 0, "resumed": 0, "unsupported": 0}
 
-    def progress(status: str) -> None:
+    # run-local counter baselines: the DB file (and, via the prior
+    # heartbeat, the compile/prune totals) persist across supervisor
+    # restarts, so raw counters would double-count the work a resumed
+    # attempt skipped. The heartbeat reports this attempt's deltas under
+    # the headline keys and keeps cumulative totals under *_total.
+    prior_hb = read_progress(out_dir)
+    evals0 = db.count()
+    compiles0 = evaluator.compile_count
+    pruned0 = evaluator.pruned_count
+    compiles_prior = int(prior_hb.get("compiles_total", 0) or 0)
+    pruned_prior = int(prior_hb.get("pruned_total", 0) or 0)
+
+    def progress(status: str, *, cell: Optional[str] = None,
+                 iteration: Optional[int] = None,
+                 iter_stats: Optional[Dict] = None) -> None:
         top = sorted((r for r in cell_best if r["bound_s"] is not None),
                      key=lambda r: r["bound_s"])[:5]
-        write_progress(out_dir, {
+        compiles = evaluator.compile_count - compiles0
+        pruned = evaluator.pruned_count - pruned0
+        evals = db.count()  # once per beat: count() copies the row cache
+        payload = {
             "pid": os.getpid(), "mesh": mesh_name,
             "shard": f"{shard[0]}/{shard[1]}" if shard else None,
             "status": status,
             "cells_total": len(cells), "cells_done": len(cell_rows),
             **counts,
-            "evaluations": db.count(), "compiles": evaluator.compile_count,
-            "best": top, "ts": round(time.time(), 3)})
+            "cell_in_progress": cell, "iteration": iteration,
+            "evaluations": evals - evals0,
+            "compiles": compiles, "pruned": pruned,
+            "evaluations_total": evals,
+            "compiles_total": compiles_prior + compiles,
+            "pruned_total": pruned_prior + pruned,
+            "best": top, "ts": round(time.time(), 3)}
+        if iter_stats:
+            payload.update({f"iter_{k}": iter_stats.get(k) for k in
+                            ("evaluated", "compiled", "pruned", "cache_hits",
+                             "phase")})
+        write_progress(out_dir, payload)
+
+    def cell_heartbeat(arch: str, shape: str):
+        """The per-iteration heartbeat callback threaded into DSELoop.run:
+        refreshes progress.json after every loop iteration / evaluation
+        batch so the supervisor's hang detection works mid-cell."""
+        cell = f"{arch}/{shape}"
+
+        def beat(info: Dict) -> None:
+            progress("running", cell=cell, iteration=info.get("iteration"),
+                     iter_stats=info)
+        return beat
 
     def note_cell(arch: str, shape: str) -> None:
         best = db.best(arch, shape, mesh=mesh_name)
@@ -355,7 +407,8 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
                        cost_model=cost_model, gate=gate,
                        strategy=make_strategy(strategy, llm_stack=stack))
         report = loop.run(arch, shape, iterations=iterations,
-                          eval_budget=budget, verbose=verbose)
+                          eval_budget=budget, verbose=verbose,
+                          heartbeat=cell_heartbeat(arch, shape))
         out = _cell_report(report)
         out["status"] = "complete"
         out["wall_s"] = round(time.time() - t_cell, 1)
@@ -375,17 +428,24 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     # order merge_db reconstructs from report files after a sharded run
     cell_rows.sort(key=lambda c: (c["arch"], c["shape"], c["mesh"]))
     leaderboard = build_leaderboard(db, cell_rows)
-    lb_path = out_dir / "leaderboard.json"
-    lb_path.write_text(json.dumps(leaderboard, indent=1, default=str))
+    # atomic like every other campaign artifact: a supervisor SIGKILL (or a
+    # reader racing the write) must never see a torn leaderboard
+    lb_path = write_json_atomic(out_dir / "leaderboard.json", leaderboard)
 
+    evals = db.count()
     summary = {
         "mesh": mesh_name, "cells": len(cell_rows), **counts,
         "shard": f"{shard[0]}/{shard[1]}" if shard else None,
         "strategy": strategy,
         "wall_s": round(time.time() - t0, 1),
-        "evaluations": db.count(),
-        "compiles": evaluator.compile_count,
-        "pruned": evaluator.pruned_count,
+        # run-local work vs cumulative totals: same contract as the
+        # heartbeat (a resumed attempt reports only what it actually did)
+        "evaluations": evals - evals0,
+        "compiles": evaluator.compile_count - compiles0,
+        "pruned": evaluator.pruned_count - pruned0,
+        "evaluations_total": evals,
+        "compiles_total": compiles_prior + evaluator.compile_count - compiles0,
+        "pruned_total": pruned_prior + evaluator.pruned_count - pruned0,
         "cache": cache.stats(),
         "leaderboard": str(lb_path),
     }

@@ -34,7 +34,7 @@ from pathlib import Path
 from typing import Dict, List, Sequence, Tuple
 
 from repro.core.cost_db import CostDB, DataPoint
-from repro.launch.campaign import build_leaderboard
+from repro.launch.campaign import build_leaderboard, write_json_atomic
 
 
 def merge_cost_dbs(shard_dbs: Sequence[Path], out_db: Path,
@@ -127,10 +127,10 @@ def rebuild_leaderboard(out_dir: Path) -> Path:
                      "improvement": d.get("improvement")})
     rows.sort(key=lambda c: (c["arch"], c["shape"], c["mesh"]))
     db = CostDB(out_dir / "cost_db.jsonl")
-    lb_path = out_dir / "leaderboard.json"
-    lb_path.write_text(json.dumps(build_leaderboard(db, rows), indent=1,
-                                  default=str))
-    return lb_path
+    # same serialization as run_campaign, and atomic for the same reason:
+    # a reader (or a killed merge) must never see a torn leaderboard
+    return write_json_atomic(out_dir / "leaderboard.json",
+                             build_leaderboard(db, rows))
 
 
 def merge(shard_dirs: Sequence[Path | str], out_dir: Path | str,

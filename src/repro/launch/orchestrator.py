@@ -4,24 +4,32 @@ Replaces the manual quickstart workflow (run n ``campaign --shard i/n``
 processes by hand, then ``merge_db``) with a supervisor that owns the whole
 lifecycle:
 
-* **spawn** — launches the n shard subprocesses (``python -m
-  repro.launch.campaign --shard i/n --out OUT/shards/shard{i}``), each with
-  its own log file and output dir;
+* **spawn** — dispatches the n shard campaigns (``python -m
+  repro.launch.campaign --shard i/n``) through a pluggable
+  :class:`~repro.launch.executors.ShardExecutor`: local subprocesses by
+  default (``--executor local``), remote hosts over ssh (``--executor ssh
+  --hosts h0,h1,...``), or the ssh code path with a local transport
+  (``--executor loopback``, CI/tests); each shard gets its own log file and
+  output dir ``OUT/shards/shard{i}``;
 * **monitor** — polls every shard's atomically-replaced ``progress.json``
-  heartbeat (cells done, evaluations, compiles, per-cell incumbent bounds)
-  and streams an aggregated live leaderboard to stdout;
+  heartbeat and streams an aggregated live leaderboard to stdout. The
+  campaign refreshes the heartbeat after **every proposal round, evaluation
+  batch, and loop iteration**, not just at cell boundaries, so hang
+  detection stays sharp even when one cell takes hours;
 * **heal** — a shard that exits nonzero, or whose heartbeat goes stale for
-  ``--hang-timeout`` seconds, is killed and relaunched with the same
-  command. Campaign resume semantics make the restart cheap and safe:
-  completed cells are skipped via their report files, and the shard's
-  content-addressed dry-run cache replays any compiles the crashed attempt
-  already paid for — no cell is evaluated twice. A shard that crashes more
-  than ``--max-restarts`` times fails the run (every other shard is
-  terminated, nothing is merged);
-* **merge** — on success, folds the shard dirs into ``--out`` via
-  ``repro.launch.merge_db`` (dedup by design identity, earliest record
-  wins), so the single invocation ends with the same byte-stable
-  ``leaderboard.json`` the manual shard+merge flow produces.
+  ``--hang-timeout`` seconds, is killed (whole process group, local or
+  remote) and relaunched with the same command. Campaign resume semantics
+  make the restart cheap and safe: completed cells are skipped via their
+  report files, and the shard's content-addressed dry-run cache replays any
+  compiles the crashed attempt already paid for — no cell is evaluated
+  twice. A shard that crashes more than ``--max-restarts`` times fails the
+  run (every other shard is terminated, nothing is merged);
+* **merge** — on success, each shard dir is collected to this machine
+  (a no-op for local shards, an rsync for ssh ones) and folded into
+  ``--out`` via ``repro.launch.merge_db`` (dedup by design identity,
+  earliest record wins), so the single invocation ends with the same
+  byte-stable ``leaderboard.json`` the manual shard+merge flow produces —
+  whichever executor ran the shards.
 
 Quickstart (the whole campaign, supervised, one command):
 
@@ -33,7 +41,9 @@ shard I after K completed cells — the shard dies abruptly at a cell boundary
 (exit code 86, via the campaign's ``REPRO_CAMPAIGN_CRASH_TOKEN`` hook) and
 the supervisor must restart it. Because the crash lands between cells, the
 healed run's merged leaderboard is byte-identical to an uninterrupted one;
-tier-1 asserts exactly that (``tests/test_orchestrator.py``).
+tier-1 asserts exactly that (``tests/test_orchestrator.py``). The token is
+a local file, so injection works with the ``local`` and ``loopback``
+executors (a real ssh shard never sees it).
 
 Pure supervision — this module never imports jax, so ``--help`` and the
 monitoring loop stay instant no matter what the shards are compiling.
@@ -41,84 +51,29 @@ monitoring loop stay instant no matter what the shards are compiling.
 from __future__ import annotations
 
 import argparse
-import os
 import signal
 import subprocess
 import sys
 import time
-from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.launch.campaign import (MESH_CHOICES, STRATEGY_CHOICES,
-                                   read_progress, resolve_grid,
-                                   write_json_atomic)
+                                   resolve_grid, write_json_atomic)
+from repro.launch.executors import (EXECUTOR_CHOICES, ShardExecutor,
+                                    ShardProc, make_executor)
 
 CRASH_TOKEN_FILE = ".crash_token"
-
-
-@dataclass
-class ShardProc:
-    """Supervisor-side state for one shard subprocess: its launch command,
-    output dir, the live ``Popen`` handle, restart count, and the last
-    heartbeat payload/time used for hang detection."""
-
-    index: int
-    out_dir: Path
-    cmd: List[str]
-    env: Dict[str, str]
-    proc: Optional[subprocess.Popen] = None
-    log_handle: Optional[object] = None
-    restarts: int = 0
-    done: bool = False
-    failed: bool = False
-    last_beat: float = field(default_factory=time.time)
-    last_payload: Dict = field(default_factory=dict)
-
-    @property
-    def log_path(self) -> Path:
-        """The shard's combined stdout+stderr log (appended across restarts,
-        so post-mortems see every attempt)."""
-        return self.out_dir / "shard.log"
-
-    def spawn(self) -> None:
-        """(Re)launch the shard subprocess, appending to its log file. The
-        shard leads its own session/process group so :meth:`signal_group`
-        reaches its evaluator pool workers too."""
-        self.out_dir.mkdir(parents=True, exist_ok=True)
-        self.log_handle = self.log_path.open("ab")
-        self.proc = subprocess.Popen(self.cmd, stdout=self.log_handle,
-                                     stderr=subprocess.STDOUT, env=self.env,
-                                     start_new_session=True)
-        self.last_beat = time.time()
-
-    def signal_group(self, sig: int) -> None:
-        """Deliver ``sig`` to the shard's whole process group (the campaign
-        process AND its spawned compile-pool workers — killing only the
-        leader would orphan workers that keep burning CPU against the
-        restarted attempt). Falls back to signalling the leader alone if
-        the group is already gone; a fully-reaped shard is a no-op."""
-        if self.proc is None:
-            return
-        try:
-            os.killpg(self.proc.pid, sig)  # pgid == pid (start_new_session)
-        except (ProcessLookupError, PermissionError):
-            try:
-                self.proc.send_signal(sig)
-            except (ProcessLookupError, OSError):
-                pass
-
-    def close_log(self) -> None:
-        """Close the log handle (idempotent)."""
-        if self.log_handle is not None:
-            self.log_handle.close()
-            self.log_handle = None
 
 
 def child_env() -> Dict[str, str]:
     """The shard subprocess environment: the supervisor's env with this
     checkout's ``src`` prepended to PYTHONPATH, so ``python -m
-    repro.launch.campaign`` resolves the same code the supervisor runs."""
+    repro.launch.campaign`` resolves the same code the supervisor runs
+    (ssh-dispatched shards get a remote-checkout PYTHONPATH instead, see
+    ``SSHExecutor._forward_env``)."""
+    import os
+
     env = dict(os.environ)
     src = str(Path(__file__).resolve().parents[2])
     prior = env.get("PYTHONPATH")
@@ -139,7 +94,8 @@ def build_shard_cmd(i: int, shards: int, shard_dir: Path, *, archs: str,
                     gate_factor: Optional[float], llm: str) -> List[str]:
     """The exact ``repro.launch.campaign`` argv for shard ``i`` of
     ``shards`` — one place, so supervisor restarts always replay the
-    original command (campaign resume makes that idempotent)."""
+    original command (campaign resume makes that idempotent). Remote
+    executors rewrite only the interpreter and the ``--out`` value."""
     cmd = [sys.executable, "-m", "repro.launch.campaign",
            "--archs", archs, "--shapes", shapes, "--mesh", mesh,
            "--iterations", str(iterations), "--budget", str(budget),
@@ -179,16 +135,21 @@ def aggregate_best(shard_states: Sequence[ShardProc], k: int = 5) -> List[Dict]:
 
 
 def _status_line(shard_states: Sequence[ShardProc]) -> str:
-    """One-line aggregated view of every shard + the global incumbent."""
+    """One-line aggregated view of every shard + the global incumbent.
+    ``evals`` counts are *run-local* (this attempt's work, see the campaign
+    heartbeat contract), so a restarted shard never appears to redo the
+    work its resume skipped."""
     parts = []
     for s in shard_states:
         p = s.last_payload
         done, total = p.get("cells_done", 0), p.get("cells_total", "?")
         tag = ("failed" if s.failed else "done" if s.done else
                p.get("status", "starting"))
+        cell = p.get("cell_in_progress")
+        at = (f" @{cell}#{p.get('iteration')}" if cell else "")
         extra = f", {p.get('evaluations', 0)} evals" if p else ""
         restarts = f", restarts {s.restarts}" if s.restarts else ""
-        parts.append(f"shard{s.index} {done}/{total} {tag}{extra}{restarts}")
+        parts.append(f"shard{s.index} {done}/{total} {tag}{at}{extra}{restarts}")
     best = aggregate_best(shard_states, k=1)
     if best:
         parts.append(f"best {best[0]['bound_s']:.4g}s ({best[0]['cell']})")
@@ -200,33 +161,48 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                      iterations: int = 2, budget: int = 3, workers: int = 2,
                      strategy: str = "ensemble",
                      gate_factor: Optional[float] = None, llm: str = "mock",
-                     poll_interval: float = 1.0, hang_timeout: float = 900.0,
+                     poll_interval: float = 1.0, hang_timeout: float = 300.0,
                      max_restarts: int = 2,
                      inject_kill: Optional[Tuple[int, int]] = None,
+                     executor: str = "local",
+                     hosts: Optional[Sequence[str]] = None,
+                     remote_root: Optional[str] = None,
+                     remote_repo: Optional[str] = None,
+                     remote_python: str = "python3",
                      verbose: bool = True) -> Dict:
     """Run the full supervised campaign; returns the summary dict (also
     written to ``OUT/summary.json``).
 
-    Spawns ``shards`` campaign subprocesses over the sorted arch x shape
-    grid, supervises them (crash/hang restart with resume, up to
-    ``max_restarts`` per shard), and merges their outputs into ``out_dir``
+    Dispatches ``shards`` campaign processes over the sorted arch x shape
+    grid through the chosen :class:`~repro.launch.executors.ShardExecutor`,
+    supervises them (crash/hang restart with resume, up to ``max_restarts``
+    per shard), collects every shard dir local, and merges into ``out_dir``
     on success. ``hang_timeout`` is wall seconds without a heartbeat
-    *change* — it must exceed the slowest single cell, since the campaign
-    heartbeats at cell boundaries. Raises ``RuntimeError`` when a shard
-    exhausts its restart budget (remaining shards are terminated and
-    nothing is merged — the shard dirs stay resumable). ``archs`` /
-    ``shapes`` are the raw CLI strings (``"all"`` or comma-separated) and
-    are validated up front via :func:`repro.launch.campaign.resolve_grid`.
+    *change* — the campaign heartbeats after every proposal round,
+    evaluation batch, and loop iteration, so the timeout must exceed the
+    slowest single iteration *step* (one proposal round, one evaluation
+    batch, or one fine-tune tail; budget a few extra seconds for the jax
+    import before a fresh shard's first beat), never a whole cell. Raises
+    ``RuntimeError`` when a shard exhausts its restart budget (remaining
+    shards are terminated and nothing is merged — the shard dirs stay
+    resumable) and ``ValueError`` on inconsistent arguments (unknown grid
+    ids, ssh without hosts, ``--inject-kill`` with a remote executor).
     Determinism: with the mock LLM and a transfer-free strategy the merged
-    leaderboard is byte-identical to the manual shard+merge flow, kills or
+    leaderboard is byte-identical to the manual shard+merge flow — kills or
     not (injected crashes land at cell boundaries; resume skips completed
-    cells)."""
+    cells), and whichever executor ran the shards."""
     resolve_grid(archs, shapes)  # fail fast, before any process spawns
     if shards < 1:
         raise ValueError(f"need shards >= 1, got {shards}")
     if inject_kill is not None and not (0 <= inject_kill[0] < shards):
         raise ValueError(f"--inject-kill shard {inject_kill[0]} outside "
                          f"0..{shards - 1}")
+    if inject_kill is not None and executor == "ssh":
+        raise ValueError("--inject-kill arms a local token file; it is "
+                         "supported with --executor local or loopback only")
+    ex: ShardExecutor = make_executor(
+        executor, hosts=hosts, remote_root=remote_root,
+        remote_repo=remote_repo, remote_python=remote_python)
     out_dir = Path(out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
 
@@ -256,20 +232,23 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
     last_line = ""
     try:
         for s in states:
-            s.spawn()
-            log(f"shard{s.index}: pid {s.proc.pid} -> {s.out_dir}")
+            ex.spawn(s)
+            log(f"shard{s.index}: pid {s.proc.pid} [{ex.name}] -> {s.out_dir}")
 
         while not all(s.done or s.failed for s in states):
             time.sleep(poll_interval)
-            now = time.time()
             for s in states:
                 if s.done or s.failed:
                     continue
-                payload = read_progress(s.out_dir)
+                payload = ex.read_heartbeat(s)
+                # per-shard clock, stamped AFTER the (possibly slow, e.g.
+                # ssh) heartbeat fetch: a stalled transport on one shard
+                # must never age another shard's hang clock
+                now = time.time()
                 if payload and payload != s.last_payload:
                     s.last_payload = payload
                     s.last_beat = now
-                rc = s.proc.poll()
+                rc = ex.poll(s)
                 crashed = rc is not None and rc != 0
                 hung = rc is None and (now - s.last_beat) > hang_timeout
                 if rc == 0:
@@ -277,13 +256,13 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                     s.close_log()
                     # one final read: the shard's last heartbeat ("done",
                     # full counts) may have landed after this poll's read
-                    s.last_payload = read_progress(s.out_dir) or s.last_payload
+                    s.last_payload = ex.read_heartbeat(s) or s.last_payload
                     log(f"shard{s.index}: completed "
                         f"({s.last_payload.get('cells_done', '?')} cells)")
                 elif crashed or hung:
                     # unconditional: a crashed leader can leave pool workers
                     # mid-compile just like a hung one; no-op once reaped
-                    s.signal_group(signal.SIGKILL)
+                    ex.signal(s, signal.SIGKILL)
                     if hung:
                         s.proc.wait()
                     s.close_log()
@@ -306,7 +285,7 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                     total_restarts += 1
                     log(f"shard{s.index}: {why}; restarting with resume "
                         f"(attempt {s.restarts + 1})")
-                    s.spawn()
+                    ex.spawn(s)
             line = _status_line(states)
             if line != last_line:
                 last_line = line
@@ -314,13 +293,16 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
     finally:
         for s in states:
             if s.proc is not None and s.proc.poll() is None:
-                s.signal_group(signal.SIGTERM)
+                ex.signal(s, signal.SIGTERM)
                 try:
                     s.proc.wait(timeout=10)
                 except subprocess.TimeoutExpired:
-                    s.signal_group(signal.SIGKILL)
+                    ex.signal(s, signal.SIGKILL)
                     s.proc.wait()
             s.close_log()
+
+    for s in states:
+        ex.collect(s)
 
     from repro.launch.merge_db import merge
 
@@ -328,6 +310,8 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
     summary = {
         "out": str(out_dir),
         "shards": shards,
+        "executor": ex.name,
+        "hosts": list(hosts) if hosts else None,
         "cells": sum(s.last_payload.get("cells_done", 0) for s in states),
         "restarts": total_restarts,
         "restarts_per_shard": {f"shard{s.index}": s.restarts for s in states},
@@ -354,7 +338,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--shapes", default="train_4k,decode_32k",
                     help="comma-separated shape cells, or 'all'")
     ap.add_argument("--shards", type=int, default=2,
-                    help="number of campaign subprocesses to spawn")
+                    help="number of campaign processes to dispatch")
     ap.add_argument("--out", default="artifacts/run",
                     help="merged campaign dir (shards live in OUT/shards/)")
     ap.add_argument("--mesh", default="small", choices=list(MESH_CHOICES))
@@ -369,19 +353,37 @@ def build_parser() -> argparse.ArgumentParser:
                     help="surrogate gate factor, forwarded to every shard "
                          "(must be > 1)")
     ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
+    ap.add_argument("--executor", default="local",
+                    choices=list(EXECUTOR_CHOICES),
+                    help="where shards run: local subprocesses, remote "
+                         "hosts over ssh, or the ssh path with a local "
+                         "transport (loopback; tests/CI)")
+    ap.add_argument("--hosts", default=None,
+                    help="comma-separated ssh hosts for --executor ssh "
+                         "(round-robin by shard index)")
+    ap.add_argument("--remote-root", default=None,
+                    help="shard output root on the remote host (default: "
+                         "the same absolute path as the local shard dir)")
+    ap.add_argument("--remote-repo", default=None,
+                    help="repo checkout path on the remote host (default: "
+                         "this checkout's path)")
+    ap.add_argument("--remote-python", default="python3",
+                    help="python interpreter on the remote host")
     ap.add_argument("--poll-interval", type=float, default=1.0,
                     help="seconds between supervisor polls")
-    ap.add_argument("--hang-timeout", type=float, default=900.0,
+    ap.add_argument("--hang-timeout", type=float, default=300.0,
                     help="seconds without a heartbeat change before a shard "
-                         "is declared hung and restarted (must exceed the "
-                         "slowest single cell)")
+                         "is declared hung and restarted; the campaign "
+                         "heartbeats every proposal round / evaluation "
+                         "batch / iteration, so this must exceed the "
+                         "slowest single step (never a whole cell)")
     ap.add_argument("--max-restarts", type=int, default=2,
                     help="crash/hang restarts allowed per shard before the "
                          "run fails")
     ap.add_argument("--inject-kill", default=None, metavar="I:K",
                     help="fault injection (tests/CI): crash shard I once "
                          "after K completed cells and let the supervisor "
-                         "heal it")
+                         "heal it (local/loopback executors only)")
     return ap
 
 
@@ -395,6 +397,8 @@ def main():
         ap.error(f"--gate-factor must be > 1, got {args.gate_factor}")
     if args.shards < 1:
         ap.error(f"--shards must be >= 1, got {args.shards}")
+    if args.executor == "ssh" and not args.hosts:
+        ap.error("--executor ssh requires --hosts h0,h1,...")
     try:
         inject = parse_inject_kill(args.inject_kill)
     except ValueError as e:
@@ -403,6 +407,7 @@ def main():
         resolve_grid(args.archs, args.shapes)
     except ValueError as e:
         ap.error(str(e))
+    hosts = args.hosts.split(",") if args.hosts else None
     try:
         run_orchestrator(archs=args.archs, shapes=args.shapes,
                          shards=args.shards, out_dir=args.out,
@@ -411,8 +416,12 @@ def main():
                          strategy=args.strategy, gate_factor=args.gate_factor,
                          llm=args.llm, poll_interval=args.poll_interval,
                          hang_timeout=args.hang_timeout,
-                         max_restarts=args.max_restarts, inject_kill=inject)
-    except RuntimeError as e:
+                         max_restarts=args.max_restarts, inject_kill=inject,
+                         executor=args.executor, hosts=hosts,
+                         remote_root=args.remote_root,
+                         remote_repo=args.remote_repo,
+                         remote_python=args.remote_python)
+    except (RuntimeError, ValueError) as e:
         print(f"[orchestrator] FAILED: {e}", file=sys.stderr)
         sys.exit(1)
 

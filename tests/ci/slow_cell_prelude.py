@@ -1,0 +1,39 @@
+"""Campaign prelude for tests/CI: tiny workloads whose *cells* are slow.
+
+Chains the tiny prelude (64-token cells, see ``tiny_prelude.py``) and then
+wraps ``repro.launch.dryrun.run_cell`` with a fixed ``time.sleep`` taken
+from ``REPRO_TEST_EVAL_SLEEP_S`` (seconds, default 0). Every evaluation —
+baseline included — pays the sleep, so a cell's wall time is guaranteed to
+exceed a supervisor ``--hang-timeout`` chosen between one batch and one
+cell, while each *iteration* stays far under it. This is the deterministic
+reproduction of the hang-heal false-kill: with cell-boundary heartbeats the
+orchestrator SIGKILLs the healthy shard; with iteration-granularity
+heartbeats it must not (``tests/test_orchestrator.py`` asserts
+``restarts == 0``).
+
+Only valid with ``--workers 1``: pool workers are fresh spawn interpreters
+that never execute this prelude.
+"""
+import os
+import time
+from pathlib import Path
+
+# no __file__ here (the campaign exec()s this source); the env var that
+# selected this prelude is the one reliable pointer back to this directory
+_tiny = Path(os.environ["REPRO_CAMPAIGN_PRELUDE"]).resolve().with_name(
+    "tiny_prelude.py")
+exec(compile(_tiny.read_text(), str(_tiny), "exec"),
+     {"__name__": "__repro_prelude__"})
+
+import repro.launch.dryrun as _D  # noqa: E402
+
+_SLEEP_S = float(os.environ.get("REPRO_TEST_EVAL_SLEEP_S", "0"))
+_real_run_cell = _D.run_cell
+
+
+def _slow_run_cell(*args, **kwargs):
+    time.sleep(_SLEEP_S)
+    return _real_run_cell(*args, **kwargs)
+
+
+_D.run_cell = _slow_run_cell

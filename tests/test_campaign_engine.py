@@ -120,6 +120,45 @@ def test_leaderboard_falls_back_to_fastest_infeasible(tmp_path):
     assert rows[1]["feasible"] is False and rows[1]["bound_s"] == 9.0
 
 
+def test_progress_counters_run_local_and_leaderboard_atomic(tmp_path):
+    """A resumed campaign must report run-local counter deltas (not the
+    whole persisted DB, which double-counts prior attempts), accumulate
+    cumulative *_total across attempts via the prior heartbeat, and replace
+    leaderboard.json atomically (a torn file from a killed attempt heals)."""
+    import json as J
+
+    from repro.core.cost_db import CostDB, DataPoint
+    from repro.launch.campaign import read_progress, run_campaign
+
+    out = tmp_path / "camp"
+    out.mkdir()
+    # debris of a prior SIGKILLed attempt: 3 DB rows, a heartbeat with
+    # cumulative totals, and a torn (mid-write) leaderboard
+    db = CostDB(out / "cost_db.jsonl")
+    for i in range(3):
+        db.append(DataPoint(arch="a", shape="s", mesh="m",
+                            point={"__key__": f"k{i}"}, status="ok",
+                            metrics={"bound_s": 1.0 + i, "fits_hbm": True}))
+    (out / "progress.json").write_text(J.dumps(
+        {"status": "running", "compiles_total": 7, "pruned_total": 2}))
+    (out / "leaderboard.json").write_text('[{"arch": "a", "bo')  # torn
+
+    summary = run_campaign([], [], None, "m", out_dir=out, workers=1,
+                           verbose=False)
+    # empty grid: no new work — deltas zero, totals carry prior attempts
+    assert summary["evaluations"] == 0 and summary["compiles"] == 0
+    assert summary["evaluations_total"] == 3
+    assert summary["compiles_total"] == 7 and summary["pruned_total"] == 2
+    final = read_progress(out)
+    assert final["status"] == "done"
+    assert final["evaluations"] == 0 and final["evaluations_total"] == 3
+    assert final["compiles_total"] == 7 and final["pruned_total"] == 2
+    assert final["cell_in_progress"] is None and final["iteration"] is None
+    # the torn leaderboard was atomically replaced with valid JSON
+    assert J.loads((out / "leaderboard.json").read_text()) == []
+    assert list(out.glob("*.tmp")) == []
+
+
 # ---------------------------------------------------------------------------
 # batch evaluation == serial evaluation (and the pool path really runs)
 # ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ from repro.launch.campaign import parse_shard, read_progress, write_progress
 
 REPO = Path(__file__).resolve().parents[1]
 TINY_PRELUDE_FILE = REPO / "tests" / "ci" / "tiny_prelude.py"
+SLOW_PRELUDE_FILE = REPO / "tests" / "ci" / "slow_cell_prelude.py"
 
 
 # ---------------------------------------------------------------------------
@@ -25,11 +26,22 @@ def test_build_parser_flags_and_defaults():
         ["--archs", "all", "--shapes", "all", "--shards", "2",
          "--out", "artifacts/run"])
     assert ns.shards == 2 and ns.strategy == "ensemble"
-    assert ns.max_restarts == 2 and ns.hang_timeout == 900.0
+    # iteration-granularity heartbeats let the default timeout sit well
+    # below one cell: it only has to exceed the slowest single batch
+    assert ns.max_restarts == 2 and ns.hang_timeout == 300.0
+    assert ns.executor == "local" and ns.hosts is None
+    ns2 = orch.build_parser().parse_args(
+        ["--executor", "ssh", "--hosts", "h0,h1",
+         "--remote-root", "/scratch/run"])
+    assert ns2.executor == "ssh" and ns2.hosts == "h0,h1"
+    assert orch.build_parser().parse_args(
+        ["--executor", "loopback"]).executor == "loopback"
     with pytest.raises(SystemExit):
         orch.build_parser().parse_args(["--strategy", "nope"])
     with pytest.raises(SystemExit):
         orch.build_parser().parse_args(["--mesh", "huge"])
+    with pytest.raises(SystemExit):
+        orch.build_parser().parse_args(["--executor", "k8s"])
 
 
 def test_parse_inject_kill_and_shard_specs():
@@ -78,6 +90,13 @@ def test_run_orchestrator_rejects_bad_specs(tmp_path):
     with pytest.raises(ValueError):
         orch.run_orchestrator(archs="qwen3-0.6b", shapes="train_4k", shards=2,
                               out_dir=tmp_path / "x", inject_kill=(5, 1))
+    with pytest.raises(ValueError):  # ssh needs hosts
+        orch.run_orchestrator(archs="qwen3-0.6b", shapes="train_4k", shards=1,
+                              out_dir=tmp_path / "x", executor="ssh")
+    with pytest.raises(ValueError):  # the kill token is a local file
+        orch.run_orchestrator(archs="qwen3-0.6b", shapes="train_4k", shards=1,
+                              out_dir=tmp_path / "x", executor="ssh",
+                              hosts=["h0"], inject_kill=(0, 1))
     assert not (tmp_path / "x" / "summary.json").exists()  # failed fast
 
 
@@ -177,6 +196,17 @@ def test_orchestrator_heals_killed_shard_and_merges_identically(tmp_path,
     final = read_progress(tmp_path / "killed" / "shards" / "shard0")
     assert final["status"] == "done" and final["cells_done"] == 2
     assert final["resumed"] == 1 and final["ran"] == 1, final
+    # counters are run-local: the restarted attempt reports only its own
+    # work, while *_total keeps the cumulative view (the first attempt's
+    # rows persist in the shard DB) — no more phantom re-done work
+    assert 0 < final["evaluations"] < final["evaluations_total"], final
+    db_rows = [ln for ln in (tmp_path / "killed" / "shards" / "shard0"
+                             / "cost_db.jsonl").read_text().splitlines()
+               if ln.strip()]
+    assert final["evaluations_total"] == len(db_rows), final
+    assert final["compiles_total"] >= final["compiles"] >= 0, final
+    # cell boundary fields reset once the shard is done
+    assert final["cell_in_progress"] is None and final["iteration"] is None
     # and the one-shot crash token disarmed itself
     assert not (tmp_path / "killed" / "shards" / "shard0"
                 / orch.CRASH_TOKEN_FILE).exists()
@@ -214,3 +244,102 @@ def test_orchestrator_heals_killed_shard_and_merges_identically(tmp_path,
     # summary written and internally consistent
     summary = json.loads((tmp_path / "killed" / "summary.json").read_text())
     assert summary["restarts"] == 1 and summary["shards"] == 2
+    assert summary["executor"] == "local"
+
+
+# ---------------------------------------------------------------------------
+# the hang-heal false-kill regression (the bug this PR fixes): a healthy
+# cell slower than --hang-timeout must NOT be killed, because the campaign
+# now heartbeats every iteration/batch, not just at cell boundaries
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_slow_cell_is_not_false_killed(tmp_path, monkeypatch):
+    """One cell whose wall time exceeds --hang-timeout (every evaluation
+    sleeps, via the slow-cell prelude) must finish with restarts == 0 —
+    with cell-boundary heartbeats the supervisor would SIGKILL the healthy
+    shard on a loop until --max-restarts exhausted — and the merged
+    leaderboard must match an unsupervised campaign of the same cell."""
+    monkeypatch.setenv("REPRO_CAMPAIGN_PRELUDE", str(SLOW_PRELUDE_FILE))
+    monkeypatch.setenv("REPRO_TEST_EVAL_SLEEP_S", "12")
+    hang_timeout = 40.0  # >> one step (sleep 12 + one tiny compile, or the
+    #                      jax import before the first beat),
+    #                      << one cell (baseline + 3 iterations of sleeps)
+    s = orch.run_orchestrator(
+        archs="qwen3-0.6b", shapes="train_4k", shards=1,
+        out_dir=tmp_path / "run", mesh="tiny", iterations=3, budget=1,
+        workers=1, poll_interval=0.2, hang_timeout=hang_timeout,
+        max_restarts=0,  # any spurious kill fails the run loudly
+        verbose=False)
+    assert s["restarts"] == 0, s
+    report = json.loads(next((tmp_path / "run" / "shards" / "shard0"
+                              / "reports").glob("*.json")).read_text())
+    # the scenario is real: the cell outlived the hang timeout
+    assert report["wall_s"] > hang_timeout, report
+
+    # and healing semantics stayed byte-stable: same leaderboard as the
+    # manual (unsupervised) campaign over the same cell, sleeps off
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "REPRO_CAMPAIGN_PRELUDE": str(TINY_PRELUDE_FILE)}
+    env.pop("REPRO_TEST_EVAL_SLEEP_S", None)
+    cmd = orch.build_shard_cmd(
+        0, 1, tmp_path / "manual0", archs="qwen3-0.6b", shapes="train_4k",
+        mesh="tiny", iterations=3, budget=1, workers=1, strategy="ensemble",
+        gate_factor=None, llm="mock")
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+    from repro.launch.merge_db import merge
+
+    merge([tmp_path / "manual0"], tmp_path / "manual", verbose=False)
+    assert ((tmp_path / "run" / "leaderboard.json").read_bytes()
+            == (tmp_path / "manual" / "leaderboard.json").read_bytes())
+
+    # mid-cell heartbeats carried the new payload fields (the last written
+    # heartbeat is the final "done" one, so check the contract keys exist)
+    final = read_progress(tmp_path / "run" / "shards" / "shard0")
+    for key in ("cell_in_progress", "iteration", "evaluations",
+                "evaluations_total", "compiles", "compiles_total"):
+        assert key in final, final
+
+
+# ---------------------------------------------------------------------------
+# executor seam: the ssh code path (loopback transport) must reproduce the
+# local executor's merged leaderboard byte-for-byte
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_loopback_executor_merges_identically(tmp_path, monkeypatch):
+    """Run the same 2-shard campaign through the LoopbackExecutor (ssh
+    command templating + remote-dir heartbeats + collect-before-merge, all
+    on this machine) and through the manual shard+merge flow: identical
+    leaderboard bytes, shard dirs collected local, zero restarts."""
+    monkeypatch.setenv("REPRO_CAMPAIGN_PRELUDE", str(TINY_PRELUDE_FILE))
+    grid = dict(archs="qwen3-0.6b,stablelm-3b", shapes="train_4k",
+                mesh="tiny", iterations=1, budget=2, workers=1)
+
+    s = orch.run_orchestrator(
+        shards=2, out_dir=tmp_path / "loop", poll_interval=0.2,
+        executor="loopback", remote_root=str(tmp_path / "remote"),
+        verbose=False, **grid)
+    assert s["restarts"] == 0 and s["executor"] == "loopback", s
+    # shards ran in the "remote" root and were collected into OUT/shards
+    assert (tmp_path / "remote" / "shard0" / "progress.json").exists()
+    for i in range(2):
+        sd = tmp_path / "loop" / "shards" / f"shard{i}"
+        assert (sd / "cost_db.jsonl").exists() and (sd / "reports").is_dir()
+
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "REPRO_CAMPAIGN_PRELUDE": str(TINY_PRELUDE_FILE)}
+    for i in range(2):
+        cmd = orch.build_shard_cmd(
+            i, 2, tmp_path / f"manual{i}", archs=grid["archs"],
+            shapes=grid["shapes"], mesh="tiny", iterations=1, budget=2,
+            workers=1, strategy="ensemble", gate_factor=None, llm="mock")
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=600)
+        assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+    from repro.launch.merge_db import merge
+
+    merge([tmp_path / "manual0", tmp_path / "manual1"],
+          tmp_path / "manual", verbose=False)
+    assert ((tmp_path / "loop" / "leaderboard.json").read_bytes()
+            == (tmp_path / "manual" / "leaderboard.json").read_bytes())

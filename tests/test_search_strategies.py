@@ -215,13 +215,18 @@ def test_ensemble_credit_follows_winning_source(tmp_path):
 # surrogate gate
 # ---------------------------------------------------------------------------
 class _StubModel:
-    """Predicts a constant log10 bound; calibration report is injectable."""
+    """Predicts a constant log10 bound; calibration report is injectable —
+    optionally per-cell via ``cells={(arch, shape): (rmse, n)}`` (the global
+    report answers when no cell filter, or an unknown cell, is given)."""
 
-    def __init__(self, log_bound, rmse=0.1, n=10, trained=True):
+    def __init__(self, log_bound, rmse=0.1, n=10, trained=True, cells=None):
         self.trained = trained
         self._log_bound, self._rmse, self._n = log_bound, rmse, n
+        self._cells = cells or {}
 
-    def validation_error(self, db):
+    def validation_error(self, db, arch=None, shape=None, mesh=None):
+        if arch is not None and (arch, shape) in self._cells:
+            return self._cells[(arch, shape)]
         return self._rmse, self._n
 
     def predict(self, feats):
@@ -270,6 +275,97 @@ def test_gate_prunes_hopeless_predictions(tmp_path):
     assert gate.prune_verdicts(pts, wl, 50.0) == [None] * len(pts)
     # no incumbent yet -> gate stands down
     assert gate.prune_verdicts(pts, wl, None) == [None] * len(pts)
+
+
+def test_gate_calibrates_per_cell_when_data_allows(tmp_path):
+    """A surrogate sharp on one cell and useless globally must gate that
+    cell (and only that cell); a data-poor cell falls back to the global
+    validation split (skipped via the cheap key-index pre-check, without
+    a full cell scan). ``last_scope`` records which split decided."""
+    db = CostDB(tmp_path / "db.jsonl")
+    # a1/s holds enough measured designs to justify a cell-local look,
+    # a2/s doesn't (the pre-check consults the real key index)
+    for arch, n_rows in (("a1", 6), ("a2", 2)):
+        db.append_many([
+            DataPoint(arch=arch, shape="s", mesh="m",
+                      point={"__key__": f"{arch}-k{i}"}, status="ok",
+                      metrics={"bound_s": 1.0, "fits_hbm": True})
+            for i in range(n_rows)])
+    stub = _StubModel(2.0, rmse=1.5, n=50,  # hopeless globally
+                      cells={("a1", "s"): (0.1, 10),   # sharp, enough rows
+                             ("a2", "s"): (0.05, 2)})  # sharp, too few rows
+    gate = SurrogateGate(stub, max_val_rmse=0.35, min_val_points=4)
+    assert gate.calibrate(db, arch="a1", shape="s", mesh="m")
+    assert gate.last_scope == "cell" and gate.last_rmse == 0.1
+    # too few cell rows -> global split guards -> stays disabled
+    assert not gate.calibrate(db, arch="a2", shape="s", mesh="m")
+    assert gate.last_scope == "global" and gate.last_rmse == 1.5
+    # no cell context at all -> global (legacy behavior)
+    assert not gate.calibrate(db)
+    assert gate.last_scope == "global"
+
+
+def test_gate_factor_anneals_with_calibration(tmp_path):
+    """With min_factor set, the prune threshold tightens linearly from
+    ``factor`` (RMSE at the guard) to ``min_factor`` (RMSE 0); without it,
+    or while inactive, the configured factor stays in force."""
+    db = CostDB(tmp_path / "db.jsonl")
+
+    def gate_at(rmse, **kw):
+        g = SurrogateGate(_StubModel(2.0, rmse=rmse, n=10), factor=4.0,
+                          min_factor=2.0, max_val_rmse=0.35, **kw)
+        g.calibrate(db)
+        return g
+
+    assert gate_at(0.35).effective_factor == pytest.approx(4.0)  # at guard
+    assert gate_at(0.0).effective_factor == pytest.approx(2.0)   # perfect
+    assert gate_at(0.175).effective_factor == pytest.approx(3.0)  # midpoint
+    inactive = gate_at(1.5)  # fails the guard -> factor untouched
+    assert not inactive.active and inactive.effective_factor == 4.0
+    no_anneal = SurrogateGate(_StubModel(2.0, rmse=0.0, n=10), factor=4.0)
+    no_anneal.calibrate(db)
+    assert no_anneal.effective_factor == 4.0
+    # the guard bypass (benchmarks) still anneals off measurable RMSE
+    bypass = SurrogateGate(_StubModel(2.0, rmse=0.0, n=2), factor=4.0,
+                           min_factor=2.0, require_calibration=False)
+    assert bypass.calibrate(db)
+    assert bypass.effective_factor == pytest.approx(2.0)
+    # ... but an unmeasurable RMSE (no val rows) leaves the factor alone
+    nan_rmse = SurrogateGate(_StubModel(2.0, rmse=float("nan"), n=0),
+                             factor=4.0, min_factor=2.0,
+                             require_calibration=False)
+    assert nan_rmse.calibrate(db) and nan_rmse.effective_factor == 4.0
+
+    # the annealed factor is the one the verdicts use: predicted 100s,
+    # incumbent 30s -> 100 > 2x30 prunes, but would pass the 4x gate
+    g = gate_at(0.0)
+    cell, t = SHAPE_BY_NAME[SHAPE], _template()
+    wl = workload_features(get_config(ARCH), cell)
+    pts = [baseline_point(cell, t)]
+    assert g.prune_verdicts(pts, wl, 30.0) != [None]
+    loose = gate_at(0.35)
+    assert loose.prune_verdicts(pts, wl, 30.0) == [None]
+
+    with pytest.raises(ValueError):
+        SurrogateGate(_StubModel(2.0), factor=4.0, min_factor=0.5)
+    with pytest.raises(ValueError):
+        SurrogateGate(_StubModel(2.0), factor=4.0, min_factor=5.0)
+
+
+def test_training_set_cell_filter(tmp_path):
+    """CostDB.training_set(arch=..., shape=...) restricts to one cell's
+    rows — the data source for the gate's per-cell validation error."""
+    db = CostDB(tmp_path / "db.jsonl")
+    db.append_many([_dp(bound=1.0 + i, key_suffix=i) for i in range(4)])
+    other = _dp(bound=9.0)
+    other.arch = "other-arch"
+    db.append(other)
+    X_all, y_all, _ = db.training_set()
+    X_cell, y_cell, _ = db.training_set(arch=ARCH, shape=SHAPE)
+    X_other, _, _ = db.training_set(arch="other-arch")
+    assert X_all.shape[0] == 5 and X_cell.shape[0] == 4
+    assert X_other.shape[0] == 1
+    assert db.training_set(arch="nope")[0].shape[0] == 0
 
 
 def test_gated_evaluate_batch_records_pruned_without_compiling(tmp_path, single_mesh):
