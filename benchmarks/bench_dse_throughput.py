@@ -23,6 +23,15 @@ DB) — and the benchmark reports each arm's best bound and compiles spent
 (transfer's whole point is matching the cold arm's best design on fewer
 compiles by skipping re-discovery).
 
+``--straggler`` runs the scheduling experiment: the same tiny grid is
+orchestrated twice with shard 0 deliberately slowed (every evaluation
+sleeps ``--straggler-sleep-s`` seconds, via the straggler prelude) — once
+with the static ``--shard i/n`` cut, once with the dynamic ``--queue``
+cell queue + work stealing — and the benchmark reports each arm's
+wall-clock, the steal count, and whether the two merged leaderboards are
+byte-identical (they must be; the queue's whole point is the same answer,
+sooner, when one shard is slow).
+
 Default uses a reduced (CPU-smoke) config so the benchmark finishes in
 seconds; pass --full for the real registry config on the 2x4 mesh.
 
@@ -201,6 +210,61 @@ def _transfer_mode(args, mesh, mesh_name, tmp: Path) -> list:
     return rows
 
 
+def _straggler_mode(args, tmp: Path) -> list:
+    """Static grid cut vs dynamic queue + stealing under one slow shard.
+
+    Runs the orchestrator in subprocesses (the straggler prelude needs the
+    shard processes' environment), so this arm never imports jax into the
+    benchmark process itself."""
+    import os
+    import subprocess
+    import sys
+
+    repo = Path(__file__).resolve().parents[1]
+    env = {**os.environ,
+           "PYTHONPATH": str(repo / "src"),
+           "REPRO_CAMPAIGN_PRELUDE": str(repo / "tests" / "ci"
+                                         / "straggler_prelude.py"),
+           "REPRO_TEST_STRAGGLER_SHARD": "0",
+           "REPRO_TEST_EVAL_SLEEP_S": str(args.straggler_sleep_s)}
+    rows = []
+    for label, extra in (
+            ("static", []),
+            ("queue", ["--queue", "--steal-min-s", "4",
+                       "--steal-factor", "2"])):
+        out = tmp / label
+        cmd = [sys.executable, "-m", "repro.launch.orchestrator",
+               "--archs", "qwen3-0.6b,stablelm-3b",
+               "--shapes", "train_4k,decode_32k", "--mesh", "tiny",
+               "--shards", "2", "--iterations", "1", "--budget", "2",
+               "--workers", "1", "--poll-interval", "0.2",
+               "--out", str(out)] + extra
+        t0 = time.time()
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=1200)
+        wall = time.time() - t0
+        if r.returncode != 0:
+            raise SystemExit(f"{label} arm failed:\n{r.stdout}\n{r.stderr}")
+        summary = json.loads((out / "summary.json").read_text())
+        rows.append({"mode": label, "wall_s": round(wall, 1),
+                     "steals": summary.get("steals"),
+                     "restarts": summary.get("restarts"),
+                     "cells": summary.get("cells")})
+        print(rows[-1], flush=True)
+    static, queue = rows
+    same = ((tmp / "static" / "leaderboard.json").read_bytes()
+            == (tmp / "queue" / "leaderboard.json").read_bytes())
+    speed = static["wall_s"] / max(queue["wall_s"], 1e-9)
+    print(f"straggler verdict: queue x{speed:.2f} vs static "
+          f"({queue['steals']} steal(s)); leaderboards byte-identical: "
+          f"{same}")
+    if not same:
+        raise SystemExit("leaderboard bytes diverged between static and "
+                         "queue arms — scheduling must never change the "
+                         "answer")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -220,8 +284,28 @@ def main():
                     help="cold vs transfer-seeded search experiment")
     ap.add_argument("--transfer-target", default="stablelm-3b",
                     help="fresh cell arch for --transfer (donor is --arch)")
+    ap.add_argument("--straggler", action="store_true",
+                    help="static --shard cut vs --queue work stealing with "
+                         "one deliberately slowed shard")
+    ap.add_argument("--straggler-sleep-s", type=float, default=10.0,
+                    help="per-evaluation sleep injected into the slow "
+                         "shard for --straggler (must dwarf one cold "
+                         "compile, or the straggler finishes before the "
+                         "fleet median exposes it)")
     ap.add_argument("--out", default=None, help="write results JSON here")
     args = ap.parse_args()
+
+    if args.straggler:
+        # subprocess-only arm: keep jax (and the tiny patch) out of this
+        # process — the shard subprocesses get theirs from the prelude
+        tmp = Path(tempfile.mkdtemp(prefix="bench_straggler_"))
+        try:
+            rows = _straggler_mode(args, tmp)
+            if args.out:
+                Path(args.out).write_text(json.dumps(rows, indent=1))
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+        return
 
     if not args.full:
         _tiny_patch(args.arch)

@@ -47,6 +47,21 @@ you in one command):
     PYTHONPATH=src python -m repro.launch.merge_db \\
         artifacts/shard0 artifacts/shard1 --out artifacts/campaign
 
+Dynamic scale-out — ``--queue DIR`` replaces the static cut with a
+crash-safe file-backed cell queue (``repro.launch.scheduler``): each worker
+pulls its next cell from the queue under a deadline-bounded lease instead
+of iterating a pre-cut slice, so fast workers drain more of the grid and a
+slow or dead worker's cell is re-leased (or stolen by the orchestrator)
+instead of stalling the campaign. Identical commands cooperate: the first
+to start seeds the queue (idempotent), every worker shares the queue-side
+dry-run cache (a re-leased cell's compiles replay instead of re-running),
+and the merge is the same ``merge_db`` flow:
+
+    PYTHONPATH=src python -m repro.launch.campaign ... \\
+        --out artifacts/shard0 --queue artifacts/queue --queue-owner w0
+    PYTHONPATH=src python -m repro.launch.campaign ... \\
+        --out artifacts/shard1 --queue artifacts/queue --queue-owner w1
+
 With the deterministic mock LLM, an untrained (or cell-local) surrogate,
 and a transfer-free strategy, a sharded run + merge reproduces the
 single-process ``leaderboard.json`` byte-for-byte — tier-1 asserts it
@@ -76,7 +91,12 @@ mid-cell (both null at cell boundaries), and ``iter_evaluated`` /
 ``iter_compiled`` / ``iter_pruned`` / ``iter_cache_hits`` carry the last
 iteration's deltas. Because the heartbeat moves at proposal/batch/
 iteration granularity, a supervisor hang timeout only has to exceed the
-slowest single iteration step, never a whole cell.
+slowest single iteration step, never a whole cell. In queue mode the
+payload gains a ``queue`` sub-dict (pending/leased/done counts, this
+worker's ``owner`` id, ``stolen`` = leases this worker lost mid-cell), the
+``status`` value ``waiting`` marks an idle worker polling for cells still
+leased elsewhere (the orchestrator's steal rule keys off it), and every
+beat renews the worker's current lease.
 
 Test/CI hooks (environment variables, ignored when unset):
     REPRO_CAMPAIGN_PRELUDE      path to a python file exec()d by ``main()``
@@ -100,6 +120,7 @@ import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.launch.scheduler import CellQueue, sanitize_owner
 
 PROGRESS_FILE = "progress.json"
 MESH_CHOICES = ("tiny", "small", "pod", "multipod")
@@ -217,6 +238,28 @@ def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
     return rows
 
 
+def validate_gate_args(gate_factor: Optional[float],
+                       gate_min_factor: Optional[float]) -> Optional[str]:
+    """The one place the surrogate-gate CLI constraints live (returns an
+    error string, or ``None`` when valid) — shared by the campaign, dse,
+    and orchestrator CLIs *and* by ``run_campaign``'s API validation, so
+    the four surfaces can never drift from each other or from
+    ``SurrogateGate.__post_init__``'s own check."""
+    if gate_factor is not None and gate_factor <= 1.0:
+        return (f"gate-factor must be > 1 (got {gate_factor}): the gate "
+                "prunes candidates predicted SLOWER than factor x the "
+                "incumbent")
+    if gate_min_factor is not None:
+        if gate_factor is None:
+            return ("gate-min-factor requires gate-factor (annealing "
+                    "tightens the gate's threshold; there is no gate "
+                    "without a factor)")
+        if not (1.0 < gate_min_factor <= gate_factor):
+            return (f"gate-min-factor must be in (1, {gate_factor}], "
+                    f"got {gate_min_factor}")
+    return None
+
+
 def write_json_atomic(path: Path, payload) -> Path:
     """Serialize ``payload`` to ``path`` via temp-file + ``os.replace`` so a
     reader (or a restarted campaign) never sees a torn file, even if this
@@ -266,13 +309,35 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
                  *, out_dir: Path | str, iterations: int = 2, budget: int = 3,
                  workers: int = 1, llm_client=None, db=None, resume: bool = True,
                  strategy: str = "ensemble", gate_factor: Optional[float] = None,
+                 gate_min_factor: Optional[float] = None,
                  shard: Optional[Tuple[int, int]] = None,
+                 queue: Optional[Path | str] = None,
+                 queue_owner: Optional[str] = None,
+                 queue_lease_s: float = 300.0, queue_poll_s: float = 0.5,
                  verbose: bool = True) -> Dict:
-    """Run (or resume) the grid — or one deterministic ``shard=(i, n)`` slice
-    of it — and return the campaign summary dict. Each cell gets a *fresh*
-    search strategy (strategies carry per-cell state: walker position,
-    population, bandit credit); the cost DB, dry-run cache, surrogate cost
-    model, and evaluator pool are shared across cells."""
+    """Run (or resume) the grid — one deterministic ``shard=(i, n)`` slice
+    of it, or (``queue=DIR``) whatever cells this worker wins from the
+    shared :class:`~repro.launch.scheduler.CellQueue` — and return the
+    campaign summary dict. Each cell gets a *fresh* search strategy
+    (strategies carry per-cell state: walker position, population, bandit
+    credit); the cost DB, dry-run cache, surrogate cost model, and
+    evaluator pool are shared across cells. In queue mode the dry-run
+    cache lives *in the queue dir* and is shared across every worker, so a
+    re-leased or stolen cell replays its compiles instead of redoing them;
+    leases are renewed on every heartbeat and a lease lost mid-cell
+    (stolen/reclaimed) is surrendered gracefully — the local results stand
+    and the merge dedupes."""
+    # argument validation first — these raise before any jax-touching import
+    if queue is not None and shard is not None:
+        raise ValueError("--queue and --shard are mutually exclusive: the "
+                         "queue replaces the static grid cut")
+    if queue is not None and queue_poll_s <= 0:
+        raise ValueError(f"queue_poll_s must be > 0 (got {queue_poll_s}): "
+                         "0 busy-spins the idle-wait loop")
+    gate_err = validate_gate_args(gate_factor, gate_min_factor)
+    if gate_err:
+        raise ValueError(gate_err)
+
     from repro.core.cost_db import CostDB, featurize
     from repro.core.cost_model import CostModel
     from repro.core.eval_cache import DryRunCache
@@ -286,17 +351,20 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     out_dir = Path(out_dir)
     (out_dir / "reports").mkdir(parents=True, exist_ok=True)
     db = db or CostDB(out_dir / "cost_db.jsonl")
-    cache = DryRunCache.beside(db.path)
+    q = CellQueue(queue, lease_s=queue_lease_s) if queue is not None else None
+    owner = (sanitize_owner(queue_owner or f"pid{os.getpid()}")
+             if q is not None else None)
+    # queue mode shares one content-addressed cache across every worker —
+    # that is what makes a stolen cell's "resume" free (compiles replay)
+    cache = (DryRunCache(q.cache_dir) if q is not None
+             else DryRunCache.beside(db.path))
     evaluator = Evaluator(mesh, mesh_name, cache=cache,
                           max_workers=max(workers, 1),
                           artifact_dir=str(out_dir / "dryrun"))
     stack = LLMStack(client=llm_client or MockLLM(), db=db)
     cost_model = CostModel.create(in_dim=featurize({}, {}).shape[0])
-    if gate_factor is not None and gate_factor <= 1.0:
-        raise ValueError(f"gate_factor must be > 1 (got {gate_factor}): the "
-                         "gate prunes candidates predicted SLOWER than "
-                         "factor x the incumbent")
-    gate = (SurrogateGate(cost_model, factor=gate_factor)
+    gate = (SurrogateGate(cost_model, factor=gate_factor,
+                          min_factor=gate_min_factor)
             if gate_factor is not None else None)
 
     def log(msg):
@@ -304,10 +372,18 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
             print(f"[campaign {mesh_name}] {msg}", flush=True)
 
     t0 = time.time()
-    cells = shard_cells(archs, shapes, shard)
+    cells = shard_cells(archs, shapes, shard) if q is None else []
+    if q is not None:
+        # idempotent: n identical commands race-free-seed the same queue
+        # (cells already pending/leased/done are left alone)
+        seeded = q.seed(shard_cells(archs, shapes), mesh=mesh_name)
+        if seeded:
+            log(f"queue {q.root}: seeded {seeded} cell ticket(s)")
     cell_rows: List[Dict] = []
     cell_best: List[Dict] = []  # {"cell": "arch/shape", "bound_s": float|None}
     counts = {"ran": 0, "resumed": 0, "unsupported": 0}
+    qstats = {"stolen": 0}
+    current_ticket: List[Optional[object]] = [None]  # the lease being worked
 
     # run-local counter baselines: the DB file (and, via the prior
     # heartbeat, the compile/prune totals) persist across supervisor
@@ -321,9 +397,18 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     compiles_prior = int(prior_hb.get("compiles_total", 0) or 0)
     pruned_prior = int(prior_hb.get("pruned_total", 0) or 0)
 
+    cells_total = q.total() if q is not None else len(cells)
+
     def progress(status: str, *, cell: Optional[str] = None,
                  iteration: Optional[int] = None,
                  iter_stats: Optional[Dict] = None) -> None:
+        # every beat doubles as a lease renewal: the queue's deadline only
+        # expires when the worker has stopped making iteration progress
+        if q is not None and current_ticket[0] is not None:
+            try:
+                q.renew(current_ticket[0])
+            except OSError:
+                pass
         top = sorted((r for r in cell_best if r["bound_s"] is not None),
                      key=lambda r: r["bound_s"])[:5]
         compiles = evaluator.compile_count - compiles0
@@ -333,7 +418,7 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
             "pid": os.getpid(), "mesh": mesh_name,
             "shard": f"{shard[0]}/{shard[1]}" if shard else None,
             "status": status,
-            "cells_total": len(cells), "cells_done": len(cell_rows),
+            "cells_total": cells_total, "cells_done": len(cell_rows),
             **counts,
             "cell_in_progress": cell, "iteration": iteration,
             "evaluations": evals - evals0,
@@ -342,6 +427,9 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
             "compiles_total": compiles_prior + compiles,
             "pruned_total": pruned_prior + pruned,
             "best": top, "ts": round(time.time(), 3)}
+        if q is not None:
+            payload["queue"] = {**q.counts(), "owner": owner,
+                                "stolen": qstats["stolen"]}
         if iter_stats:
             payload.update({f"iter_{k}": iter_stats.get(k) for k in
                             ("evaluated", "compiled", "pruned", "cache_hits",
@@ -367,8 +455,12 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
         progress("running")
         _injected_crash_hook(len(cell_rows))
 
-    progress("starting")
-    for arch, shape in cells:
+    def process_cell(arch: str, shape: str) -> str:
+        """Run/resume/skip one cell and record it (reports, counters,
+        heartbeat); returns the cell status — shared by the static-grid
+        and queue drive loops, so the two modes cannot drift. The one-shot
+        crash hook inside ``note_cell`` fires *before* the queue ticket is
+        completed, so an injected kill always lands mid-lease."""
         rpath = cell_report_path(out_dir, arch, shape, mesh_name)
         prior = None
         if resume and rpath.exists():
@@ -379,15 +471,15 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
                 # or external damage) means the cell never finished: re-run
                 log(f"{arch}/{shape}: unreadable report — re-running cell")
         if prior is not None:
-            counts["resumed" if prior.get("status") != "unsupported"
-                   else "unsupported"] += 1
+            status = ("resumed" if prior.get("status") != "unsupported"
+                      else "unsupported")
+            counts[status] += 1
             cell_rows.append({"arch": arch, "shape": shape, "mesh": mesh_name,
-                              "status": "resumed" if prior.get("status") != "unsupported"
-                              else "unsupported",
+                              "status": status,
                               "improvement": prior.get("improvement")})
             log(f"{arch}/{shape}: resumed (report exists)")
             note_cell(arch, shape)
-            continue
+            return status
 
         from repro.configs import SHAPE_BY_NAME, get_config
         supported, why = M.cell_supported(get_config(arch), SHAPE_BY_NAME[shape])
@@ -400,7 +492,7 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
                               "status": "unsupported", "improvement": None})
             log(f"{arch}/{shape}: unsupported ({why})")
             note_cell(arch, shape)
-            continue
+            return "unsupported"
 
         t_cell = time.time()
         loop = DSELoop(evaluator=evaluator, db=db, llm_stack=stack,
@@ -423,6 +515,35 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
             f"(improvement {report.improvement():.2%}, "
             f"cache {cache.stats()})")
         note_cell(arch, shape)
+        return "complete"
+
+    progress("starting")
+    if q is None:
+        for arch, shape in cells:
+            process_cell(arch, shape)
+    else:
+        # queue drive: win a lease, work it, complete it; keep polling
+        # while other owners still hold leases (their cell may yet be
+        # reclaimed or stolen into our lap), exit only when drained
+        while True:
+            ticket = q.acquire(owner)
+            if ticket is None:
+                if q.drained():
+                    break
+                progress("waiting")
+                time.sleep(queue_poll_s)
+                continue
+            current_ticket[0] = ticket
+            log(f"{ticket.cell}: leased (attempt {ticket.attempt})")
+            status = process_cell(ticket.arch, ticket.shape)
+            current_ticket[0] = None
+            if not q.complete(ticket, status=status):
+                # the lease moved on mid-cell (stolen by the scheduler or
+                # reclaimed after expiry): surrender gracefully — the local
+                # results are valid and the merge dedupes them
+                qstats["stolen"] += 1
+                log(f"{ticket.cell}: lease lost before completion "
+                    f"(stolen/reclaimed) — results kept, merge dedupes")
 
     # sorted rows -> deterministic leaderboard tie order, and the exact
     # order merge_db reconstructs from report files after a sharded run
@@ -436,6 +557,9 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     summary = {
         "mesh": mesh_name, "cells": len(cell_rows), **counts,
         "shard": f"{shard[0]}/{shard[1]}" if shard else None,
+        "queue": str(q.root) if q is not None else None,
+        "queue_owner": owner,
+        "stolen": qstats["stolen"] if q is not None else None,
         "strategy": strategy,
         "wall_s": round(time.time() - t0, 1),
         # run-local work vs cumulative totals: same contract as the
@@ -485,11 +609,32 @@ def build_parser() -> argparse.ArgumentParser:
                     help="enable the surrogate gate: prune candidates whose "
                          "predicted bound is > FACTOR x the incumbent "
                          "(must be > 1)")
+    ap.add_argument("--gate-min-factor", type=float, default=None,
+                    help="anneal the gate's prune threshold from "
+                         "--gate-factor down toward this as the surrogate's "
+                         "validation RMSE improves (must be in "
+                         "(1, gate-factor]; requires --gate-factor)")
     ap.add_argument("--shard", default=None, metavar="I/N",
                     help="run only cells i, i+n, i+2n, ... of the sorted "
                          "arch x shape grid (merge shards with "
                          "repro.launch.merge_db, or let "
                          "repro.launch.orchestrator drive the whole thing)")
+    ap.add_argument("--queue", default=None, metavar="DIR",
+                    help="dynamic scale-out: pull cells from the crash-safe "
+                         "lease queue at DIR instead of iterating a static "
+                         "grid slice (seeds the queue idempotently; "
+                         "mutually exclusive with --shard; workers share "
+                         "the queue-side dry-run cache)")
+    ap.add_argument("--queue-owner", default=None, metavar="NAME",
+                    help="lease owner id for --queue (default: pid<PID>); "
+                         "the orchestrator passes shard<i>")
+    ap.add_argument("--queue-lease-s", type=float, default=300.0,
+                    help="lease length in seconds for --queue; renewed on "
+                         "every heartbeat, so it must exceed the slowest "
+                         "single iteration step, never a whole cell")
+    ap.add_argument("--queue-poll-s", type=float, default=0.5,
+                    help="seconds between queue polls while idle-waiting "
+                         "for other owners' leased cells")
     return ap
 
 
@@ -525,8 +670,15 @@ def main():
         src = Path(prelude).read_text()
         exec(compile(src, prelude, "exec"), {"__name__": "__repro_prelude__"})
 
-    if args.gate_factor is not None and args.gate_factor <= 1.0:
-        ap.error(f"--gate-factor must be > 1, got {args.gate_factor}")
+    gate_err = validate_gate_args(args.gate_factor, args.gate_min_factor)
+    if gate_err:
+        ap.error(gate_err)
+    if args.queue and args.shard:
+        ap.error("--queue and --shard are mutually exclusive")
+    if args.queue_lease_s <= 0:
+        ap.error(f"--queue-lease-s must be > 0, got {args.queue_lease_s}")
+    if args.queue_poll_s <= 0:
+        ap.error(f"--queue-poll-s must be > 0, got {args.queue_poll_s}")
     try:
         shard = parse_shard(args.shard)
     except ValueError as e:
@@ -548,7 +700,10 @@ def main():
                  iterations=args.iterations, budget=args.budget,
                  workers=args.workers, llm_client=llm_client,
                  strategy=args.strategy, gate_factor=args.gate_factor,
-                 shard=shard, resume=not args.force)
+                 gate_min_factor=args.gate_min_factor,
+                 shard=shard, queue=args.queue, queue_owner=args.queue_owner,
+                 queue_lease_s=args.queue_lease_s,
+                 queue_poll_s=args.queue_poll_s, resume=not args.force)
 
 
 if __name__ == "__main__":

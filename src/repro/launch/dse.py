@@ -48,6 +48,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="enable the surrogate gate: prune candidates whose "
                          "predicted bound is > FACTOR x the incumbent "
                          "(must be > 1)")
+    ap.add_argument("--gate-min-factor", type=float, default=None,
+                    help="anneal the gate's prune threshold from "
+                         "--gate-factor down toward this as the surrogate's "
+                         "validation RMSE improves (must be in "
+                         "(1, gate-factor]; requires --gate-factor)")
     ap.add_argument("--report", default=None, help="write the loop report JSON here")
     return ap
 
@@ -57,8 +62,11 @@ def main():
     and optionally write the loop-report JSON. Exits 2 on bad arguments."""
     ap = build_parser()
     args = ap.parse_args()
-    if args.gate_factor is not None and args.gate_factor <= 1.0:
-        ap.error(f"--gate-factor must be > 1, got {args.gate_factor}")
+    from repro.launch.campaign import validate_gate_args  # no jax
+
+    gate_err = validate_gate_args(args.gate_factor, args.gate_min_factor)
+    if gate_err:
+        ap.error(gate_err)
 
     from repro.core.cost_db import CostDB, featurize
     from repro.core.cost_model import CostModel
@@ -93,7 +101,8 @@ def main():
     cache = None if args.no_cache else DryRunCache.beside(db.path)
     evaluator = Evaluator(mesh, mesh_name, cache=cache,
                           max_workers=max(args.workers, 1))
-    gate = (SurrogateGate(cost_model, factor=args.gate_factor)
+    gate = (SurrogateGate(cost_model, factor=args.gate_factor,
+                          min_factor=args.gate_min_factor)
             if args.gate_factor is not None else None)
     loop = DSELoop(evaluator=evaluator, db=db,
                    llm_stack=stack, cost_model=cost_model, approve_fn=approve,

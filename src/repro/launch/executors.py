@@ -195,6 +195,11 @@ class SSHExecutor:
     #   heartbeat fetches run serially in the supervisor poll loop, so one
     #   dead host must not stall the other shards' hang clocks for long
     name: str = "ssh"
+    #: whether the "remote" command actually runs on this machine (the
+    #: loopback subclass): local transports may combine a relocated
+    #: remote_root with a campaign --queue path, genuinely remote ones
+    #: may not (the queue must sit at one shared-filesystem path)
+    transport_is_local: bool = False
 
     def __post_init__(self):
         """Validate hosts and default the remote repo to this checkout."""
@@ -250,6 +255,15 @@ class SSHExecutor:
         argv = list(shard.cmd)
         argv[0] = self.python
         argv[argv.index("--out") + 1] = rdir
+        if ("--queue" in argv and self.remote_root
+                and not self.transport_is_local):
+            # --out relocates per-host, but the lease queue is the shards'
+            # rendezvous: it must resolve to ONE shared-filesystem path
+            # everywhere, which remote_root relocation cannot guarantee
+            raise RuntimeError(
+                f"shard{shard.index}: campaign --queue cannot combine with "
+                f"remote_root={self.remote_root!r} on a remote transport — "
+                f"the queue dir must be one shared path on every host")
         env = " ".join(f"{k}={shlex.quote(v)}"
                        for k, v in sorted(self._forward_env(shard).items()))
         inner = (f"echo $$ > {qdir}/{PID_FILE}; "
@@ -343,6 +357,7 @@ class LoopbackExecutor(SSHExecutor):
     hosts: Sequence[str] = ("loopback",)
     python: str = sys.executable
     name: str = "loopback"
+    transport_is_local: bool = True
 
     def _transport_argv(self, host: str, command: str) -> List[str]:
         """Run the would-be-remote shell command locally."""

@@ -31,7 +31,7 @@ import argparse
 import json
 import shutil
 from pathlib import Path
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_db import CostDB, DataPoint
 from repro.launch.campaign import build_leaderboard, write_json_atomic
@@ -41,11 +41,13 @@ def merge_cost_dbs(shard_dbs: Sequence[Path], out_db: Path,
                    ) -> Tuple[int, int]:
     """Merge shard JSONL DBs into ``out_db``; returns (kept, dropped_dups).
     Identity is ``(arch, shape, mesh, point.__key__, status)``; the earliest
-    record (timestamp, then input order) wins. Status is part of the
-    identity so a gate-``pruned`` prediction and the later *measured* row
-    for the same design both survive — exactly the pair a single-process
-    campaign's DB holds when the gate relaxes and a once-pruned design gets
-    compiled. Unreadable lines are skipped."""
+    record (timestamp, then serialized content — NOT input order, so the
+    merge is **order-invariant**: any permutation of the shard list yields
+    byte-identical output, which tier-1 property-tests) wins. Status is
+    part of the identity so a gate-``pruned`` prediction and the later
+    *measured* row for the same design both survive — exactly the pair a
+    single-process campaign's DB holds when the gate relaxes and a
+    once-pruned design gets compiled. Unreadable lines are skipped."""
     rows: List[DataPoint] = []
     for p in shard_dbs:
         if not p.exists():
@@ -57,7 +59,10 @@ def merge_cost_dbs(shard_dbs: Sequence[Path], out_db: Path,
                 rows.append(DataPoint.from_json(line))
             except (json.JSONDecodeError, TypeError):
                 print(f"merge_db: skipping unreadable row in {p}")
-    rows.sort(key=lambda d: d.ts or 0.0)  # stable: input order breaks ties
+    # ties broken by serialized content, never input order: two shards
+    # carrying equal-timestamp rows for one identity (a stolen cell run
+    # twice, clock granularity) must merge the same whichever came first
+    rows.sort(key=lambda d: (d.ts or 0.0, d.to_json()))
     seen = set()
     kept: List[DataPoint] = []
     for d in rows:
@@ -73,8 +78,11 @@ def merge_cost_dbs(shard_dbs: Sequence[Path], out_db: Path,
 
 
 def merge_reports(shard_dirs: Sequence[Path], out_dir: Path) -> List[Path]:
-    """Copy per-cell report JSONs into ``out_dir/reports``. Shards own
-    disjoint cells; on a collision the earliest-mtime file wins."""
+    """Copy per-cell report JSONs into ``out_dir/reports``. Statically-cut
+    shards own disjoint cells, but queue-mode steals legitimately leave the
+    same cell reported by two shards; on a collision the earliest-mtime
+    file wins, with ties broken by content bytes (never input order, so
+    the merge stays order-invariant)."""
     dest = out_dir / "reports"
     dest.mkdir(parents=True, exist_ok=True)
     srcs: Dict[str, Path] = {}
@@ -83,12 +91,13 @@ def merge_reports(shard_dirs: Sequence[Path], out_dir: Path) -> List[Path]:
             prev = srcs.get(f.name)
             if prev is None:
                 srcs[f.name] = f
-            else:
-                keep, drop = ((prev, f) if prev.stat().st_mtime <= f.stat().st_mtime
-                              else (f, prev))
+            elif _report_rank(f) < _report_rank(prev):
                 print(f"merge_db: duplicate report {f.name}: keeping "
-                      f"{keep} (earlier), ignoring {drop}")
-                srcs[f.name] = keep
+                      f"{f} (earlier), ignoring {prev}")
+                srcs[f.name] = f
+            else:
+                print(f"merge_db: duplicate report {f.name}: keeping "
+                      f"{prev} (earlier), ignoring {f}")
     out = []
     for name, src in sorted(srcs.items()):
         shutil.copyfile(src, dest / name)
@@ -96,14 +105,26 @@ def merge_reports(shard_dirs: Sequence[Path], out_dir: Path) -> List[Path]:
     return out
 
 
-def merge_caches(shard_dirs: Sequence[Path], out_dir: Path) -> int:
+def _report_rank(path: Path) -> Tuple[float, bytes]:
+    """Collision ordering for duplicate reports: earliest mtime first,
+    content bytes as the order-independent tie-break."""
+    return (path.stat().st_mtime, path.read_bytes())
+
+
+def merge_caches(shard_dirs: Sequence[Path], out_dir: Path,
+                 extra_cache_dirs: Optional[Sequence[Path]] = None) -> int:
     """Union the content-addressed dry-run caches (same key = same record,
-    so existing entries are never overwritten). Returns entries copied."""
+    so existing entries are never overwritten). ``extra_cache_dirs`` names
+    cache directories *directly* (not shard dirs) — queue-mode campaigns
+    share one cache inside the queue dir, and the merge folds it in so the
+    merged campaign dir resumes for free. Returns entries copied."""
     dest = out_dir / "dryrun_cache"
     dest.mkdir(parents=True, exist_ok=True)
     n = 0
-    for sd in shard_dirs:
-        for f in sorted((sd / "dryrun_cache").glob("*.json")):
+    caches = [sd / "dryrun_cache" for sd in shard_dirs]
+    caches += [Path(c) for c in (extra_cache_dirs or [])]
+    for cd in caches:
+        for f in sorted(cd.glob("*.json")):
             target = dest / f.name
             if not target.exists():
                 shutil.copyfile(f, target)
@@ -134,13 +155,18 @@ def rebuild_leaderboard(out_dir: Path) -> Path:
 
 
 def merge(shard_dirs: Sequence[Path | str], out_dir: Path | str,
-          verbose: bool = True) -> Dict:
+          verbose: bool = True,
+          extra_cache_dirs: Optional[Sequence[Path | str]] = None) -> Dict:
     """Fold the shard dirs into ``out_dir`` (DB dedup + reports + caches +
     rebuilt leaderboard, see module docstring); returns the merge summary.
-    Raises ``FileNotFoundError`` for a missing shard dir and ``ValueError``
-    when ``out_dir`` aliases a shard dir. Deterministic: the same shard
-    contents produce byte-identical merged outputs regardless of input
-    order (identity dedup is timestamp-, then input-order-stable)."""
+    ``extra_cache_dirs`` folds additional content-addressed cache dirs in
+    (the queue-shared cache of a ``--queue`` campaign). Raises
+    ``FileNotFoundError`` for a missing shard dir and ``ValueError`` when
+    ``out_dir`` aliases a shard dir. Deterministic AND order-invariant:
+    the same shard contents produce byte-identical merged outputs under
+    any permutation of ``shard_dirs`` (row dedup ties break on serialized
+    content, report collisions on (mtime, content)) — tier-1
+    property-tests both."""
     shard_dirs = [Path(s) for s in shard_dirs]
     out_dir = Path(out_dir)
     for sd in shard_dirs:
@@ -151,7 +177,8 @@ def merge(shard_dirs: Sequence[Path | str], out_dir: Path | str,
     kept, dups = merge_cost_dbs([sd / "cost_db.jsonl" for sd in shard_dirs],
                                 out_dir / "cost_db.jsonl")
     reports = merge_reports(shard_dirs, out_dir)
-    cached = merge_caches(shard_dirs, out_dir)
+    cached = merge_caches(shard_dirs, out_dir,
+                          [Path(c) for c in (extra_cache_dirs or [])])
     lb_path = rebuild_leaderboard(out_dir)
     summary = {
         "shards": [str(s) for s in shard_dirs],
@@ -174,6 +201,11 @@ def build_parser() -> argparse.ArgumentParser:
                     "dry-run caches) and rebuild one leaderboard")
     ap.add_argument("shards", nargs="+", help="per-shard campaign --out dirs")
     ap.add_argument("--out", required=True, help="merged campaign dir")
+    ap.add_argument("--extra-cache", action="append", default=None,
+                    metavar="DIR",
+                    help="additional content-addressed cache dir(s) to fold "
+                         "in (e.g. a queue-mode campaign's shared "
+                         "QUEUE/dryrun_cache); repeatable")
     return ap
 
 
@@ -182,7 +214,7 @@ def main():
     (FileNotFoundError/ValueError) on missing shard dirs or ``--out``
     aliasing a shard dir."""
     args = build_parser().parse_args()
-    merge(args.shards, args.out)
+    merge(args.shards, args.out, extra_cache_dirs=args.extra_cache)
 
 
 if __name__ == "__main__":

@@ -29,12 +29,29 @@ lifecycle:
   ``--out`` via ``repro.launch.merge_db`` (dedup by design identity,
   earliest record wins), so the single invocation ends with the same
   byte-stable ``leaderboard.json`` the manual shard+merge flow produces —
-  whichever executor ran the shards.
+  whichever executor ran the shards;
+* **schedule** (``--queue``) — instead of cutting the grid statically
+  (``--shard i/n``), seed a crash-safe file-backed cell queue
+  (``repro.launch.scheduler``) under ``OUT/queue/`` and let every shard
+  pull its next cell under a heartbeat-renewed lease. The orchestrator is
+  the scheduler: it releases a crashed shard's leases immediately on
+  restart (no waiting out the deadline), and it **steals** — when a leased
+  cell's age exceeds ``--steal-factor`` x the fleet's median completed-cell
+  duration (and at least ``--steal-min-s``) while another shard sits idle,
+  the lease is expired back to pending so the idle shard picks it up;
+  the slow shard's in-flight work is surrendered gracefully and every
+  compile it already paid for replays from the queue-shared dry-run cache.
+  The merged leaderboard stays byte-identical to the static shard+merge
+  flow on the same grid — steals and kills included.
 
 Quickstart (the whole campaign, supervised, one command):
 
     PYTHONPATH=src python -m repro.launch.orchestrator \\
         --archs all --shapes all --shards 2 --out artifacts/run
+
+    # dynamic cell queue + work stealing instead of a static grid cut
+    PYTHONPATH=src python -m repro.launch.orchestrator \\
+        --archs all --shapes all --shards 2 --queue --out artifacts/run
 
 Fault injection (tests/CI): ``--inject-kill I:K`` arms a one-shot crash in
 shard I after K completed cells — the shard dies abruptly at a cell boundary
@@ -59,11 +76,14 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.launch.campaign import (MESH_CHOICES, STRATEGY_CHOICES,
-                                   resolve_grid, write_json_atomic)
+                                   resolve_grid, shard_cells,
+                                   validate_gate_args, write_json_atomic)
 from repro.launch.executors import (EXECUTOR_CHOICES, ShardExecutor,
                                     ShardProc, make_executor)
+from repro.launch.scheduler import CellQueue
 
 CRASH_TOKEN_FILE = ".crash_token"
+QUEUE_DIR = "queue"
 
 
 def child_env() -> Dict[str, str]:
@@ -91,19 +111,35 @@ def shard_dirs_for(out_dir: Path, shards: int) -> List[Path]:
 def build_shard_cmd(i: int, shards: int, shard_dir: Path, *, archs: str,
                     shapes: str, mesh: str, iterations: int, budget: int,
                     workers: int, strategy: str,
-                    gate_factor: Optional[float], llm: str) -> List[str]:
+                    gate_factor: Optional[float],
+                    gate_min_factor: Optional[float] = None, llm: str,
+                    queue_dir: Optional[Path] = None,
+                    queue_lease_s: float = 300.0) -> List[str]:
     """The exact ``repro.launch.campaign`` argv for shard ``i`` of
     ``shards`` — one place, so supervisor restarts always replay the
-    original command (campaign resume makes that idempotent). Remote
-    executors rewrite only the interpreter and the ``--out`` value."""
+    original command (campaign resume makes that idempotent). With
+    ``queue_dir`` the shard pulls cells from the queue as owner
+    ``shard{i}`` instead of taking the static ``--shard i/n`` slice.
+    Remote executors rewrite only the interpreter and the ``--out`` value
+    (the queue path must be a shared filesystem when shards run
+    remotely)."""
     cmd = [sys.executable, "-m", "repro.launch.campaign",
            "--archs", archs, "--shapes", shapes, "--mesh", mesh,
            "--iterations", str(iterations), "--budget", str(budget),
            "--workers", str(workers), "--strategy", strategy,
-           "--llm", llm, "--out", str(shard_dir),
-           "--shard", f"{i}/{shards}"]
+           "--llm", llm, "--out", str(shard_dir)]
+    if queue_dir is not None:
+        # absolute: the queue is the shards' rendezvous, and remote
+        # executors assume one shared-filesystem path on every host
+        cmd += ["--queue", str(Path(queue_dir).resolve()),
+                "--queue-owner", f"shard{i}",
+                "--queue-lease-s", str(queue_lease_s)]
+    else:
+        cmd += ["--shard", f"{i}/{shards}"]
     if gate_factor is not None:
         cmd += ["--gate-factor", str(gate_factor)]
+    if gate_min_factor is not None:
+        cmd += ["--gate-min-factor", str(gate_min_factor)]
     return cmd
 
 
@@ -156,14 +192,62 @@ def _status_line(shard_states: Sequence[ShardProc]) -> str:
     return " | ".join(parts)
 
 
+def plan_steals(q: CellQueue, shard_states: Sequence[ShardProc], *,
+                steal_factor: float, steal_min_s: float, max_steals: int,
+                now: Optional[float] = None) -> List:
+    """The work-stealing rule: which leased cells should be expired back to
+    pending *right now*. A cell is steal-eligible when
+
+    * its lease age exceeds ``max(steal_min_s, steal_factor x median)``,
+      where the median is over the fleet's completed-cell durations
+      (``status == "complete"`` done tickets — resumed/unsupported cells
+      finish in milliseconds and would poison the scale), and
+    * it has been stolen fewer than ``max_steals`` times (a cell that is
+      slow *everywhere* must not ping-pong forever), and
+    * at least one *other* live shard is idle (heartbeat ``status ==
+      "waiting"``) — stealing without a taker just burns the owner's work.
+
+    At most one steal per idle shard per pass. Returns the tickets to
+    steal (the caller performs the steal, so this stays a pure decision
+    function — unit-testable without a fleet)."""
+    now = time.time() if now is None else now
+    durations = [d for t in q.tickets("done")
+                 if t.status == "complete" and (d := t.duration())]
+    if not durations:
+        return []  # no completed cell yet: no scale to judge "slow" against
+    durations.sort()
+    med = durations[len(durations) // 2]
+    threshold = max(steal_min_s, steal_factor * med)
+    idle = {f"shard{s.index}" for s in shard_states
+            if not s.done and not s.failed
+            and s.last_payload.get("status") == "waiting"}
+    if not idle:
+        return []
+    out = []
+    for t in q.tickets("leased"):
+        if t.owner in idle or t.steals >= max_steals:
+            continue
+        age = now - (t.leased_at if t.leased_at is not None else now)
+        if age > threshold:
+            out.append(t)
+        if len(out) >= len(idle):
+            break
+    return out
+
+
 def run_orchestrator(*, archs: str, shapes: str, shards: int,
                      out_dir: Path | str, mesh: str = "small",
                      iterations: int = 2, budget: int = 3, workers: int = 2,
                      strategy: str = "ensemble",
-                     gate_factor: Optional[float] = None, llm: str = "mock",
+                     gate_factor: Optional[float] = None,
+                     gate_min_factor: Optional[float] = None,
+                     llm: str = "mock",
                      poll_interval: float = 1.0, hang_timeout: float = 300.0,
                      max_restarts: int = 2,
                      inject_kill: Optional[Tuple[int, int]] = None,
+                     queue: bool = False, steal_factor: float = 4.0,
+                     steal_min_s: float = 20.0, max_steals: int = 2,
+                     queue_lease_s: float = 300.0,
                      executor: str = "local",
                      hosts: Optional[Sequence[str]] = None,
                      remote_root: Optional[str] = None,
@@ -190,8 +274,14 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
     Determinism: with the mock LLM and a transfer-free strategy the merged
     leaderboard is byte-identical to the manual shard+merge flow — kills or
     not (injected crashes land at cell boundaries; resume skips completed
-    cells), and whichever executor ran the shards."""
-    resolve_grid(archs, shapes)  # fail fast, before any process spawns
+    cells), whichever executor ran the shards, and static cut or dynamic
+    ``queue=True`` cell queue (steals included: a stolen cell's results
+    dedupe at merge).
+
+    Queue mode (``queue=True``) seeds ``OUT/queue/`` from the grid before
+    any shard spawns, releases a crashed/hung shard's leases immediately on
+    restart, and runs the steal rule (:func:`plan_steals`) every poll."""
+    grid_archs, grid_shapes = resolve_grid(archs, shapes)  # fail fast
     if shards < 1:
         raise ValueError(f"need shards >= 1, got {shards}")
     if inject_kill is not None and not (0 <= inject_kill[0] < shards):
@@ -200,6 +290,12 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
     if inject_kill is not None and executor == "ssh":
         raise ValueError("--inject-kill arms a local token file; it is "
                          "supported with --executor local or loopback only")
+    if queue and executor == "ssh" and remote_root is not None:
+        raise ValueError("--queue needs every shard to see the queue dir at "
+                         "the same path (shared filesystem); --remote-root "
+                         "relocates shard dirs, so the two cannot combine — "
+                         "drop --remote-root or use --executor "
+                         "local|loopback")
     ex: ShardExecutor = make_executor(
         executor, hosts=hosts, remote_root=remote_root,
         remote_repo=remote_repo, remote_python=remote_python)
@@ -210,9 +306,20 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
         if verbose:
             print(f"[orchestrator] {msg}", flush=True)
 
+    q: Optional[CellQueue] = None
+    if queue:
+        q = CellQueue(out_dir / QUEUE_DIR, lease_s=queue_lease_s)
+        seeded = q.seed(shard_cells(grid_archs, grid_shapes), mesh=mesh)
+        c = q.counts()
+        log(f"queue {q.root}: seeded {seeded} ticket(s) "
+            f"({c['done']} already done, {c['pending']} pending)")
+
     states: List[ShardProc] = []
     for i, sd in enumerate(shard_dirs_for(out_dir, shards)):
         env = child_env()
+        # the shard's fleet position, for test preludes that slow exactly
+        # one shard (REPRO_ prefix ⇒ forwarded by the remote executors too)
+        env["REPRO_SHARD_INDEX"] = str(i)
         if inject_kill is not None and inject_kill[0] == i:
             sd.mkdir(parents=True, exist_ok=True)
             token = sd / CRASH_TOKEN_FILE
@@ -224,11 +331,16 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
         cmd = build_shard_cmd(i, shards, sd, archs=archs, shapes=shapes,
                               mesh=mesh, iterations=iterations, budget=budget,
                               workers=workers, strategy=strategy,
-                              gate_factor=gate_factor, llm=llm)
+                              gate_factor=gate_factor,
+                              gate_min_factor=gate_min_factor, llm=llm,
+                              queue_dir=q.root if q is not None else None,
+                              queue_lease_s=queue_lease_s)
         states.append(ShardProc(index=i, out_dir=sd, cmd=cmd, env=env))
 
     t0 = time.time()
     total_restarts = 0
+    steals = 0
+    lease_reclaims = 0
     last_line = ""
     try:
         for s in states:
@@ -283,9 +395,32 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                             f"(re-run the same command)")
                     s.restarts += 1
                     total_restarts += 1
+                    if q is not None:
+                        # the owner is known-dead: reclaim its leases now
+                        # instead of waiting out their deadlines
+                        released = q.release_owner(f"shard{s.index}")
+                        lease_reclaims += len(released)
+                        for t in released:
+                            log(f"shard{s.index}: released lease on "
+                                f"{t.cell} (attempt {t.attempt})")
                     log(f"shard{s.index}: {why}; restarting with resume "
                         f"(attempt {s.restarts + 1})")
                     ex.spawn(s)
+            if q is not None:
+                # scheduler pass: deadline reclaims (belt and braces — the
+                # shards' acquirers reclaim too) and the steal rule
+                for t in q.reclaim_expired():
+                    lease_reclaims += 1
+                    log(f"queue: lease on {t.cell} expired — reclaimed "
+                        f"(attempt {t.attempt})")
+                for t in plan_steals(q, states, steal_factor=steal_factor,
+                                     steal_min_s=steal_min_s,
+                                     max_steals=max_steals):
+                    if q.steal(t) is not None:
+                        steals += 1
+                        log(f"queue: stole {t.cell} from {t.owner} "
+                            f"(lease age beat the fleet median; "
+                            f"steal #{t.steals + 1} for this cell)")
             line = _status_line(states)
             if line != last_line:
                 last_line = line
@@ -306,15 +441,27 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
 
     from repro.launch.merge_db import merge
 
-    merged = merge([s.out_dir for s in states], out_dir, verbose=verbose)
+    merged = merge([s.out_dir for s in states], out_dir, verbose=verbose,
+                   extra_cache_dirs=([q.cache_dir] if q is not None
+                                     else None))
+    queue_cells = q.counts() if q is not None else None
     summary = {
         "out": str(out_dir),
         "shards": shards,
         "executor": ex.name,
         "hosts": list(hosts) if hosts else None,
-        "cells": sum(s.last_payload.get("cells_done", 0) for s in states),
+        # queue mode counts DONE tickets, not the sum of shard-local
+        # cells_done: a stolen cell is worked by two shards but is one cell
+        "cells": (queue_cells["done"] if queue_cells is not None else
+                  sum(s.last_payload.get("cells_done", 0) for s in states)),
         "restarts": total_restarts,
         "restarts_per_shard": {f"shard{s.index}": s.restarts for s in states},
+        "queue": str(q.root) if q is not None else None,
+        "queue_cells": queue_cells,
+        "steals": steals,
+        "lease_reclaims": lease_reclaims,
+        "max_lease_attempts": (max((t.attempt for t in q.tickets("done")),
+                                   default=0) if q is not None else None),
         "evaluations": merged["datapoints"],
         "duplicates_dropped": merged["duplicates_dropped"],
         "best": aggregate_best(states),
@@ -352,7 +499,33 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--gate-factor", type=float, default=None,
                     help="surrogate gate factor, forwarded to every shard "
                          "(must be > 1)")
+    ap.add_argument("--gate-min-factor", type=float, default=None,
+                    help="anneal target for the gate factor, forwarded to "
+                         "every shard (must be in (1, gate-factor]; "
+                         "requires --gate-factor)")
     ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
+    ap.add_argument("--queue", action="store_true",
+                    help="dynamic scheduling: seed a crash-safe cell queue "
+                         "under OUT/queue/ and let shards pull leases from "
+                         "it instead of taking static --shard i/n slices; "
+                         "enables lease release on restart and work "
+                         "stealing")
+    ap.add_argument("--steal-factor", type=float, default=4.0,
+                    help="steal a leased cell once its age exceeds this "
+                         "multiple of the fleet's median completed-cell "
+                         "duration (queue mode; also needs --steal-min-s "
+                         "and an idle shard)")
+    ap.add_argument("--steal-min-s", type=float, default=20.0,
+                    help="never steal a lease younger than this many "
+                         "seconds (queue mode)")
+    ap.add_argument("--max-steals", type=int, default=2,
+                    help="per-cell steal budget: a cell slow everywhere "
+                         "must not ping-pong between shards forever "
+                         "(queue mode)")
+    ap.add_argument("--queue-lease-s", type=float, default=300.0,
+                    help="lease length forwarded to every shard; renewed "
+                         "each heartbeat, so it must exceed the slowest "
+                         "single iteration step (queue mode)")
     ap.add_argument("--executor", default="local",
                     choices=list(EXECUTOR_CHOICES),
                     help="where shards run: local subprocesses, remote "
@@ -393,12 +566,15 @@ def main():
     exhausts its restart budget."""
     ap = build_parser()
     args = ap.parse_args()
-    if args.gate_factor is not None and args.gate_factor <= 1.0:
-        ap.error(f"--gate-factor must be > 1, got {args.gate_factor}")
+    gate_err = validate_gate_args(args.gate_factor, args.gate_min_factor)
+    if gate_err:
+        ap.error(gate_err)
     if args.shards < 1:
         ap.error(f"--shards must be >= 1, got {args.shards}")
     if args.executor == "ssh" and not args.hosts:
         ap.error("--executor ssh requires --hosts h0,h1,...")
+    if args.queue and args.queue_lease_s <= 0:
+        ap.error(f"--queue-lease-s must be > 0, got {args.queue_lease_s}")
     try:
         inject = parse_inject_kill(args.inject_kill)
     except ValueError as e:
@@ -414,9 +590,14 @@ def main():
                          mesh=args.mesh, iterations=args.iterations,
                          budget=args.budget, workers=args.workers,
                          strategy=args.strategy, gate_factor=args.gate_factor,
+                         gate_min_factor=args.gate_min_factor,
                          llm=args.llm, poll_interval=args.poll_interval,
                          hang_timeout=args.hang_timeout,
                          max_restarts=args.max_restarts, inject_kill=inject,
+                         queue=args.queue, steal_factor=args.steal_factor,
+                         steal_min_s=args.steal_min_s,
+                         max_steals=args.max_steals,
+                         queue_lease_s=args.queue_lease_s,
                          executor=args.executor, hosts=hosts,
                          remote_root=args.remote_root,
                          remote_repo=args.remote_repo,

@@ -1,0 +1,46 @@
+"""Campaign prelude for tests/CI: make exactly ONE shard a straggler.
+
+Chains the tiny prelude (64-token cells, see ``tiny_prelude.py``) and then
+wraps ``repro.launch.dryrun.run_cell`` with a fixed ``time.sleep`` — but
+only when this process is the designated slow shard:
+``REPRO_SHARD_INDEX`` (stamped by the orchestrator into every shard's
+environment) equals ``REPRO_TEST_STRAGGLER_SHARD`` (default ``"0"``). The
+sleep comes from ``REPRO_TEST_EVAL_SLEEP_S`` (seconds, default 0) and is
+paid on every evaluation, baseline included.
+
+This is the deterministic straggler scenario the work-stealing tests and
+the ``bench_dse_throughput.py --straggler`` arm use: under the static
+``--shard i/n`` cut, the whole campaign's wall-clock is the slow shard's;
+under ``--queue``, the fast shard drains most of the grid and the
+orchestrator steals the straggler's stuck cell, so at least one steal must
+occur and the merged leaderboard must still match the static run
+byte-for-byte.
+
+Only valid with ``--workers 1``: pool workers are fresh spawn interpreters
+that never execute this prelude.
+"""
+import os
+import time
+from pathlib import Path
+
+# no __file__ here (the campaign exec()s this source); the env var that
+# selected this prelude is the one reliable pointer back to this directory
+_tiny = Path(os.environ["REPRO_CAMPAIGN_PRELUDE"]).resolve().with_name(
+    "tiny_prelude.py")
+exec(compile(_tiny.read_text(), str(_tiny), "exec"),
+     {"__name__": "__repro_prelude__"})
+
+_me = os.environ.get("REPRO_SHARD_INDEX")
+_slow = os.environ.get("REPRO_TEST_STRAGGLER_SHARD", "0")
+
+if _me is not None and _me == _slow:
+    import repro.launch.dryrun as _D
+
+    _SLEEP_S = float(os.environ.get("REPRO_TEST_EVAL_SLEEP_S", "0"))
+    _real_run_cell = _D.run_cell
+
+    def _slow_run_cell(*args, **kwargs):
+        time.sleep(_SLEEP_S)
+        return _real_run_cell(*args, **kwargs)
+
+    _D.run_cell = _slow_run_cell

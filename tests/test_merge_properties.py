@@ -1,0 +1,139 @@
+"""Property tests for ``merge_db``: the merge is a *function of the shard
+contents*, not of how you call it. For generated shard DBs with overlapping
+``(arch, shape, mesh, __key__)`` rows (the exact overlap a queue-mode steal
+produces), any merge order must yield byte-identical cost DBs and
+leaderboards, earliest-wins dedupe must hold, and re-merging a merged dir
+must be a fixed point. Pure file manipulation — no jax, no subprocesses."""
+import itertools
+import json
+from pathlib import Path
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core.cost_db import CostDB, DataPoint
+from repro.launch.merge_db import merge, merge_cost_dbs
+
+ARCHS = ["a1", "a2"]
+SHAPES = ["s1", "s2"]
+KEYS = ["k1", "k2", "k3"]
+
+
+def _dp(arch, shape, key, ts, bound, status="ok"):
+    return DataPoint(arch=arch, shape=shape, mesh="m",
+                     point={"remat": "full", "__key__": key}, status=status,
+                     metrics={"bound_s": bound, "fits_hbm": status == "ok"},
+                     ts=ts)
+
+
+def _row_strategy():
+    """One generated DB row: (shard, arch, shape, key, ts, bound, pruned).
+    Small pools on purpose — collisions across shards are the interesting
+    case, including *equal-timestamp* conflicting duplicates (the same ts
+    and identity, different measured bound), which input-order-dependent
+    tie-breaking would merge differently per permutation."""
+    return st.tuples(st.integers(0, 2),              # shard index
+                     st.sampled_from(ARCHS), st.sampled_from(SHAPES),
+                     st.sampled_from(KEYS),
+                     st.integers(0, 5),              # coarse ts: forces ties
+                     st.integers(1, 9),              # bound mantissa
+                     st.booleans())                  # pruned row?
+
+
+def _build_shards(tmp, rows):
+    """Materialize generated rows into 3 shard dirs (DB + a report per cell
+    seen, so the leaderboard covers every generated cell)."""
+    shard_dirs = [tmp / f"shard{i}" for i in range(3)]
+    dbs = {i: CostDB(sd / "cost_db.jsonl") for i, sd in enumerate(shard_dirs)}
+    for sd in shard_dirs:
+        (sd / "reports").mkdir(parents=True, exist_ok=True)
+        (sd / "dryrun_cache").mkdir(parents=True, exist_ok=True)
+    cells = set()
+    for shard, arch, shape, key, ts, bound, pruned in rows:
+        status = "pruned" if pruned else "ok"
+        dbs[shard].append(_dp(arch, shape, key, float(ts),
+                              bound / 10.0, status))
+        cells.add((shard, arch, shape))
+    for shard, arch, shape in cells:
+        # identical report content for a cell wherever it was "run": what a
+        # deterministic re-run of a stolen cell produces on the other shard
+        (shard_dirs[shard] / "reports" / f"{arch}__{shape}__m.json"
+         ).write_text(json.dumps({"arch": arch, "shape": shape,
+                                  "status": "complete", "improvement": 0.9}))
+    return shard_dirs
+
+
+def _merge_bytes(shard_dirs, out: Path):
+    merge(shard_dirs, out, verbose=False)
+    return ((out / "cost_db.jsonl").read_bytes(),
+            (out / "leaderboard.json").read_bytes())
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.lists(_row_strategy(), min_size=1, max_size=24))
+def test_merge_is_order_invariant_and_idempotent(tmp_path_factory, rows):
+    """Every permutation of the shard list merges to byte-identical DB and
+    leaderboard files, and merging the merged dir again is a no-op."""
+    tmp = tmp_path_factory.mktemp("mergeprop")
+    shard_dirs = _build_shards(tmp, rows)
+
+    results = []
+    for i, perm in enumerate(itertools.permutations(shard_dirs)):
+        results.append(_merge_bytes(list(perm), tmp / f"out{i}"))
+    assert all(r == results[0] for r in results[1:]), \
+        "merge output depends on shard order"
+
+    # idempotence: merge(merge(x)) == merge(x), byte for byte
+    again = _merge_bytes([tmp / "out0"], tmp / "re")
+    assert again == results[0], "re-merging a merged dir changed it"
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.lists(_row_strategy(), min_size=1, max_size=24))
+def test_merge_dedupes_earliest_per_identity(tmp_path_factory, rows):
+    """Exactly one surviving row per ``(arch, shape, mesh, key, status)``
+    identity, and it is one of minimum timestamp for that identity."""
+    tmp = tmp_path_factory.mktemp("mergededup")
+    shard_dirs = _build_shards(tmp, rows)
+    out = tmp / "out"
+    kept, dropped = merge_cost_dbs(
+        [sd / "cost_db.jsonl" for sd in shard_dirs], out / "cost_db.jsonl")
+
+    merged = CostDB(out / "cost_db.jsonl").all()
+    assert len(merged) == kept and kept + dropped == len(rows)
+
+    def ident(d):
+        return (d.arch, d.shape, d.mesh, d.point["__key__"], d.status)
+
+    seen = {}
+    for d in merged:
+        assert ident(d) not in seen, f"duplicate identity {ident(d)}"
+        seen[ident(d)] = d
+    # earliest-wins: the survivor's ts is the minimum over all generated
+    # rows sharing its identity
+    all_ts = {}
+    for shard, arch, shape, key, ts, bound, pruned in rows:
+        status = "pruned" if pruned else "ok"
+        all_ts.setdefault((arch, shape, "m", key, status),
+                          []).append(float(ts))
+    for k, d in seen.items():
+        assert d.ts == min(all_ts[k]), (k, d.ts, all_ts[k])
+    # and the merged stream reads chronologically
+    assert [d.ts for d in merged] == sorted(d.ts for d in merged)
+
+
+def test_equal_ts_conflict_merges_identically_both_orders(tmp_path):
+    """The regression the order-invariance property guards: two shards
+    carrying the *same identity at the same timestamp* with different
+    payloads (clock granularity during a steal race) must merge the same
+    whichever shard is listed first."""
+    a, b = tmp_path / "a", tmp_path / "b"
+    CostDB(a / "cost_db.jsonl").append(_dp("a1", "s1", "k1", 100.0, 0.5))
+    CostDB(b / "cost_db.jsonl").append(_dp("a1", "s1", "k1", 100.0, 0.7))
+    out1, out2 = tmp_path / "o1", tmp_path / "o2"
+    merge_cost_dbs([a / "cost_db.jsonl", b / "cost_db.jsonl"],
+                   out1 / "cost_db.jsonl")
+    merge_cost_dbs([b / "cost_db.jsonl", a / "cost_db.jsonl"],
+                   out2 / "cost_db.jsonl")
+    b1 = (out1 / "cost_db.jsonl").read_bytes()
+    assert b1 == (out2 / "cost_db.jsonl").read_bytes()
+    rows = [DataPoint.from_json(ln) for ln in b1.decode().splitlines()]
+    assert len(rows) == 1  # deduped to the content-order winner

@@ -1,0 +1,355 @@
+"""Dynamic cell-queue scheduling end to end: CLI surface, CLI-to-gate
+plumbing, the steal decision rule, and the tier-1 acceptance contract — the
+queue-mode merged leaderboard is byte-identical to the static ``--shard
+i/n`` + ``merge_db`` flow on the same grid, under an injected mid-lease
+kill (cell re-leased exactly once, no datapoint double-recorded) and under
+a forced work steal (straggler shard, ``steals >= 1``)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.launch import campaign as camp
+from repro.launch import orchestrator as orch
+from repro.launch.scheduler import CellQueue
+
+REPO = Path(__file__).resolve().parents[1]
+TINY_PRELUDE_FILE = REPO / "tests" / "ci" / "tiny_prelude.py"
+STRAGGLER_PRELUDE_FILE = REPO / "tests" / "ci" / "straggler_prelude.py"
+
+GRID = dict(archs="qwen3-0.6b,stablelm-3b", shapes="train_4k,decode_32k",
+            mesh="tiny", iterations=1, budget=2, workers=1)
+
+
+# ---------------------------------------------------------------------------
+# CLI surface (no jax, no subprocesses)
+# ---------------------------------------------------------------------------
+def test_campaign_parser_queue_flags_and_exclusions():
+    ns = camp.build_parser().parse_args(
+        ["--queue", "artifacts/q", "--queue-owner", "w0"])
+    assert ns.queue == "artifacts/q" and ns.queue_owner == "w0"
+    assert ns.queue_lease_s == 300.0 and ns.queue_poll_s == 0.5
+    ns2 = camp.build_parser().parse_args(
+        ["--gate-factor", "3.0", "--gate-min-factor", "1.5"])
+    assert ns2.gate_min_factor == 1.5
+
+
+def test_run_campaign_rejects_queue_plus_shard_and_bad_gate_specs(tmp_path):
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        camp.run_campaign(["a"], ["s"], None, "m", out_dir=tmp_path,
+                          shard=(0, 2), queue=tmp_path / "q")
+    with pytest.raises(ValueError, match="gate-min-factor requires"):
+        camp.run_campaign(["a"], ["s"], None, "m", out_dir=tmp_path,
+                          gate_min_factor=1.5)
+    with pytest.raises(ValueError, match="gate-factor must be > 1"):
+        camp.run_campaign(["a"], ["s"], None, "m", out_dir=tmp_path,
+                          gate_factor=0.5)
+    # the API path enforces the full range check, same as the CLIs
+    with pytest.raises(ValueError, match="gate-min-factor must be in"):
+        camp.run_campaign(["a"], ["s"], None, "m", out_dir=tmp_path,
+                          gate_factor=3.0, gate_min_factor=0.5)
+    with pytest.raises(ValueError, match="queue_poll_s"):
+        camp.run_campaign(["a"], ["s"], None, "m", out_dir=tmp_path,
+                          queue=tmp_path / "q", queue_poll_s=0)
+
+
+def test_validate_gate_args_is_the_single_source_of_truth():
+    assert camp.validate_gate_args(None, None) is None
+    assert camp.validate_gate_args(3.0, None) is None
+    assert camp.validate_gate_args(3.0, 1.5) is None
+    assert camp.validate_gate_args(3.0, 3.0) is None  # inclusive upper edge
+    assert "must be > 1" in camp.validate_gate_args(1.0, None)
+    assert "requires" in camp.validate_gate_args(None, 1.5)
+    assert "must be in" in camp.validate_gate_args(3.0, 1.0)
+    assert "must be in" in camp.validate_gate_args(3.0, 3.5)
+
+
+def test_orchestrator_parser_queue_and_steal_flags():
+    ns = orch.build_parser().parse_args(["--queue", "--steal-factor", "3",
+                                         "--steal-min-s", "5",
+                                         "--max-steals", "1",
+                                         "--queue-lease-s", "60"])
+    assert ns.queue and ns.steal_factor == 3.0 and ns.steal_min_s == 5.0
+    assert ns.max_steals == 1 and ns.queue_lease_s == 60.0
+    assert not orch.build_parser().parse_args([]).queue  # static by default
+
+
+def test_build_shard_cmd_queue_variant_parses_and_names_owner(tmp_path):
+    cmd = orch.build_shard_cmd(
+        1, 3, tmp_path / "s1", archs="all", shapes="train_4k", mesh="tiny",
+        iterations=2, budget=3, workers=1, strategy="ensemble",
+        gate_factor=2.5, gate_min_factor=1.5, llm="mock",
+        queue_dir=tmp_path / "q", queue_lease_s=120.0)
+    assert "--shard" not in cmd  # the queue replaces the static cut
+    assert cmd[cmd.index("--queue") + 1] == str((tmp_path / "q").resolve())
+    assert cmd[cmd.index("--queue-owner") + 1] == "shard1"
+    assert cmd[cmd.index("--queue-lease-s") + 1] == "120.0"
+    assert cmd[cmd.index("--gate-min-factor") + 1] == "1.5"
+    camp.build_parser().parse_args(cmd[3:])  # must parse against the CLI
+    # and the static variant still carries --shard, never --queue
+    static = orch.build_shard_cmd(
+        1, 3, tmp_path / "s1", archs="all", shapes="train_4k", mesh="tiny",
+        iterations=2, budget=3, workers=1, strategy="ensemble",
+        gate_factor=None, llm="mock")
+    assert "--queue" not in static and static[static.index("--shard") + 1] == "1/3"
+
+
+def test_orchestrator_rejects_queue_with_relocated_remote_root(tmp_path):
+    with pytest.raises(ValueError, match="shared filesystem"):
+        orch.run_orchestrator(archs="qwen3-0.6b", shapes="train_4k",
+                              shards=1, out_dir=tmp_path / "x", queue=True,
+                              executor="ssh", hosts=["h0"],
+                              remote_root="/scratch/elsewhere")
+
+
+# ---------------------------------------------------------------------------
+# CLI-to-gate plumbing: --gate-min-factor reaches SurrogateGate.min_factor
+# ---------------------------------------------------------------------------
+def test_campaign_main_forwards_queue_and_gate_args(monkeypatch):
+    captured = {}
+    monkeypatch.setattr(camp, "run_campaign",
+                        lambda *a, **kw: captured.update(kw))
+    monkeypatch.setattr(camp, "make_campaign_mesh",
+                        lambda name: (None, "tiny1x1"))
+    monkeypatch.setattr(sys, "argv",
+                        ["campaign", "--archs", "qwen3-0.6b", "--shapes",
+                         "train_4k", "--queue", "artifacts/q",
+                         "--queue-owner", "w7", "--queue-lease-s", "77",
+                         "--gate-factor", "3.0", "--gate-min-factor", "1.5"])
+    camp.main()
+    assert captured["queue"] == "artifacts/q"
+    assert captured["queue_owner"] == "w7"
+    assert captured["queue_lease_s"] == 77.0
+    assert captured["gate_factor"] == 3.0
+    assert captured["gate_min_factor"] == 1.5
+
+
+def test_campaign_main_rejects_bad_gate_and_queue_combos(monkeypatch):
+    for argv in (["campaign", "--gate-min-factor", "1.5"],
+                 ["campaign", "--gate-factor", "3", "--gate-min-factor", "9"],
+                 ["campaign", "--queue", "q", "--shard", "0/2"],
+                 ["campaign", "--queue", "q", "--queue-lease-s", "0"],
+                 ["campaign", "--queue", "q", "--queue-poll-s", "0"]):
+        monkeypatch.setattr(sys, "argv", argv)
+        with pytest.raises(SystemExit):
+            camp.main()
+
+
+def test_run_campaign_builds_gate_with_min_factor(tmp_path, monkeypatch):
+    """The whole chain: run_campaign(gate_factor, gate_min_factor) must
+    construct SurrogateGate(factor, min_factor) — verified by intercepting
+    the construction (and aborting the campaign right there, before any
+    compile)."""
+    import repro.search as S
+
+    seen = {}
+
+    class _Stop(RuntimeError):
+        pass
+
+    class Recorder:
+        def __init__(self, cost_model, factor=None, min_factor=None, **kw):
+            seen.update(factor=factor, min_factor=min_factor)
+            raise _Stop
+
+    monkeypatch.setattr(S, "SurrogateGate", Recorder)
+    with pytest.raises(_Stop):
+        camp.run_campaign(["qwen3-0.6b"], ["train_4k"], None, "tiny1x1",
+                          out_dir=tmp_path, gate_factor=2.5,
+                          gate_min_factor=1.25, verbose=False)
+    assert seen == {"factor": 2.5, "min_factor": 1.25}
+
+
+def test_dse_parser_accepts_gate_min_factor():
+    from repro.launch.dse import build_parser
+
+    ns = build_parser().parse_args(["--arch", "llama3-8b", "--shape",
+                                    "train_4k", "--gate-factor", "3.0",
+                                    "--gate-min-factor", "2.0"])
+    assert ns.gate_min_factor == 2.0
+
+
+# ---------------------------------------------------------------------------
+# the steal rule, as a pure decision function
+# ---------------------------------------------------------------------------
+def _fleet(tmp_path, payloads):
+    states = []
+    for i, payload in enumerate(payloads):
+        s = orch.ShardProc(index=i, out_dir=tmp_path / f"s{i}", cmd=[],
+                           env={})
+        s.last_payload = payload
+        states.append(s)
+    return states
+
+
+def _queue_with_history(tmp_path, *, done_durations=(2.0, 2.0, 3.0),
+                        lease_age=100.0, now=1000.0, max_steals_used=0):
+    """A queue where shard0 holds one old lease and the fleet has completed
+    cells of known duration."""
+    q = CellQueue(tmp_path / "q", lease_s=10_000.0)
+    cells = [("done", f"s{i}") for i in range(len(done_durations))]
+    cells.append(("slowarch", "sx"))
+    q.seed(cells)
+    for i, d in enumerate(done_durations):
+        t = q.acquire("shard1", now=500.0)
+        q.complete(t, now=500.0 + d)
+    t = q.acquire("shard0", now=now - lease_age)
+    if max_steals_used:
+        # simulate prior steals without touching the live lease
+        t.steals = max_steals_used
+        q.renew(t, now=now - lease_age)
+    return q
+
+
+def test_plan_steals_steals_old_lease_when_a_shard_idles(tmp_path):
+    q = _queue_with_history(tmp_path)
+    states = _fleet(tmp_path, [{"status": "running"}, {"status": "waiting"}])
+    out = orch.plan_steals(q, states, steal_factor=4.0, steal_min_s=20.0,
+                           max_steals=2, now=1000.0)
+    assert [t.cell for t in out] == ["slowarch/sx"]
+    # and the actual steal moves it back to pending with the audit trail
+    assert q.steal(out[0]) is not None
+    assert q.counts()["pending"] == 1
+
+
+def test_plan_steals_needs_an_idle_taker(tmp_path):
+    q = _queue_with_history(tmp_path)
+    states = _fleet(tmp_path, [{"status": "running"}, {"status": "running"}])
+    assert orch.plan_steals(q, states, steal_factor=4.0, steal_min_s=20.0,
+                            max_steals=2, now=1000.0) == []
+
+
+def test_plan_steals_respects_age_threshold_and_median(tmp_path):
+    q = _queue_with_history(tmp_path, lease_age=15.0)
+    states = _fleet(tmp_path, [{"status": "running"}, {"status": "waiting"}])
+    # age 15 < max(steal_min_s=20, 4 x median 2) = 20: too young
+    assert orch.plan_steals(q, states, steal_factor=4.0, steal_min_s=20.0,
+                            max_steals=2, now=1000.0) == []
+    # a lower floor puts the threshold at 4 x 2 = 8 < 15: steal
+    assert len(orch.plan_steals(q, states, steal_factor=4.0, steal_min_s=5.0,
+                                max_steals=2, now=1000.0)) == 1
+
+
+def test_plan_steals_without_completed_cells_never_fires(tmp_path):
+    q = CellQueue(tmp_path / "q", lease_s=10_000.0)
+    q.seed([("a", "s")])
+    q.acquire("shard0", now=0.0)
+    states = _fleet(tmp_path, [{"status": "running"}, {"status": "waiting"}])
+    assert orch.plan_steals(q, states, steal_factor=1.0, steal_min_s=0.1,
+                            max_steals=2, now=10_000.0) == []
+
+
+def test_plan_steals_honors_per_cell_budget(tmp_path):
+    q = _queue_with_history(tmp_path, max_steals_used=2)
+    states = _fleet(tmp_path, [{"status": "running"}, {"status": "waiting"}])
+    assert orch.plan_steals(q, states, steal_factor=4.0, steal_min_s=5.0,
+                            max_steals=2, now=1000.0) == []
+
+
+def test_plan_steals_never_steals_from_an_idle_owner(tmp_path):
+    q = _queue_with_history(tmp_path)
+    states = _fleet(tmp_path, [{"status": "waiting"}, {"status": "waiting"}])
+    assert orch.plan_steals(q, states, steal_factor=4.0, steal_min_s=5.0,
+                            max_steals=2, now=1000.0) == []
+
+
+# ---------------------------------------------------------------------------
+# the acceptance contract, end to end (real subprocesses, tiny configs)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def static_reference(tmp_path_factory):
+    """The manual ``--shard i/n`` + ``merge_db`` flow on GRID: the byte
+    reference every queue-mode run must reproduce."""
+    tmp = tmp_path_factory.mktemp("static_ref")
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src"),
+           "REPRO_CAMPAIGN_PRELUDE": str(TINY_PRELUDE_FILE)}
+    for i in range(2):
+        cmd = orch.build_shard_cmd(
+            i, 2, tmp / f"manual{i}", archs=GRID["archs"],
+            shapes=GRID["shapes"], mesh=GRID["mesh"],
+            iterations=GRID["iterations"], budget=GRID["budget"],
+            workers=GRID["workers"], strategy="ensemble", gate_factor=None,
+            llm="mock")
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=600)
+        assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+    from repro.launch.merge_db import merge
+
+    merge([tmp / "manual0", tmp / "manual1"], tmp / "merged", verbose=False)
+    return (tmp / "merged" / "leaderboard.json").read_bytes()
+
+
+def _merged_db_identities(out_dir: Path):
+    rows = [json.loads(ln) for ln in
+            (out_dir / "cost_db.jsonl").read_text().splitlines()
+            if ln.strip()]
+    return [(r["arch"], r["shape"], r["mesh"], r["point"].get("__key__"),
+             r["status"]) for r in rows]
+
+
+@pytest.mark.slow
+def test_queue_mode_heals_mid_lease_kill_byte_identically(
+        tmp_path, monkeypatch, static_reference):
+    """Fault-injection matrix, kill arm: crash shard 0 mid-lease (after one
+    completed cell). The supervisor must restart it and release its lease;
+    the cell must be re-leased exactly once (attempt == 2); no datapoint
+    may be double-recorded in the merged DB; the summary's restart/steal
+    counters must match the injected schedule; and the merged leaderboard
+    must be byte-identical to the static shard+merge flow."""
+    monkeypatch.setenv("REPRO_CAMPAIGN_PRELUDE", str(TINY_PRELUDE_FILE))
+    s = orch.run_orchestrator(shards=2, out_dir=tmp_path / "run", queue=True,
+                              inject_kill=(0, 1), poll_interval=0.2,
+                              hang_timeout=300.0, verbose=False, **GRID)
+    # counters match the injected schedule: one crash, one restart, the
+    # killed shard's lease reclaimed, and no steal anywhere
+    assert s["restarts"] == 1 and s["restarts_per_shard"]["shard0"] == 1, s
+    assert s["steals"] == 0 and s["lease_reclaims"] >= 1, s
+    assert s["queue_cells"] == {"pending": 0, "leased": 0, "done": 4}, s
+
+    q = CellQueue(tmp_path / "run" / orch.QUEUE_DIR)
+    attempts = sorted(t.attempt for t in q.tickets("done"))
+    assert attempts == [1, 1, 1, 2], attempts  # re-leased exactly once
+    assert s["max_lease_attempts"] == 2, s
+    assert all(t.steals == 0 for t in q.tickets("done"))
+
+    # no datapoint double-recorded in the merged DB
+    idents = _merged_db_identities(tmp_path / "run")
+    assert len(idents) == len(set(idents)), "double-recorded datapoint"
+
+    # and the acceptance bytes
+    got = (tmp_path / "run" / "leaderboard.json").read_bytes()
+    assert got == static_reference, (got[:300], static_reference[:300])
+
+
+@pytest.mark.slow
+def test_queue_mode_steals_from_straggler_byte_identically(
+        tmp_path, monkeypatch, static_reference):
+    """Work stealing, forced: shard 0 sleeps 10s per evaluation (straggler
+    prelude) while shard 1 races through the rest of the grid and idles.
+    The orchestrator must steal the straggler's stuck cell (>= 1 steal, no
+    restart), the stolen cell's audit trail must show the second lease,
+    and the merged leaderboard must still be byte-identical to the static
+    flow — a stolen cell's double results dedupe at merge."""
+    monkeypatch.setenv("REPRO_CAMPAIGN_PRELUDE", str(STRAGGLER_PRELUDE_FILE))
+    monkeypatch.setenv("REPRO_TEST_STRAGGLER_SHARD", "0")
+    monkeypatch.setenv("REPRO_TEST_EVAL_SLEEP_S", "10")
+    s = orch.run_orchestrator(shards=2, out_dir=tmp_path / "run", queue=True,
+                              steal_min_s=6.0, steal_factor=2.0,
+                              poll_interval=0.2, hang_timeout=300.0,
+                              verbose=False, **GRID)
+    assert s["steals"] >= 1 and s["restarts"] == 0, s
+    assert s["queue_cells"] == {"pending": 0, "leased": 0, "done": 4}, s
+
+    q = CellQueue(tmp_path / "run" / orch.QUEUE_DIR)
+    stolen = [t for t in q.tickets("done") if t.steals >= 1]
+    assert stolen and all(t.attempt >= 2 for t in stolen), \
+        [(t.cell, t.attempt, t.steals) for t in q.tickets("done")]
+
+    idents = _merged_db_identities(tmp_path / "run")
+    assert len(idents) == len(set(idents)), "double-recorded datapoint"
+
+    got = (tmp_path / "run" / "leaderboard.json").read_bytes()
+    assert got == static_reference, (got[:300], static_reference[:300])

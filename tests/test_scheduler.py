@@ -1,0 +1,371 @@
+"""CellQueue: the crash-safe file-backed lease queue under the work-stealing
+scheduler. Unit tests for each lifecycle transition (seed / acquire / renew /
+complete / steal / release / expiry-reclaim), concurrency races over the
+atomic-rename claim protocol, crash-window recovery, and a property sweep
+(hypothesis, or the deterministic shim) asserting the one-state-per-ticket
+invariant under random operation sequences. No jax, no subprocess compiles."""
+import json
+import os
+import threading
+
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.launch.scheduler import (DONE, LEASED, PENDING, CellQueue, Ticket,
+                                    sanitize_owner)
+
+CELLS = [("a1", "s1"), ("a1", "s2"), ("a2", "s1"), ("a2", "s2")]
+
+
+def make_queue(tmp_path, lease_s=60.0, cells=CELLS):
+    q = CellQueue(tmp_path / "queue", lease_s=lease_s)
+    q.seed(cells, mesh="tiny1x1")
+    return q
+
+
+# ---------------------------------------------------------------------------
+# construction / seeding
+# ---------------------------------------------------------------------------
+def test_seed_is_idempotent_across_states(tmp_path):
+    q = make_queue(tmp_path)
+    assert q.counts() == {"pending": 4, "leased": 0, "done": 0}
+    assert q.seed(CELLS) == 0  # already pending
+    t = q.acquire("w0")
+    q.complete(t)
+    t2 = q.acquire("w1")
+    # re-seeding resurrects neither the done nor the leased ticket
+    assert q.seed(CELLS, mesh="tiny1x1") == 0
+    assert q.counts() == {"pending": 2, "leased": 1, "done": 1}
+    assert q.seed(CELLS + [("z9", "s9")]) == 1  # only the new cell
+    q.complete(t2)
+
+
+def test_ticket_roundtrip_and_identity(tmp_path):
+    t = Ticket(arch="a1", shape="s1", mesh="m")
+    assert Ticket.from_json(t.to_json()) == t
+    assert t.cell == "a1/s1" and t.file_name == "a1__s1.json"
+    assert t.duration() is None
+    assert Ticket(arch="a", shape="s", leased_at=1.0, done_at=3.5
+                  ).duration() == 2.5
+    with pytest.raises(ValueError):
+        sanitize_owner("")
+    assert sanitize_owner("shard 0/2") == "shard_0_2"
+    assert sanitize_owner("w0") == "w0"
+
+
+def test_rejects_nonpositive_lease(tmp_path):
+    with pytest.raises(ValueError):
+        CellQueue(tmp_path / "q", lease_s=0)
+
+
+# ---------------------------------------------------------------------------
+# acquire / complete lifecycle
+# ---------------------------------------------------------------------------
+def test_acquire_orders_cells_and_stamps_lease(tmp_path):
+    q = make_queue(tmp_path)
+    t = q.acquire("w0", now=100.0)
+    assert (t.arch, t.shape) == ("a1", "s1")  # sorted order, front first
+    assert t.owner == "w0" and t.attempt == 1
+    assert t.leased_at == 100.0 and t.deadline == 160.0
+    # the lease is visible to any other queue instance over the same root
+    q2 = CellQueue(q.root)
+    leased = q2.tickets(LEASED)
+    assert [x.cell for x in leased] == ["a1/s1"] and leased[0].owner == "w0"
+
+
+def test_acquire_returns_none_when_nothing_pending(tmp_path):
+    q = make_queue(tmp_path, cells=[("a1", "s1")])
+    t = q.acquire("w0")
+    assert q.acquire("w1") is None  # leased, not pending — and not drained
+    assert not q.drained()
+    assert q.complete(t)
+    assert q.acquire("w1") is None
+    assert q.drained()
+
+
+def test_complete_records_outcome_and_duration(tmp_path):
+    q = make_queue(tmp_path)
+    t = q.acquire("w0", now=10.0)
+    assert q.complete(t, status="complete", now=14.0)
+    done = q.tickets(DONE)[0]
+    assert done.status == "complete" and done.duration() == 4.0
+    assert done.deadline is None
+    # completing twice is a loud no (the lease is gone)
+    assert not q.complete(t)
+
+
+def test_counts_total_and_drained(tmp_path):
+    q = make_queue(tmp_path)
+    assert q.total() == 4 and not q.drained()
+    while (t := q.acquire("w")) is not None:
+        q.complete(t)
+    assert q.drained() and q.total() == 4
+    assert q.counts() == {"pending": 0, "leased": 0, "done": 4}
+
+
+def test_concurrent_seeders_never_resurrect_a_claimed_cell(tmp_path):
+    """Seeders that race workers (the manual cooperating-commands flow)
+    must not recreate a pending ticket for a cell that is already leased
+    or done: seeding is lock-serialized, per-cell existence-checked, and
+    the create is an exclusive link — the one-state-per-ticket invariant
+    survives seed/acquire/complete interleavings from many processes."""
+    q = CellQueue(tmp_path / "queue", lease_s=60.0)
+    stop = {"flag": False}
+    errors = []
+
+    def seed_loop():
+        mine = CellQueue(q.root)
+        try:
+            while not stop["flag"]:
+                mine.seed(CELLS, mesh="tiny1x1")
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    seeders = [threading.Thread(target=seed_loop) for _ in range(2)]
+    for th in seeders:
+        th.start()
+    try:
+        worker = CellQueue(q.root)
+        done = 0
+        while done < len(CELLS):
+            t = worker.acquire("w0")
+            if t is None:
+                continue
+            assert worker.complete(t)
+            done += 1
+            # the invariant, checked while seeders hammer the queue
+            names = [x.file_name for x in worker.tickets()]
+            assert sorted(names) == sorted(set(names)), names
+    finally:
+        stop["flag"] = True
+        for th in seeders:
+            th.join()
+    assert not errors, errors
+    # nothing resurrected, nothing lost: all cells done exactly once
+    q.seed(CELLS)  # one more idempotent pass for good measure
+    assert q.counts() == {"pending": 0, "leased": 0, "done": len(CELLS)}
+
+
+def test_seed_lock_breaks_stale_holder(tmp_path):
+    """A seeder that died mid-seed leaves the lock dir behind; the next
+    seeder must break it once it is stale instead of deadlocking."""
+    q = CellQueue(tmp_path / "queue", lease_s=60.0)
+    lock = q.root / "seed.lock"
+    lock.mkdir()
+    os.utime(lock, (0, 0))  # ancient mtime: holder long dead
+    assert q.seed(CELLS) == len(CELLS)
+    assert not lock.exists()
+
+
+# ---------------------------------------------------------------------------
+# contention: the atomic-rename claim must hand each ticket to exactly one
+# ---------------------------------------------------------------------------
+def test_two_workers_never_share_a_ticket(tmp_path):
+    q = make_queue(tmp_path)
+    got = {"w0": [], "w1": []}
+
+    def drain(owner):
+        mine = CellQueue(q.root)  # own instance, like a separate process
+        while (t := mine.acquire(owner)) is not None:
+            got[owner].append(t.cell)
+            mine.complete(t)
+
+    threads = [threading.Thread(target=drain, args=(o,)) for o in got]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    claimed = got["w0"] + got["w1"]
+    assert sorted(claimed) == sorted(f"{a}/{s}" for a, s in CELLS)
+    assert len(claimed) == len(set(claimed))  # exactly-once
+    assert q.drained()
+
+
+def test_steal_vs_complete_race_is_exactly_once(tmp_path):
+    """Whoever renames first wins; the loser sees the lease gone. Either
+    way the ticket lands in exactly one state."""
+    q = make_queue(tmp_path, cells=[("a1", "s1")])
+    t = q.acquire("slow")
+    assert q.complete(t)          # owner finishes first...
+    assert q.steal(t) is None     # ...so the steal loses, loudly
+    assert q.counts() == {"pending": 0, "leased": 0, "done": 1}
+
+    q2 = make_queue(tmp_path / "b", cells=[("a1", "s1")])
+    t2 = q2.acquire("slow")
+    assert q2.steal(t2) is not None  # steal first...
+    assert not q2.complete(t2)       # ...so the owner's complete loses
+    assert q2.counts() == {"pending": 1, "leased": 0, "done": 0}
+
+
+# ---------------------------------------------------------------------------
+# stealing, releasing, expiry
+# ---------------------------------------------------------------------------
+def test_steal_returns_cell_to_pending_with_audit_trail(tmp_path):
+    q = make_queue(tmp_path)
+    t = q.acquire("slow")
+    s = q.steal(t)
+    assert s.steals == 1 and s.owner is None and s.leased_at is None
+    re = q.acquire("fast")
+    assert re.cell == t.cell and re.attempt == 2 and re.steals == 1
+    assert q.complete(re)
+    done = [x for x in q.tickets(DONE) if x.cell == t.cell][0]
+    assert done.attempt == 2 and done.steals == 1
+
+
+def test_release_owner_reclaims_only_that_owner(tmp_path):
+    q = make_queue(tmp_path)
+    t0 = q.acquire("w0")
+    t1 = q.acquire("w1")
+    released = q.release_owner("w0")
+    assert [t.cell for t in released] == [t0.cell]
+    assert q.counts()["leased"] == 1  # w1's lease untouched
+    assert not released[0].steals  # a crash reclaim is not a steal
+    assert q.complete(t1)
+    assert not q.complete(t0)  # w0's lease is gone
+
+
+def test_expired_lease_is_reclaimed_and_fresh_one_is_not(tmp_path):
+    q = make_queue(tmp_path, lease_s=50.0)
+    t = q.acquire("w0", now=100.0)  # deadline 150
+    assert q.reclaim_expired(now=149.0) == []
+    rec = q.reclaim_expired(now=151.0)
+    assert [x.cell for x in rec] == [t.cell]
+    re = q.acquire("w1", now=151.0)
+    assert re.cell == t.cell and re.attempt == 2
+
+
+def test_renew_pushes_deadline_and_reports_lost_lease(tmp_path):
+    q = make_queue(tmp_path, lease_s=50.0)
+    t = q.acquire("w0", now=100.0)
+    assert q.renew(t, now=140.0)  # deadline now 190
+    assert q.reclaim_expired(now=160.0) == []  # renewal kept it alive
+    q.steal(t)
+    assert not q.renew(t)  # lease gone: the owner learns on next beat
+    # and the failed renewal must NOT have resurrected the lease file —
+    # the ticket stays in exactly one state (the steal's pending)
+    assert q.counts() == {"pending": 4, "leased": 0, "done": 0}
+    # ...so the thief's complete wins and the old owner's loses
+    re = q.acquire("fast")
+    assert re.cell == t.cell
+    assert not q.complete(t) and q.complete(re)
+
+
+def test_owner_ids_can_never_look_like_tmp_debris(tmp_path):
+    """An owner sanitizing to something containing '.tmp' would make its
+    lease files invisible to every scan (drained() would lie while a cell
+    is still leased); dots are therefore stripped from owner ids."""
+    q = make_queue(tmp_path, cells=[("a1", "s1")])
+    assert sanitize_owner("w.tmp1") == "w_tmp1"
+    t = q.acquire("w.tmp1")
+    assert t.owner == "w_tmp1"
+    assert q.counts()["leased"] == 1 and not q.drained()
+    assert [x.owner for x in q.tickets(LEASED)] == ["w_tmp1"]
+    assert q.release_owner("w.tmp1")  # reclaim sees it too
+    assert q.counts()["pending"] == 1
+
+
+def test_acquire_reclaims_expired_leases_first(tmp_path):
+    q = make_queue(tmp_path, lease_s=10.0, cells=[("a1", "s1")])
+    q.acquire("dead", now=0.0)
+    # nothing pending, but the dead worker's lease is expired: a late
+    # acquirer gets the cell in one call
+    t = q.acquire("w1", now=100.0)
+    assert t is not None and t.attempt == 2
+
+
+# ---------------------------------------------------------------------------
+# crash windows: filename state survives even when content rewrites are lost
+# ---------------------------------------------------------------------------
+def test_claim_crash_window_falls_back_to_mtime(tmp_path):
+    """A worker that dies between the claim-rename and the content rewrite
+    leaves a leased file with pending-era content (no owner, no deadline).
+    The filename still names the owner, and expiry falls back to file
+    mtime + lease_s, so the ticket is reclaimed like any orphan."""
+    q = make_queue(tmp_path, lease_s=30.0, cells=[("a1", "s1")])
+    pend = q.root / PENDING / "a1__s1.json"
+    stale = pend.read_text()
+    # simulate the crash: rename happened, rewrite never did
+    (q.root / LEASED / "a1__s1.json.lease-ghost").write_text(stale)
+    pend.unlink()
+    leased = q.tickets(LEASED)
+    assert leased[0].owner == "ghost"  # recovered from the filename
+    assert q.reclaim_expired(now=0.0) == []  # mtime is "now": not expired
+    import time
+
+    rec = q.reclaim_expired(now=time.time() + 31.0)
+    assert [t.cell for t in rec] == ["a1/s1"]
+    assert q.acquire("w1") is not None
+
+
+def test_torn_ticket_files_recover_from_their_filename(tmp_path):
+    q = make_queue(tmp_path)
+    (q.root / PENDING / "a1__s1.json").write_text('{"arch": ')  # torn
+    assert len(q.tickets()) == 3  # listings skip the unreadable one
+    t = q.acquire("w0")
+    # ...but acquire recovers it: the filename is the identity, so a torn
+    # content write never loses a cell
+    assert t.cell == "a1/s1" and t.attempt == 1
+    assert q.complete(t)
+    # tmp debris from atomic writes is never parsed as a ticket
+    (q.root / PENDING / "a2__s9.json.tmp999").write_text("{}")
+    assert len(q.tickets(PENDING)) == 3
+
+
+# ---------------------------------------------------------------------------
+# property sweep: one state per ticket, conserved total, monotone audit
+# trail — under arbitrary operation sequences from any number of owners
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["acquire", "complete",
+                                               "steal", "release",
+                                               "reclaim"]),
+                              st.integers(0, 2)),
+                    min_size=1, max_size=40))
+def test_random_op_sequences_hold_invariants(tmp_path_factory, ops):
+    """Any interleaving of queue operations keeps every cell in exactly one
+    state, never loses or duplicates a ticket, and only ever grows the
+    attempt/steal counters."""
+    tmp = tmp_path_factory.mktemp("qprop")
+    q = CellQueue(tmp / "q", lease_s=1000.0)
+    q.seed(CELLS)
+    owners = ["w0", "w1", "w2"]
+    held = {o: [] for o in owners}
+    clock = [0.0]
+
+    def check():
+        c = q.counts()
+        assert sum(c.values()) == len(CELLS), c
+        names = [t.file_name for t in q.tickets()]
+        assert sorted(names) == sorted(set(names))  # one state per cell
+        for t in q.tickets():
+            assert t.attempt >= 0 and t.steals >= 0
+
+    for op, i in ops:
+        clock[0] += 1.0
+        o = owners[i]
+        if op == "acquire":
+            t = q.acquire(o, now=clock[0])
+            if t is not None:
+                held[o].append(t)
+        elif op == "complete" and held[o]:
+            q.complete(held[o].pop(), now=clock[0])
+        elif op == "steal" and held[o]:
+            q.steal(held[o].pop(0), now=clock[0])
+        elif op == "release":
+            q.release_owner(o, now=clock[0])
+            held[o].clear()
+        elif op == "reclaim":
+            q.reclaim_expired(now=clock[0])
+        check()
+
+    # drain to done from any intermediate state: the queue always converges
+    for o, ts in held.items():
+        for t in ts:
+            q.complete(t, now=clock[0])
+    while (t := q.acquire("finisher", now=clock[0])) is not None:
+        q.complete(t, now=clock[0])
+    assert q.drained()
+    assert q.counts() == {"pending": 0, "leased": 0, "done": len(CELLS)}
+    for t in q.tickets(DONE):
+        assert t.status == "complete" and t.attempt >= 1
+        assert json.loads(t.to_json())["arch"] == t.arch
