@@ -1,6 +1,7 @@
 """Quickstart drift guard: documented CLI commands must actually parse.
 
-Extracts every ``python -m repro.launch.<module> ...`` command from the
+Extracts every ``python -m repro.launch.<module> ...`` and
+``python -m repro.analysis.<module> ...`` command from the
 fenced code blocks of README.md and ROADMAP.md (joining ``\\``-continued
 lines, stripping env-var prefixes) and validates its arguments against the
 module's real ``build_parser()`` — unknown flags, removed choices, renamed
@@ -32,8 +33,10 @@ _ENV_ASSIGN = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*=")
 
 
 def parser_registry():
-    """Lazy map of documented launch modules to their parser factories.
+    """Lazy map of documented CLI modules to their parser factories.
     A documented module missing from here (or from the codebase) is drift."""
+    from repro.analysis import lint as analysis_lint
+    from repro.analysis import race as analysis_race
     from repro.launch import campaign, dse, merge_db, orchestrator
 
     return {
@@ -41,6 +44,8 @@ def parser_registry():
         "repro.launch.dse": dse.build_parser,
         "repro.launch.merge_db": merge_db.build_parser,
         "repro.launch.orchestrator": orchestrator.build_parser,
+        "repro.analysis.lint": analysis_lint.build_parser,
+        "repro.analysis.race": analysis_race.build_parser,
     }
 
 
@@ -51,14 +56,16 @@ def fenced_blocks(text: str):
 
 
 def extract_commands(text: str):
-    """``python -m repro.launch.*`` command token lists from fenced blocks,
-    with backslash continuations joined and env assignments stripped."""
+    """``python -m repro.launch.*`` / ``-m repro.analysis.*`` command token
+    lists from fenced blocks, with backslash continuations joined and env
+    assignments stripped."""
     out = []
     for block in fenced_blocks(text):
         joined = re.sub(r"\\\s*\n\s*", " ", block)
         for line in joined.splitlines():
             line = line.split("#", 1)[0].strip()
-            if "-m repro.launch." not in line:
+            if "-m repro.launch." not in line \
+                    and "-m repro.analysis." not in line:
                 continue
             toks = shlex.split(line)
             while toks and _ENV_ASSIGN.match(toks[0]):

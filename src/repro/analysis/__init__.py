@@ -1,0 +1,31 @@
+"""repro.analysis — the engine's contracts, machine-checked.
+
+The campaign engine's correctness rests on invariants that used to exist
+only as prose and spot tests: atomic-rename ticket lifecycles in
+``CellQueue``, never-creating in-place lease writes, ``write_json_atomic``
+for every supervisor-polled JSON file, seeded-RNG determinism in
+``repro.search``, and jax-free supervisor/bench processes. This package
+turns those contracts into CI-enforced checks, two ways:
+
+* **Invariant linter** (``repro.analysis.lint`` + ``repro.analysis.rules``)
+  — an AST pass with project-specific rules RPR001–RPR006 (see
+  ``rules.RULES`` or ``docs/architecture.md`` for the table), run as
+  ``python -m repro.analysis.lint --baseline analysis_baseline.json``.
+  The baseline is a *ratchet*: pre-existing debt is tolerated, new
+  violations fail, and debt that disappears auto-tightens the baseline.
+
+* **Queue-protocol race explorer** (``repro.analysis.race``) — a bounded
+  model checker for ``CellQueue``: it runs the real ``acquire`` / ``renew``
+  / ``complete`` / ``steal`` / ``reclaim_expired`` / ``release_owner``
+  implementations against an instrumented in-memory filesystem
+  (rename/link/unlink as atomic steps), exhaustively enumerates
+  interleavings up to a bounded schedule depth, and asserts the
+  one-state-per-ticket, ticket-conservation, and exactly-once-complete
+  invariants — printing a minimized counterexample schedule on failure.
+  Run as ``python -m repro.analysis.race``.
+
+Pure stdlib — no jax, no third-party imports — so both tools run in bare
+CI jobs and pre-commit hooks at interactive speed. (No eager re-exports
+here: ``python -m repro.analysis.lint`` must not pre-import the module
+runpy is about to execute.)
+"""

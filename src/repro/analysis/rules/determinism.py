@@ -1,0 +1,157 @@
+"""Determinism rules: RPR002 (no unseeded module-level RNG in the search
+and serving stacks) and RPR003 (no wall-clock reads inside functions the
+codebase declares pure).
+
+The engine's replayability contract is that a campaign is a function of
+``(config, seed)``: two runs with the same seed must produce
+byte-identical leaderboards (tier-1 asserts this). Both rules defend
+that property at the source level.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Set
+
+from repro.analysis.rules import (Finding, Rule, dotted_name,
+                                  enclosing_defs)
+
+#: RPR002 scope — every module whose randomness must flow from the
+#: campaign seed. search/ holds the strategies, serve/ the batcher, and
+#: the core loop/explorer drive proposal sampling.
+_RNG_SCOPE_PREFIXES = ("src/repro/search/", "src/repro/serve/")
+_RNG_SCOPE_FILES = {"src/repro/core/loop.py", "src/repro/core/explorer.py"}
+
+#: random-module functions that are fine: constructing an *instance* RNG
+#: (which the caller seeds) is the sanctioned pattern
+_RANDOM_OK = {"Random", "SystemRandom"}
+
+#: RPR003 registry — functions the codebase declares pure decision
+#: logic: every input (including time) arrives as a parameter, so tests
+#: and the race explorer can replay them deterministically. Keys are
+#: lint-root-relative paths; values are function names (methods listed
+#: by bare name).
+PURE_FUNCTIONS: Dict[str, Set[str]] = {
+    "src/repro/launch/orchestrator.py": {
+        "plan_steals", "aggregate_best", "shard_dirs_for",
+    },
+    "src/repro/launch/campaign.py": {
+        "build_leaderboard", "shard_cells", "resolve_grid",
+    },
+    "src/repro/launch/merge_db.py": {
+        "merge_cost_dbs", "_report_rank",
+    },
+    "src/repro/launch/scheduler.py": {
+        "sanitize_owner", "_expire_lease",
+    },
+}
+
+_WALL_CLOCK_CALLS = {
+    "time.time", "time.monotonic", "time.perf_counter", "time.time_ns",
+    "time.monotonic_ns", "datetime.now", "datetime.utcnow",
+    "datetime.today", "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+
+
+class UnseededRandom(Rule):
+    """RPR002 — module-level RNG (``random.random()``,
+    ``np.random.uniform()``, no-arg ``np.random.default_rng()``) draws
+    from interpreter-global state that campaign seeds don't control.
+    Search strategies must use ``random.Random(seed)`` instances; numpy
+    consumers must use ``np.random.default_rng(seed)``."""
+
+    id = "RPR002"
+    title = "unseeded module-level RNG"
+    contract = ("search/serve/core-loop code must draw randomness from "
+                "seeded instances (random.Random(seed) / "
+                "np.random.default_rng(seed)), never module-level state")
+
+    def applies(self, f) -> bool:
+        return (f.rel.startswith(_RNG_SCOPE_PREFIXES)
+                or f.rel in _RNG_SCOPE_FILES)
+
+    def check(self, f, project) -> Iterator["Finding"]:
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.ImportFrom):
+                if node.module == "random":
+                    bad = [a.name for a in node.names
+                           if a.name not in _RANDOM_OK]
+                    if bad:
+                        yield self.finding(
+                            f, node,
+                            f"from random import {', '.join(bad)} pulls "
+                            "module-level RNG functions; import Random "
+                            "and seed an instance")
+                elif node.module == "numpy.random":
+                    bad = [a.name for a in node.names
+                           if a.name != "default_rng"]
+                    if bad:
+                        yield self.finding(
+                            f, node,
+                            f"from numpy.random import {', '.join(bad)} "
+                            "pulls global-state RNG; use "
+                            "default_rng(seed)")
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name.startswith("random."):
+                attr = name.split(".", 1)[1]
+                if "." not in attr and attr not in _RANDOM_OK:
+                    yield self.finding(
+                        f, node,
+                        f"{name}() uses the module-level RNG; use a "
+                        "random.Random(seed) instance threaded from the "
+                        "campaign seed")
+            elif name.startswith(("np.random.", "numpy.random.")):
+                attr = name.rsplit(".", 1)[1]
+                if attr == "default_rng":
+                    if not node.args and not node.keywords:
+                        yield self.finding(
+                            f, node,
+                            "np.random.default_rng() without a seed is "
+                            "entropy-seeded; pass the campaign seed")
+                else:
+                    yield self.finding(
+                        f, node,
+                        f"{name}() draws from numpy's global RNG; use "
+                        "np.random.default_rng(seed)")
+
+
+class WallClockInPureFn(Rule):
+    """RPR003 — the functions in :data:`PURE_FUNCTIONS` are declared
+    pure: the orchestrator replays ``plan_steals`` decisions in tests,
+    the merge is property-tested for order-invariance, and leaderboard
+    building must be a function of its inputs. A ``time.time()`` (or any
+    wall-clock read) inside them silently re-introduces nondeterminism;
+    the clock must arrive as a ``now=`` parameter instead."""
+
+    id = "RPR003"
+    title = "wall-clock read in declared-pure function"
+    contract = ("functions in the purity registry take time as a "
+                "parameter (now=...); they never read the clock "
+                "themselves")
+
+    def applies(self, f) -> bool:
+        return f.rel in PURE_FUNCTIONS
+
+    def check(self, f, project) -> Iterator["Finding"]:
+        registry = PURE_FUNCTIONS[f.rel]
+        scopes = enclosing_defs(f.tree)
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name not in _WALL_CLOCK_CALLS:
+                continue
+            stack = scopes.get(node, ())
+            hit = next((s for s in stack if s in registry), None)
+            if hit is not None:
+                yield self.finding(
+                    f, node,
+                    f"{name}() inside declared-pure {hit}(); take the "
+                    "timestamp as a now= parameter so callers/tests "
+                    "control the clock")
+
+
+__all__ = ["UnseededRandom", "WallClockInPureFn", "PURE_FUNCTIONS"]

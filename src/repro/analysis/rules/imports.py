@@ -1,0 +1,193 @@
+"""RPR004 — jax must stay out of supervisor and benchmark processes.
+
+The orchestrator, scheduler, executors, merge CLI, and benchmark
+harnesses run on login nodes and in bare CI containers where importing
+jax is either unavailable or costs seconds of startup per shard
+heartbeat. The codebase keeps them jax-free by importing jax lazily
+inside the functions that need it (``run_campaign`` does this).
+
+A naive "no ``import jax`` at top level" check misses the common way
+this regresses: a jax-free module imports a *repro* module that imports
+jax at top level. This rule therefore computes a transitive taint over
+the project's import graph — a module is *tainted* when any of its
+top-level imports reaches jax — and flags any top-level import in the
+jax-free scope that lands on a tainted module, reporting the full chain
+(``orchestrator -> repro.train.checkpoint -> jax``) so the fix site is
+obvious.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.rules import Finding, Rule
+
+#: modules that must import cleanly without jax present
+_JAX_FREE_FILES = {
+    "src/repro/launch/scheduler.py",
+    "src/repro/launch/orchestrator.py",
+    "src/repro/launch/executors.py",
+    "src/repro/launch/campaign.py",
+    "src/repro/launch/merge_db.py",
+    "src/repro/launch/ioutil.py",
+}
+_JAX_FREE_PREFIXES = ("benchmarks/", "src/repro/analysis/")
+
+_JAX_ROOTS = ("jax", "jaxlib", "flax", "optax")
+
+
+def _rel_to_module(rel: str) -> Optional[str]:
+    """``src/repro/launch/dse.py`` -> ``repro.launch.dse`` (None for
+    files outside the ``src/`` package tree)."""
+    if not rel.startswith("src/") or not rel.endswith(".py"):
+        return None
+    mod = rel[len("src/"):-len(".py")]
+    if mod.endswith("/__init__"):
+        mod = mod[: -len("/__init__")]
+    return mod.replace("/", ".")
+
+
+def _is_jax(mod: str) -> bool:
+    root = mod.split(".", 1)[0]
+    return root in _JAX_ROOTS
+
+
+def _top_level_imports(tree: ast.AST, self_mod: Optional[str],
+                       ) -> List[Tuple[str, int]]:
+    """(module, lineno) for every top-level import, with relative
+    imports resolved against the importing module's package."""
+    out: List[Tuple[str, int]] = []
+    for node in ast.iter_child_nodes(tree):
+        # guard one level of nesting: `if TYPE_CHECKING:` imports are
+        # not executed at runtime and must not taint
+        if isinstance(node, ast.If):
+            continue
+        if isinstance(node, ast.Import):
+            out.extend((a.name, node.lineno) for a in node.names)
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if node.level:
+                if self_mod is None:
+                    continue
+                parts = self_mod.split(".")
+                # level=1 from a module means its own package
+                base = parts[: len(parts) - node.level]
+                mod = ".".join(base + ([mod] if mod else []))
+            if mod:
+                out.append((mod, node.lineno))
+                # `from pkg import sub` may bind a submodule: emit the
+                # dotted candidate too (taint lookup walks prefixes, so
+                # a name that is really a function resolves to pkg)
+                out.extend((f"{mod}.{a.name}", node.lineno)
+                           for a in node.names if a.name != "*")
+    return out
+
+
+class JaxImportInJaxFreeScope(Rule):
+    """RPR004 — no top-level jax (direct or transitive through repro
+    modules) in supervisor/benchmark code; see module docstring."""
+
+    id = "RPR004"
+    title = "top-level jax import in jax-free scope"
+    contract = ("supervisor + benchmark modules import jax lazily inside "
+                "functions; top-level imports must not reach jax, even "
+                "transitively through other repro modules")
+
+    def applies(self, f) -> bool:
+        return (f.rel in _JAX_FREE_FILES
+                or f.rel.startswith(_JAX_FREE_PREFIXES))
+
+    def _taint(self, project) -> Dict[str, List[str]]:
+        """Map tainted module name -> witness chain ending in the jax
+        root, e.g. ``['repro.train.checkpoint', 'jax']``. Fixpoint over
+        the project's top-level import graph."""
+        cache = getattr(project, "_rpr004_taint", None)
+        if cache is not None:
+            return cache
+        imports: Dict[str, List[str]] = {}
+        for sf in project.files:
+            mod = _rel_to_module(sf.rel)
+            if mod is None:
+                continue
+            imports[mod] = [m for m, _ in
+                            _top_level_imports(sf.tree, mod)]
+        taint: Dict[str, List[str]] = {}
+        changed = True
+        while changed:
+            changed = False
+            for mod, deps in imports.items():
+                if mod in taint:
+                    continue
+                for dep in deps:
+                    if _is_jax(dep):
+                        taint[mod] = [dep.split(".", 1)[0]]
+                        changed = True
+                        break
+                    # an import of repro.a.b executes repro.a.b AND the
+                    # repro.a / repro packages; any tainted prefix taints
+                    chain = self._tainted_prefix(dep, taint, imports)
+                    if chain is not None:
+                        taint[mod] = chain
+                        changed = True
+                        break
+        project._rpr004_taint = taint
+        return taint
+
+    @staticmethod
+    def _tainted_prefix(dep: str, taint: Dict[str, List[str]],
+                        imports: Dict[str, List[str]],
+                        ) -> Optional[List[str]]:
+        parts = dep.split(".")
+        for i in range(len(parts), 0, -1):
+            prefix = ".".join(parts[:i])
+            if prefix in taint:
+                return [prefix] + taint[prefix]
+            if prefix in imports:
+                # known-clean so far this fixpoint round; keep walking
+                continue
+        return None
+
+    def check(self, f, project) -> Iterator[Finding]:
+        taint = self._taint(project)
+        self_mod = _rel_to_module(f.rel)
+        known: Set[str] = {m for sf in project.files
+                           for m in [_rel_to_module(sf.rel)] if m}
+        flagged_lines: Set[int] = set()
+        for node in ast.iter_child_nodes(f.tree):
+            if isinstance(node, ast.If):
+                continue
+            if not isinstance(node, (ast.Import, ast.ImportFrom)):
+                continue
+            for mod, line in _top_level_imports_of(node, self_mod):
+                if line in flagged_lines:
+                    continue
+                if _is_jax(mod):
+                    flagged_lines.add(line)
+                    yield Finding(
+                        rule=self.id, rel=f.rel, line=line,
+                        message=f"top-level import of {mod} in jax-free "
+                                "scope; import it lazily inside the "
+                                "function that needs it",
+                        snippet=f.lines[line - 1].strip())
+                    continue
+                chain = self._tainted_prefix(mod, taint, {m: []
+                                                          for m in known})
+                if chain is not None:
+                    flagged_lines.add(line)
+                    full = " -> ".join(dict.fromkeys([mod] + chain))
+                    yield Finding(
+                        rule=self.id, rel=f.rel, line=line,
+                        message=f"top-level import chain reaches jax: "
+                                f"{full}; break the chain with a lazy "
+                                "import",
+                        snippet=f.lines[line - 1].strip())
+
+
+def _top_level_imports_of(node: ast.AST, self_mod: Optional[str],
+                          ) -> List[Tuple[str, int]]:
+    """Single-statement version of :func:`_top_level_imports`."""
+    shim = ast.Module(body=[node], type_ignores=[])
+    return _top_level_imports(shim, self_mod)
+
+
+__all__ = ["JaxImportInJaxFreeScope"]

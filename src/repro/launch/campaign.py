@@ -120,7 +120,15 @@ import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.launch.ioutil import write_json_atomic
 from repro.launch.scheduler import CellQueue, sanitize_owner
+
+__all__ = [
+    "build_leaderboard", "build_parser", "cell_report_path",
+    "make_campaign_mesh", "parse_shard", "read_progress", "resolve_grid",
+    "run_campaign", "shard_cells", "validate_gate_args", "write_json_atomic",
+    "write_progress",
+]
 
 PROGRESS_FILE = "progress.json"
 MESH_CHOICES = ("tiny", "small", "pod", "multipod")
@@ -258,17 +266,6 @@ def validate_gate_args(gate_factor: Optional[float],
             return (f"gate-min-factor must be in (1, {gate_factor}], "
                     f"got {gate_min_factor}")
     return None
-
-
-def write_json_atomic(path: Path, payload) -> Path:
-    """Serialize ``payload`` to ``path`` via temp-file + ``os.replace`` so a
-    reader (or a restarted campaign) never sees a torn file, even if this
-    process is SIGKILLed mid-write. Returns ``path``."""
-    path = Path(path)
-    tmp = path.with_suffix(".json.tmp")
-    tmp.write_text(json.dumps(payload, indent=1, default=str))
-    tmp.replace(path)
-    return path
 
 
 def write_progress(out_dir: Path, payload: Dict) -> Path:

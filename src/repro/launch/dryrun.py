@@ -27,6 +27,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCH_NAMES, SHAPES, SHAPE_BY_NAME, get_config
 from repro.core.device import TPU_V5E, roofline_terms
 from repro.core.hlo_analysis import analyze_hlo
+from repro.launch.ioutil import write_json_atomic
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models import model as M
 from repro.sharding.plan import ShardingPlan, baseline_plan
@@ -130,8 +131,10 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, plan=None,
         if built is None:
             rec.update(status="skipped", reason=skip)
             artifact_dir.mkdir(parents=True, exist_ok=True)
-            (artifact_dir / f"{arch}__{shape_name}__{mesh_name}.json").write_text(
-                json.dumps(rec, indent=1))
+            # atomic: the campaign resume path and merge tooling read these
+            # records while pool workers are still writing siblings
+            write_json_atomic(
+                artifact_dir / f"{arch}__{shape_name}__{mesh_name}.json", rec)
             return rec
         fn, args = built
         N_COMPILES += 1
@@ -177,8 +180,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, plan=None,
                    trace=traceback.format_exc()[-2000:])
     rec["wall_s"] = round(time.time() - t0, 2)
     artifact_dir.mkdir(parents=True, exist_ok=True)
-    out = artifact_dir / f"{arch}__{shape_name}__{mesh_name}.json"
-    out.write_text(json.dumps(rec, indent=1))
+    write_json_atomic(artifact_dir / f"{arch}__{shape_name}__{mesh_name}.json",
+                      rec)
     return rec
 
 

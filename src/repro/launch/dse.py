@@ -16,7 +16,6 @@ content-addressed dry-run cache next to the cost DB); for arch x shape x mesh
 grid sweeps use ``repro.launch.campaign``.
 """
 import argparse
-import json
 from pathlib import Path
 
 from repro.configs import ARCH_NAMES, SHAPES
@@ -124,8 +123,12 @@ def main():
             "iterations": report.iterations,
             "improvement": report.improvement(),
         }
+        from repro.launch.ioutil import write_json_atomic
+
         Path(args.report).parent.mkdir(parents=True, exist_ok=True)
-        Path(args.report).write_text(json.dumps(out, indent=1, default=str))
+        # atomic: report consumers (dashboards, EXPERIMENTS harvesting) may
+        # poll this path while a long loop is finishing
+        write_json_atomic(Path(args.report), out)
         print(f"report -> {args.report}")
 
 

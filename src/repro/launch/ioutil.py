@@ -1,0 +1,33 @@
+"""Atomic file I/O for supervisor-polled campaign artifacts.
+
+Every JSON file a supervisor, merge, or resumed campaign may read while a
+writer is mid-flight (heartbeats, leaderboards, per-cell reports, dry-run
+artifacts, checkpoint manifests) must be written through
+:func:`write_json_atomic`: serialize to a sibling temp file, then commit
+with a single ``os.replace`` so no reader — and no restart after SIGKILL —
+ever observes a torn file. The invariant linter (``repro.analysis``,
+rule RPR001) enforces this contract mechanically: a non-atomic JSON write
+landing anywhere in ``repro.launch`` fails CI.
+
+This module exists *below* ``repro.launch.campaign`` so that pure file
+consumers (``merge_db``, ``train.checkpoint``, the orchestrator) can share
+the helper without importing the campaign engine. Pure stdlib — no jax
+import, safe in supervisor and bench processes.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def write_json_atomic(path: Path | str, payload) -> Path:
+    """Serialize ``payload`` to ``path`` via temp-file + ``os.replace`` so a
+    reader (or a restarted campaign) never sees a torn file, even if this
+    process is SIGKILLed mid-write. Serialization is byte-stable for a
+    given payload (``indent=1``, ``default=str``) — sharded-vs-merged
+    leaderboard comparisons rely on it. Returns ``path``."""
+    path = Path(path)
+    tmp = path.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(payload, indent=1, default=str))
+    tmp.replace(path)
+    return path

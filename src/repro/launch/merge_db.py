@@ -34,7 +34,8 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_db import CostDB, DataPoint
-from repro.launch.campaign import build_leaderboard, write_json_atomic
+from repro.launch.campaign import build_leaderboard
+from repro.launch.ioutil import write_json_atomic
 
 
 def merge_cost_dbs(shard_dbs: Sequence[Path], out_db: Path,

@@ -77,9 +77,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.launch.campaign import (MESH_CHOICES, STRATEGY_CHOICES,
                                    resolve_grid, shard_cells,
-                                   validate_gate_args, write_json_atomic)
+                                   validate_gate_args)
 from repro.launch.executors import (EXECUTOR_CHOICES, ShardExecutor,
                                     ShardProc, make_executor)
+from repro.launch.ioutil import write_json_atomic
 from repro.launch.scheduler import CellQueue
 
 CRASH_TOKEN_FILE = ".crash_token"
@@ -194,7 +195,7 @@ def _status_line(shard_states: Sequence[ShardProc]) -> str:
 
 def plan_steals(q: CellQueue, shard_states: Sequence[ShardProc], *,
                 steal_factor: float, steal_min_s: float, max_steals: int,
-                now: Optional[float] = None) -> List:
+                now: float) -> List:
     """The work-stealing rule: which leased cells should be expired back to
     pending *right now*. A cell is steal-eligible when
 
@@ -208,9 +209,10 @@ def plan_steals(q: CellQueue, shard_states: Sequence[ShardProc], *,
       "waiting"``) — stealing without a taker just burns the owner's work.
 
     At most one steal per idle shard per pass. Returns the tickets to
-    steal (the caller performs the steal, so this stays a pure decision
-    function — unit-testable without a fleet)."""
-    now = time.time() if now is None else now
+    steal (the caller performs the steal — and supplies ``now``, which is
+    *required*: a pure decision function never consults the wall clock, so
+    a recorded campaign replays byte-stably and the invariant linter's
+    RPR003 rule holds; unit-testable without a fleet)."""
     durations = [d for t in q.tickets("done")
                  if t.status == "complete" and (d := t.duration())]
     if not durations:
@@ -415,7 +417,7 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                         f"(attempt {t.attempt})")
                 for t in plan_steals(q, states, steal_factor=steal_factor,
                                      steal_min_s=steal_min_s,
-                                     max_steals=max_steals):
+                                     max_steals=max_steals, now=time.time()):
                     if q.steal(t) is not None:
                         steals += 1
                         log(f"queue: stole {t.cell} from {t.owner} "

@@ -53,6 +53,13 @@ their evaluator at it, so when a stolen cell is re-run by another shard
 every compile the first owner already paid for replays as a cache hit —
 completed work is never redone, only re-read.
 
+Every file-system touch goes through an injectable :class:`QueueFS` seam
+(:class:`LocalFS` by default — plain stdlib calls). The seam exists for the
+``repro.analysis.race`` model checker, which substitutes an instrumented
+in-memory filesystem and exhaustively explores interleavings of the queue
+protocol's atomic steps; production behavior is byte-identical to the
+direct stdlib calls the seam replaced.
+
 Pure stdlib file manipulation — no jax import, safe anywhere.
 """
 from __future__ import annotations
@@ -84,6 +91,90 @@ def sanitize_owner(owner: str) -> str:
     if not clean:
         raise ValueError(f"owner {owner!r} has no filename-safe characters")
     return clean
+
+
+class LocalFS:
+    """The queue's filesystem primitives, one thin method per atomic step.
+
+    :class:`CellQueue` performs **every** disk touch through one of these
+    methods so that the race explorer (``repro.analysis.race``) can swap in
+    an instrumented in-memory implementation and schedule the protocol's
+    atomic steps one at a time. Each method is a single stdlib call (plus
+    the error contract noted in its docstring) — there is deliberately no
+    logic here, because anything above the primitives would run *between*
+    atomic steps and escape the model checker.
+    """
+
+    def mkdirs(self, path: Path) -> None:
+        """``mkdir -p``: create ``path`` and parents, exist_ok."""
+        Path(path).mkdir(parents=True, exist_ok=True)
+
+    def mkdir_exclusive(self, path: Path) -> None:
+        """Atomic lock-style create; raises ``FileExistsError`` when held."""
+        os.mkdir(path)
+
+    def rmdir(self, path: Path) -> None:
+        """Remove an empty directory; raises ``OSError`` when gone/nonempty."""
+        os.rmdir(path)
+
+    def glob(self, dir_path: Path, pattern: str) -> List[Path]:
+        """Sorted shell-glob match of ``pattern`` within ``dir_path``
+        (non-recursive); an unreadable/missing directory yields ``[]``."""
+        return sorted(Path(dir_path).glob(pattern))
+
+    def exists(self, path: Path) -> bool:
+        """Whether ``path`` currently exists."""
+        return Path(path).exists()
+
+    def rename(self, src: Path, dst: Path) -> None:
+        """The protocol's atomic state transition; raises
+        ``FileNotFoundError`` when ``src`` is gone (the caller lost the
+        race) and silently replaces an existing ``dst``."""
+        os.rename(src, dst)
+
+    def link(self, src: Path, dst: Path) -> None:
+        """Exclusive hard-link create; raises ``FileExistsError`` when
+        ``dst`` exists (the seeding race loser's signal)."""
+        os.link(src, dst)
+
+    def unlink(self, path: Path, missing_ok: bool = False) -> None:
+        """Remove a file; ``missing_ok`` swallows only ENOENT."""
+        Path(path).unlink(missing_ok=missing_ok)
+
+    def read_text(self, path: Path) -> str:
+        """Read a file's content; raises ``OSError`` when missing."""
+        return Path(path).read_text()
+
+    def write_text(self, path: Path, text: str) -> None:
+        """Create-or-truncate write — legal ONLY for private ``.tmp`` paths
+        that a later :meth:`link`/:meth:`replace` publishes (the invariant
+        linter's RPR005 rule enforces exactly that)."""
+        Path(path).write_text(text)
+
+    def replace(self, src: Path, dst: Path) -> None:
+        """Atomic clobbering rename (``os.replace``): publish a tmp file."""
+        os.replace(src, dst)
+
+    def rewrite_nocreate(self, path: Path, text: str) -> bool:
+        """In-place content rewrite of a file that must ALREADY exist:
+        ``O_WRONLY`` **without** ``O_CREAT``, so a writer that lost a
+        state-rename race cannot resurrect the file. Returns ``False``
+        (touching nothing) when ``path`` does not exist. Not atomic — the
+        queue's readers tolerate torn content by falling back to mtime."""
+        try:
+            fd = os.open(path, os.O_WRONLY)  # no O_CREAT, by design
+        except FileNotFoundError:
+            return False
+        try:
+            os.ftruncate(fd, 0)
+            os.write(fd, text.encode())
+        finally:
+            os.close(fd)
+        return True
+
+    def mtime(self, path: Path) -> float:
+        """``st_mtime`` of ``path``; raises ``OSError`` when gone."""
+        return Path(path).stat().st_mtime
 
 
 @dataclass
@@ -138,16 +229,20 @@ class CellQueue:
     process is cheap — all state lives on disk; concurrent instances over
     the same root coordinate purely through atomic renames."""
 
-    def __init__(self, root: Path | str, *, lease_s: float = 300.0):
+    def __init__(self, root: Path | str, *, lease_s: float = 300.0,
+                 fs: Optional[LocalFS] = None):
         """Open (creating if needed) the queue at ``root``. ``lease_s`` is
         the lease length this instance grants/renews — it never rewrites
-        other owners' deadlines."""
+        other owners' deadlines. ``fs`` substitutes the filesystem seam
+        (default: the real local filesystem) — the race explorer injects an
+        instrumented in-memory one."""
         self.root = Path(root)
         if lease_s <= 0:
             raise ValueError(f"lease_s must be > 0, got {lease_s}")
         self.lease_s = float(lease_s)
+        self._fs = fs if fs is not None else LocalFS()
         for state in STATES:
-            (self.root / state).mkdir(parents=True, exist_ok=True)
+            self._fs.mkdirs(self.root / state)
 
     # -- layout ------------------------------------------------------------
     @property
@@ -174,25 +269,22 @@ class CellQueue:
             return None
         return file_name, owner
 
-    @staticmethod
-    def _read(path: Path) -> Optional[Ticket]:
+    def _read(self, path: Path) -> Optional[Ticket]:
         """Best-effort ticket read; ``None`` for a missing/torn file."""
         try:
-            return Ticket.from_json(path.read_text())
+            return Ticket.from_json(self._fs.read_text(path))
         except (OSError, json.JSONDecodeError, TypeError):
             return None
 
-    @staticmethod
-    def _write(path: Path, ticket: Ticket) -> None:
+    def _write(self, path: Path, ticket: Ticket) -> None:
         """Atomic content write for a path this caller may CREATE (seeding
         only): tmp file + ``os.replace``. The tmp name is pid-qualified so
         concurrent writers never collide."""
         tmp = path.with_name(f"{path.name}.tmp{os.getpid()}")
-        tmp.write_text(ticket.to_json())
-        tmp.replace(path)
+        self._fs.write_text(tmp, ticket.to_json())
+        self._fs.replace(tmp, path)
 
-    @staticmethod
-    def _rewrite_existing(path: Path, ticket: Ticket) -> bool:
+    def _rewrite_existing(self, path: Path, ticket: Ticket) -> bool:
         """Rewrite the content of a ticket file that must ALREADY exist;
         returns False (touching nothing) when it does not. Every content
         update that follows a state-claiming rename — and every lease
@@ -202,16 +294,7 @@ class CellQueue:
         The in-place write is not atomic, but a reader catching it torn
         treats the ticket as content-less and falls back to file mtime —
         which this write just refreshed — so the lease semantics hold."""
-        try:
-            fd = os.open(path, os.O_WRONLY)  # no O_CREAT, by design
-        except FileNotFoundError:
-            return False
-        try:
-            os.ftruncate(fd, 0)
-            os.write(fd, ticket.to_json().encode())
-        finally:
-            os.close(fd)
-        return True
+        return self._fs.rewrite_nocreate(path, ticket.to_json())
 
     # -- seeding -----------------------------------------------------------
     def seed(self, cells: Sequence[Tuple[str, str]],
@@ -234,14 +317,15 @@ class CellQueue:
                     continue
                 dst = self.root / PENDING / t.file_name
                 tmp = dst.with_name(f"{dst.name}.tmp{os.getpid()}")
-                tmp.write_text(t.to_json())
+                self._fs.write_text(tmp, t.to_json())
                 try:
-                    os.link(tmp, dst)  # exclusive: EEXIST if anyone beat us
+                    # exclusive: EEXIST if anyone beat us
+                    self._fs.link(tmp, dst)
                     created += 1
                 except FileExistsError:
                     pass
                 finally:
-                    tmp.unlink(missing_ok=True)
+                    self._fs.unlink(tmp, missing_ok=True)
         return created
 
     def _ticket_exists(self, file_name: str) -> bool:
@@ -253,10 +337,10 @@ class CellQueue:
         or its destination; a confirming second scan narrows the backward
         (steal/reclaim, leased->pending) race to a double coincidence."""
         def scan() -> bool:
-            return ((self.root / PENDING / file_name).exists()
-                    or any(self._state_dir(LEASED).glob(
-                        f"{file_name}{LEASE_INFIX}*"))
-                    or (self.root / DONE / file_name).exists())
+            return (self._fs.exists(self.root / PENDING / file_name)
+                    or bool(self._fs.glob(self._state_dir(LEASED),
+                                          f"{file_name}{LEASE_INFIX}*"))
+                    or self._fs.exists(self.root / DONE / file_name))
         return scan() or scan()
 
     @contextmanager
@@ -269,12 +353,12 @@ class CellQueue:
         deadline = time.time() + 2 * timeout
         while True:
             try:
-                os.mkdir(lock)
+                self._fs.mkdir_exclusive(lock)
                 break
             except FileExistsError:
                 try:
-                    if time.time() - lock.stat().st_mtime > timeout:
-                        os.rmdir(lock)  # stale: holder died mid-seed
+                    if time.time() - self._fs.mtime(lock) > timeout:
+                        self._fs.rmdir(lock)  # stale: holder died mid-seed
                         continue
                 except OSError:
                     continue  # lock vanished or not yet stat-able: retry
@@ -285,7 +369,7 @@ class CellQueue:
             yield
         finally:
             try:
-                os.rmdir(lock)
+                self._fs.rmdir(lock)
             except OSError:
                 pass
 
@@ -297,7 +381,7 @@ class CellQueue:
         states = [state] if state else list(STATES)
         out: List[Ticket] = []
         for s in states:
-            for f in sorted(self._state_dir(s).glob("*.json*")):
+            for f in self._fs.glob(self._state_dir(s), "*.json*"):
                 if _TMP_RE.search(f.name):
                     continue
                 if s == LEASED:
@@ -319,7 +403,7 @@ class CellQueue:
         """``{"pending": n, "leased": n, "done": n}`` — one directory scan
         each; cheap enough for per-heartbeat calls on campaign-sized
         queues."""
-        return {s: sum(1 for f in self._state_dir(s).glob("*.json*")
+        return {s: sum(1 for f in self._fs.glob(self._state_dir(s), "*.json*")
                        if not _TMP_RE.search(f.name)) for s in STATES}
 
     def total(self) -> int:
@@ -344,10 +428,10 @@ class CellQueue:
         owner = sanitize_owner(owner)
         now = time.time() if now is None else now
         self.reclaim_expired(now)
-        for f in sorted(self._state_dir(PENDING).glob("*.json")):
+        for f in self._fs.glob(self._state_dir(PENDING), "*.json"):
             target = self._lease_path(f.name, owner)
             try:
-                os.rename(f, target)
+                self._fs.rename(f, target)
             except FileNotFoundError:
                 continue  # another owner won this ticket; try the next
             t = self._read(target) or Ticket(*self._cell_of(f.name))
@@ -382,7 +466,7 @@ class CellQueue:
         src = self._lease_path(ticket.file_name, ticket.owner or "")
         dst = self.root / DONE / ticket.file_name
         try:
-            os.rename(src, dst)
+            self._fs.rename(src, dst)
         except FileNotFoundError:
             return False
         ticket.status, ticket.done_at = status, now
@@ -405,7 +489,7 @@ class CellQueue:
         t = self._read(lease_file)
         dst = self.root / PENDING / file_name
         try:
-            os.rename(lease_file, dst)
+            self._fs.rename(lease_file, dst)
         except FileNotFoundError:
             return None
         if t is None:
@@ -427,14 +511,14 @@ class CellQueue:
         ``lease_s``). Returns the reclaimed tickets."""
         now = time.time() if now is None else now
         out = []
-        for f in sorted(self._state_dir(LEASED).glob("*.json*")):
+        for f in self._fs.glob(self._state_dir(LEASED), "*.json*"):
             if ".tmp" in f.name:
                 continue
             t = self._read(f)
             deadline = t.deadline if t is not None else None
             if deadline is None:
                 try:
-                    deadline = f.stat().st_mtime + self.lease_s
+                    deadline = self._fs.mtime(f) + self.lease_s
                 except OSError:
                     continue
             if now > deadline:
@@ -452,8 +536,8 @@ class CellQueue:
         owner = sanitize_owner(owner)
         now = time.time() if now is None else now
         out = []
-        for f in sorted(self._state_dir(LEASED).glob(
-                f"*{LEASE_INFIX}{owner}")):
+        for f in self._fs.glob(self._state_dir(LEASED),
+                               f"*{LEASE_INFIX}{owner}"):
             r = self._expire_lease(f, steal=False, now=now)
             if r is not None:
                 out.append(r)

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.ioutil import write_json_atomic
+
 
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -53,7 +55,9 @@ def save_checkpoint(ckpt_dir: str | Path, step: int, state, *,
             manifest["leaves"].append({
                 "path": p, "file": fname, "shape": list(arr.shape),
                 "dtype": str(arr.dtype)})
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # atomic even inside the staging dir: an elastic-restart reader that
+        # races the final os.replace must never parse a torn manifest
+        write_json_atomic(tmp / "manifest.json", manifest)
         (tmp / "COMMIT").write_text(str(step))
         if final.exists():
             shutil.rmtree(final)

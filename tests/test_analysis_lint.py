@@ -1,0 +1,347 @@
+"""repro.analysis.lint: rule fixtures (true positives AND the tricky
+false positives each rule must tolerate), the ratcheting baseline, and
+the acceptance check that the shipped tree is clean."""
+import json
+import textwrap
+
+from repro.analysis.baseline import load_baseline
+from repro.analysis.lint import build_parser, lint_paths, main
+
+REPO_ROOT = __import__("pathlib").Path(__file__).resolve().parents[1]
+
+
+def mini_repo(tmp_path, files):
+    """Materialize a fixture tree: {relpath: source} -> root dir."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return tmp_path
+
+
+def rules_hit(tmp_path, files):
+    return sorted({f.rule for f in lint_paths(mini_repo(tmp_path, files))})
+
+
+# ---------------------------------------------------------------------------
+# RPR001: non-atomic JSON writes
+# ---------------------------------------------------------------------------
+
+def test_rpr001_flags_inplace_json_writes(tmp_path):
+    findings = lint_paths(mini_repo(tmp_path, {
+        "src/repro/launch/report.py": """
+            import json
+            from pathlib import Path
+
+            def save(path, payload):
+                Path(path).write_text(json.dumps(payload))
+
+            def save2(payload):
+                with open("artifacts/report.json", "w") as f:
+                    json.dump(payload, f)
+        """}))
+    assert [f.rule for f in findings] == ["RPR001", "RPR001", "RPR001"]
+    assert findings[0].line == 6  # write_text(json.dumps(...))
+
+
+def test_rpr001_tolerates_tmp_rename_idiom_and_non_json(tmp_path):
+    """The write_json_atomic implementation itself (tmp write + replace)
+    and non-JSON writes must not fire."""
+    assert rules_hit(tmp_path, {
+        "src/repro/launch/ioutil.py": """
+            import json
+            import os
+            from pathlib import Path
+
+            def write_json_atomic(path, payload):
+                path = Path(path)
+                tmp = path.with_suffix(".json.tmp")
+                tmp.write_text(json.dumps(payload, indent=1, default=str))
+                tmp.replace(path)
+                return path
+
+            def write_marker(path):
+                Path(path).write_text("armed")  # not JSON: fine in place
+        """}) == []
+
+
+def test_rpr001_scope_excludes_core(tmp_path):
+    """The same in-place write outside launch/ (and not the checkpoint
+    manifest) is out of scope for RPR001."""
+    assert rules_hit(tmp_path, {
+        "src/repro/core/report.py": """
+            import json
+            from pathlib import Path
+
+            def save(path, payload):
+                Path(path).write_text(json.dumps(payload))
+        """}) == []
+
+
+# ---------------------------------------------------------------------------
+# RPR002: unseeded module-level RNG
+# ---------------------------------------------------------------------------
+
+def test_rpr002_flags_module_level_rng(tmp_path):
+    findings = lint_paths(mini_repo(tmp_path, {
+        "src/repro/search/strategy.py": """
+            import random
+            import numpy as np
+            from random import choice
+
+            def propose():
+                x = random.random()
+                y = np.random.uniform()
+                g = np.random.default_rng()
+                return x + y
+        """}))
+    assert [f.rule for f in findings] == ["RPR002"] * 4
+
+
+def test_rpr002_tolerates_seeded_instances(tmp_path):
+    assert rules_hit(tmp_path, {
+        "src/repro/search/strategy.py": """
+            import random
+            import numpy as np
+            from random import Random
+
+            def propose(seed):
+                rng = random.Random(seed)
+                g = np.random.default_rng(seed)
+                return rng.random() + g.uniform()
+        """,
+        # module-level RNG OUTSIDE the determinism scope is allowed
+        "src/repro/launch/jitter.py": """
+            import random
+
+            def backoff():
+                return random.random()
+        """}) == []
+
+
+# ---------------------------------------------------------------------------
+# RPR003: wall-clock reads in declared-pure functions
+# ---------------------------------------------------------------------------
+
+def test_rpr003_flags_clock_in_registered_function_only(tmp_path):
+    findings = lint_paths(mini_repo(tmp_path, {
+        "src/repro/launch/orchestrator.py": """
+            import time
+
+            def plan_steals(counts, now):
+                deadline = time.time() + 5  # BAD: registry says pure
+                return deadline
+
+            def heartbeat_loop():
+                return time.time()  # fine: not in the purity registry
+        """}))
+    assert [f.rule for f in findings] == ["RPR003"]
+    assert "plan_steals" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# RPR004: jax leaking into jax-free scope (direct + transitive)
+# ---------------------------------------------------------------------------
+
+def test_rpr004_flags_direct_and_transitive_jax(tmp_path):
+    findings = lint_paths(mini_repo(tmp_path, {
+        "benchmarks/bench.py": """
+            import jax
+
+            def run():
+                return jax.devices()
+        """,
+        "src/repro/train/ckpt.py": """
+            import jax
+        """,
+        "src/repro/launch/orchestrator.py": """
+            from repro.train import ckpt
+        """}))
+    assert [f.rule for f in findings] == ["RPR004", "RPR004"]
+    transitive = [f for f in findings
+                  if f.rel == "src/repro/launch/orchestrator.py"]
+    assert len(transitive) == 1
+    assert "repro.train.ckpt -> jax" in transitive[0].message
+
+
+def test_rpr004_tolerates_lazy_and_type_checking_imports(tmp_path):
+    assert rules_hit(tmp_path, {
+        "src/repro/train/ckpt.py": """
+            import jax
+        """,
+        "src/repro/launch/executors.py": """
+            from typing import TYPE_CHECKING
+
+            if TYPE_CHECKING:
+                import jax  # annotation-only: never executed
+
+            def launch():
+                from repro.train import ckpt  # lazy: the sanctioned form
+                return ckpt
+        """}) == []
+
+
+# ---------------------------------------------------------------------------
+# RPR005: O_CREAT-capable writes in the queue
+# ---------------------------------------------------------------------------
+
+def test_rpr005_flags_creating_writes_in_scheduler(tmp_path):
+    findings = lint_paths(mini_repo(tmp_path, {
+        "src/repro/launch/scheduler.py": """
+            import os
+
+            class CellQueue:
+                def rewrite(self, path, text):
+                    path.write_text(text)  # BAD: creates if missing
+
+                def claim(self, path):
+                    fd = os.open(path, os.O_WRONLY | os.O_CREAT)  # BAD
+                    os.close(fd)
+        """}))
+    assert [f.rule for f in findings] == ["RPR005", "RPR005"]
+
+
+def test_rpr005_tolerates_tmp_paths_and_primitive_layer(tmp_path):
+    assert rules_hit(tmp_path, {
+        "src/repro/launch/scheduler.py": """
+            import os
+            from pathlib import Path
+
+            class LocalFS:
+                def write_text(self, path, text):
+                    Path(path).write_text(text)  # the primitive layer
+
+                def rewrite_nocreate(self, path, text):
+                    fd = os.open(path, os.O_WRONLY)  # no O_CREAT: legal
+                    os.close(fd)
+
+            class CellQueue:
+                def _write(self, fs, path, ticket):
+                    tmp = path.with_name(path.name + ".tmp")
+                    fs.write_text(tmp, ticket)  # tmp + replace idiom
+                    fs.replace(tmp, path)
+        """}) == []
+
+
+# ---------------------------------------------------------------------------
+# RPR006: swallowed broad exceptions
+# ---------------------------------------------------------------------------
+
+def test_rpr006_flags_silent_broad_catch_only(tmp_path):
+    findings = lint_paths(mini_repo(tmp_path, {
+        "src/repro/launch/heal.py": """
+            def kill(pid):
+                try:
+                    raise OSError(pid)
+                except Exception:
+                    pass  # BAD: the supervisor never learns
+
+            def kill2(pid):
+                try:
+                    raise OSError(pid)
+                except (ProcessLookupError, OSError):
+                    pass  # narrow, deliberate race tolerance: fine
+
+            def kill3(pid):
+                try:
+                    raise OSError(pid)
+                except Exception as e:
+                    print(f"heal: {e}")  # broad but surfaced: fine
+        """}))
+    assert [f.rule for f in findings] == ["RPR006"]
+    assert findings[0].snippet == "except Exception:"
+
+
+# ---------------------------------------------------------------------------
+# fingerprints + the ratcheting baseline
+# ---------------------------------------------------------------------------
+
+BAD_SEARCH = """
+    import random
+
+    def propose():
+        return random.random()
+"""
+
+
+def test_fingerprint_survives_line_drift(tmp_path):
+    root = mini_repo(tmp_path, {"src/repro/search/s.py": BAD_SEARCH})
+    fp1 = lint_paths(root)[0].fingerprint
+    src = (root / "src/repro/search/s.py").read_text()
+    (root / "src/repro/search/s.py").write_text("# new header\n\n" + src)
+    drifted = lint_paths(root)
+    assert len(drifted) == 1
+    assert drifted[0].fingerprint == fp1  # same debt, new line number
+    assert drifted[0].line != 5 or True
+
+
+def test_baseline_grow_fails_shrink_tightens(tmp_path, capsys):
+    root = mini_repo(tmp_path, {"src/repro/search/s.py": BAD_SEARCH})
+    argv = ["--root", str(root), "--baseline", "bl.json"]
+
+    # a violation with no accepted debt fails
+    assert main(argv) == 1
+    # bootstrap accepts the current debt...
+    assert main(argv + ["--write-baseline"]) == 0
+    assert len(load_baseline(root / "bl.json")) == 1
+    # ...and the gated run is now green
+    assert main(argv) == 0
+
+    # GROW: a second violation is new debt -> fail
+    (root / "src/repro/search/s2.py").write_text(
+        "import random\n\ndef f():\n    return random.choice([1])\n")
+    assert main(argv) == 1
+    (root / "src/repro/search/s2.py").unlink()
+
+    # SHRINK: fixing the original violation auto-tightens the baseline
+    (root / "src/repro/search/s.py").write_text(
+        "import random\n\ndef propose(seed):\n"
+        "    return random.Random(seed).random()\n")
+    capsys.readouterr()
+    assert main(argv) == 0
+    assert "ratchet tightened" in capsys.readouterr().out
+    assert load_baseline(root / "bl.json") == {}
+
+    # the ratchet is one-way: the fixed debt cannot silently return
+    (root / "src/repro/search/s.py").write_text(textwrap.dedent(BAD_SEARCH))
+    assert main(argv) == 1
+
+
+def test_rules_filter_and_unknown_rule(tmp_path):
+    root = mini_repo(tmp_path, {
+        "src/repro/search/s.py": BAD_SEARCH,
+        "src/repro/launch/r.py": """
+            import json
+            from pathlib import Path
+
+            def save(p, d):
+                Path(p).write_text(json.dumps(d))
+        """})
+    assert main(["--root", str(root), "--rules", "RPR002"]) == 1
+    assert {f.rule for f in lint_paths(root)} == {"RPR001", "RPR002"}
+    assert main(["--root", str(root), "--rules", "RPR999"]) == 2
+
+
+def test_unparseable_source_is_exit_2(tmp_path):
+    root = mini_repo(tmp_path, {"src/repro/search/s.py": "def f(:\n"})
+    assert main(["--root", str(root)]) == 2
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the shipped tree is clean and the shipped baseline is empty
+# ---------------------------------------------------------------------------
+
+def test_shipped_tree_is_clean():
+    findings = lint_paths(REPO_ROOT)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_shipped_baseline_is_empty():
+    data = json.loads((REPO_ROOT / "analysis_baseline.json").read_text())
+    assert data["findings"] == []
+
+
+def test_parser_matches_documented_flags():
+    opts = {a for action in build_parser()._actions
+            for a in action.option_strings}
+    assert {"--baseline", "--write-baseline", "--root", "--rules"} <= opts

@@ -1,0 +1,207 @@
+"""repro.analysis.race: MemFS POSIX semantics, deterministic replay,
+exhaustive passes over the real CellQueue scenarios, and the broken
+check-then-act variant producing a minimized counterexample."""
+import pytest
+
+from repro.analysis.race import (NOW, BrokenCellQueue, Built, MemFS,
+                                 SCENARIOS, explore, main, minimize,
+                                 one_state_per_ticket, run_once,
+                                 ticket_locations)
+from repro.launch.scheduler import CellQueue
+
+
+# ---------------------------------------------------------------------------
+# MemFS: the POSIX behaviors the protocol relies on
+# ---------------------------------------------------------------------------
+
+def test_memfs_rename_is_win_or_enoent():
+    fs = MemFS()
+    fs.mkdirs("Q/pending")
+    fs.write_text("Q/pending/x.json", "{}")
+    fs.rename("Q/pending/x.json", "Q/leased/x.json.lease-a")
+    with pytest.raises(FileNotFoundError):
+        fs.rename("Q/pending/x.json", "Q/leased/x.json.lease-b")
+    assert fs.read_text("Q/leased/x.json.lease-a") == "{}"
+
+
+def test_memfs_rename_preserves_mtime_write_refreshes():
+    fs = MemFS(clock=50.0)
+    fs.write_text("Q/a", "1")
+    m1 = fs.mtime("Q/a")
+    fs.rename("Q/a", "Q/b")
+    assert fs.mtime("Q/b") == m1
+    fs.rewrite_nocreate("Q/b", "2")
+    assert fs.mtime("Q/b") > m1
+
+
+def test_memfs_link_is_exclusive_create():
+    fs = MemFS()
+    fs.write_text("Q/t.tmp1", "{}")
+    fs.link("Q/t.tmp1", "Q/t")
+    with pytest.raises(FileExistsError):
+        fs.link("Q/t.tmp1", "Q/t")
+    fs.unlink("Q/t.tmp1")
+    assert fs.read_text("Q/t") == "{}"
+    with pytest.raises(FileNotFoundError):
+        fs.unlink("Q/t.tmp1")
+    fs.unlink("Q/t.tmp1", missing_ok=True)
+
+
+def test_memfs_rmdir_refuses_nonempty():
+    fs = MemFS()
+    fs.mkdir_exclusive("Q")
+    with pytest.raises(FileExistsError):
+        fs.mkdir_exclusive("Q")
+    fs.write_text("Q/x", "1")
+    with pytest.raises(OSError):
+        fs.rmdir("Q")
+    fs.unlink("Q/x")
+    fs.rmdir("Q")
+    fs.mkdir_exclusive("Q")  # lock is reacquirable once released
+
+
+def test_memfs_rewrite_nocreate_cannot_resurrect():
+    fs = MemFS()
+    assert fs.rewrite_nocreate("Q/gone", "text") is False
+    assert "Q/gone" not in fs.files
+
+
+def test_memfs_glob_is_sorted_and_nonrecursive():
+    fs = MemFS()
+    for name in ("Q/leased/b.json.lease-x", "Q/leased/a.json.lease-y",
+                 "Q/leased/deep/c.json", "Q/leased/a.json.tmp1"):
+        fs.write_text(name, "{}")
+    got = [p.name for p in fs.glob("Q/leased", "*.json*")]
+    assert got == ["a.json.lease-y", "a.json.tmp1", "b.json.lease-x"]
+
+
+def test_cellqueue_runs_unchanged_on_memfs():
+    """The real queue, ungated, behaves identically over MemFS — the
+    seam substitution itself changes nothing."""
+    fs = MemFS(clock=NOW)
+    q = CellQueue("Q", lease_s=100.0, fs=fs)
+    assert q.seed([("a", "s"), ("b", "s")]) == 2
+    assert q.seed([("a", "s")]) == 0  # idempotent
+    t = q.acquire("w1", now=NOW)
+    assert t is not None and t.owner == "w1" and t.attempt == 1
+    assert q.counts() == {"pending": 1, "leased": 1, "done": 0}
+    assert q.complete(t, now=NOW) is True
+    assert q.counts() == {"pending": 1, "leased": 0, "done": 1}
+    assert one_state_per_ticket(fs) is None
+
+
+# ---------------------------------------------------------------------------
+# the explorer: determinism, exhaustive passes, violation plumbing
+# ---------------------------------------------------------------------------
+
+def test_replay_is_deterministic():
+    build = SCENARIOS["two_acquirers"]
+    r1 = run_once(build, ["bob", "alice", "bob"])
+    r2 = run_once(build, ["bob", "alice", "bob"])
+    assert r1.trace == r2.trace
+    assert r1.violation is None
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_real_queue_scenarios_pass_exhaustively(name):
+    res = explore(SCENARIOS[name], scenario=name)
+    assert res.ok, res.counterexample.violation
+    assert res.schedules >= 2  # contention actually branched
+    assert res.schedules < 5000  # exhaustive, not budget-capped
+    assert res.max_decisions < 24  # within the default branching horizon
+
+
+def test_conservation_check_catches_a_lost_ticket():
+    """A (synthetic) op that unlinks a pending ticket trips the
+    ticket-conservation end check."""
+    def build():
+        fs = MemFS(clock=NOW)
+        q = CellQueue("Q", lease_s=100.0, fs=fs)
+        q.seed([("a", "s")])
+        ops = [("eater", lambda: fs.unlink("Q/pending/a__s.json"))]
+        return Built(fs=fs, ops=ops, final_check=lambda results: None,
+                     initial_tickets=set(ticket_locations(fs)))
+
+    res = run_once(build, [])
+    assert res.violation is not None
+    assert "conservation" in res.violation
+
+
+def test_escaping_exception_is_a_violation():
+    def build():
+        fs = MemFS(clock=NOW)
+        CellQueue("Q", lease_s=100.0, fs=fs)
+
+        def boom():
+            fs.read_text("Q/pending/never.json")  # FileNotFoundError
+
+        return Built(fs=fs, ops=[("boom", boom)],
+                     final_check=lambda results: None,
+                     initial_tickets=set())
+
+    res = run_once(build, [])
+    assert res.violation is not None
+    assert "FileNotFoundError" in res.violation
+
+
+# ---------------------------------------------------------------------------
+# the broken variant: the explorer must catch it and shrink the schedule
+# ---------------------------------------------------------------------------
+
+def broken_two_acquirers():
+    return SCENARIOS["two_acquirers"](queue_cls=BrokenCellQueue)
+
+
+def test_broken_queue_produces_counterexample():
+    res = explore(broken_two_acquirers, scenario="broken")
+    assert not res.ok
+    assert "one-state-per-ticket" in res.counterexample.violation
+    # the forked ticket is visible in both locations in the message
+    assert "pending/" in res.counterexample.violation
+    assert "leased/" in res.counterexample.violation
+
+
+def test_counterexample_minimization():
+    res = explore(broken_two_acquirers, scenario="broken")
+    mini = minimize(broken_two_acquirers, res.counterexample.choices)
+    assert mini.violation is not None
+    assert len(mini.trace) <= len(res.counterexample.trace)
+    rendered = mini.render_schedule()
+    # the schedule reads step by step and ends at the resurrecting write
+    assert "step  1:" in rendered
+    assert "write Q/leased/" in rendered
+
+
+def test_real_queue_same_schedule_is_clean():
+    """The schedule that breaks BrokenCellQueue is harmless against the
+    real protocol — the bug is in the queue variant, not the harness."""
+    res = explore(broken_two_acquirers, scenario="broken")
+    replay = run_once(SCENARIOS["two_acquirers"],
+                      res.counterexample.choices)
+    assert replay.violation is None
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_all_scenarios_pass(capsys):
+    assert main([]) == 0
+    out = capsys.readouterr().out
+    assert out.count("OK") == len(SCENARIOS)
+    assert "exhaustively" in out
+
+
+def test_cli_broken_self_test(capsys):
+    assert main(["--broken"]) == 0
+    out = capsys.readouterr().out
+    assert "VIOLATION" in out
+    assert "minimal counterexample schedule" in out
+    assert "self-test passed" in out
+
+
+def test_cli_list(capsys):
+    assert main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in SCENARIOS:
+        assert name in out

@@ -266,3 +266,55 @@ def test_campaign_sweep_and_resume(tmp_path):
         print("CAMPAIGN_OK", len(lb))
     """, n_devices=1, timeout=900)
     assert "CAMPAIGN_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# determinism: the campaign is a function of (config, seed) — RPR002's
+# contract, asserted end-to-end at the byte level
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_same_seed_campaigns_are_byte_identical(tmp_path):
+    """Two runs of the identical campaign (same grid, same deterministic
+    mock LLM, same default strategy seeds) must produce byte-identical
+    leaderboards, and per-cell reports identical modulo the wall-clock
+    audit fields (``ts`` timestamps, measured compile/wall seconds) that
+    legitimately differ between runs. This is the regression guard behind
+    the RPR002 lint rule: any module-level RNG sneaking into the
+    search/rank path shows up here as a diff in the *decisions* — which
+    points were proposed, evaluated, and ranked best."""
+    out = run_subprocess(f"""{TINY_PRELUDE}
+        import json
+        from pathlib import Path
+        from repro.launch.campaign import run_campaign
+
+        common = dict(archs=["qwen3-0.6b", "stablelm-3b"],
+                      shapes=["train_4k"], mesh=mesh, mesh_name="tiny1x1",
+                      iterations=1, budget=2, workers=1, verbose=False)
+        a = run_campaign(**common, out_dir=r"{tmp_path}/run_a")
+        b = run_campaign(**common, out_dir=r"{tmp_path}/run_b")
+        assert a["ran"] == 2 and b["ran"] == 2, (a, b)
+
+        lb_a = Path(r"{tmp_path}/run_a/leaderboard.json").read_bytes()
+        lb_b = Path(r"{tmp_path}/run_b/leaderboard.json").read_bytes()
+        assert lb_a == lb_b, (lb_a[:400], lb_b[:400])
+
+        VOLATILE = {{"ts", "compile_s", "wall_s", "walltime_s",
+                     "elapsed_s", "done_at", "leased_at"}}
+        def scrub(obj):
+            if isinstance(obj, dict):
+                return {{k: scrub(v) for k, v in sorted(obj.items())
+                         if k not in VOLATILE}}
+            if isinstance(obj, list):
+                return [scrub(v) for v in obj]
+            return obj
+
+        reports_a = sorted(Path(r"{tmp_path}/run_a/reports").glob("*.json"))
+        reports_b = sorted(Path(r"{tmp_path}/run_b/reports").glob("*.json"))
+        assert [p.name for p in reports_a] == [p.name for p in reports_b]
+        for pa, pb in zip(reports_a, reports_b):
+            ra = scrub(json.loads(pa.read_text()))
+            rb = scrub(json.loads(pb.read_text()))
+            assert ra == rb, (pa.name, ra, rb)
+        print("SAME_SEED_BYTE_IDENTICAL", len(reports_a))
+    """, n_devices=1, timeout=900)
+    assert "SAME_SEED_BYTE_IDENTICAL 2" in out
