@@ -16,6 +16,18 @@ candidates are evaluated twice — with and without the SurrogateGate — and
 the benchmark reports compiles spent per incumbent improvement for each arm
 (the gate's whole point is fewer compiles for the same best design).
 
+``--ladder`` runs the promotion-ladder experiment: after the same warmup,
+the warmup leaderboard heads are *measured* (tier 2, interpret mode), then
+the remaining candidates are evaluated twice — once behind a plain
+:class:`SurrogateGate` (whose annealing has no validation signal on the
+tiny warmup DB, so its threshold stays at ``--gate-factor``) and once
+behind a :class:`PromotionLadder` (whose annealing folds in the
+offset-corrected prediction-vs-measured RMSE those wall clocks earned) —
+and the benchmark reports tier-1 compiles per incumbent improvement for
+each arm (the ladder's whole point is that wall-clock calibration tightens
+tier-0 pruning, i.e. fewer compiles for the same best design).
+``--bench-out`` writes the full auditable payload (BENCH_ladder.json).
+
 ``--transfer`` runs the cross-workload transfer experiment: a donor cell is
 explored first, then a *fresh* cell is searched twice — cold (greedy, empty
 DB) vs transfer-seeded (the donor's winners transplanted via the shared
@@ -37,6 +49,8 @@ seconds; pass --full for the real registry config on the 2x4 mesh.
 
     PYTHONPATH=src python benchmarks/bench_dse_throughput.py --n 6 --workers 2
     PYTHONPATH=src python benchmarks/bench_dse_throughput.py --gate --n 10
+    PYTHONPATH=src python benchmarks/bench_dse_throughput.py --ladder --n 12 \
+        --bench-out BENCH_ladder.json
 
 The XLA_FLAGS lines above MUST stay the first statements: jax locks the
 device count at first init.
@@ -84,14 +98,14 @@ def _candidates(arch: str, shape: str, mesh, n: int, seed: int = 0):
     return points
 
 
-def _mode(label: str, evaluator, arch, shape, points) -> dict:
+def _mode(label: str, evaluator, arch, shape, points) -> tuple:
     t0 = time.time()
     dps = evaluator.evaluate_batch(arch, shape, points)
     wall = time.time() - t0
     ok = sum(d.status == "ok" for d in dps)
     return {"mode": label, "n": len(points), "ok": ok,
             "wall_s": round(wall, 2),
-            "evals_per_min": round(60.0 * len(points) / max(wall, 1e-9), 1)}
+            "evals_per_min": round(60.0 * len(points) / max(wall, 1e-9), 1)}, dps
 
 
 def _bound_of(dps):
@@ -163,6 +177,146 @@ def _gate_mode(args, mesh, mesh_name, points, tmp: Path) -> list:
           f"{g['compiles_per_improvement']} vs "
           f"{u['compiles_per_improvement']} compiles/improvement")
     return rows
+
+
+def _ladder_mode(args, mesh, mesh_name, points, tmp: Path) -> dict:
+    """Promotion ladder vs single-factor gate: same candidates, same
+    incumbent, count tier-1 compiles per incumbent improvement.
+
+    Shared setup: a warmup slice is compiled (tier 1) to train the
+    surrogate — ``split=None``, so no validation rows exist and plain-gate
+    annealing has nothing to listen to — then the warmup leaderboard heads
+    are measured (tier 2, interpret mode on CPU). Both arms then evaluate
+    the remaining candidates behind an annealing gate:
+
+      gate    SurrogateGate   — threshold stays at --gate-factor (the
+              validation RMSE is unmeasurable on this DB)
+      ladder  PromotionLadder — the offset-corrected prediction-vs-measured
+              RMSE from the tier-2 rows anneals the threshold tighter
+
+    Returns the full BENCH_ladder payload (arms + calibration + measured
+    rows), written verbatim by ``--bench-out``."""
+    from repro.core.cost_db import CostDB, featurize
+    from repro.core.cost_model import CostModel
+    from repro.core.design_space import PlanPoint
+    from repro.core.eval_cache import DryRunCache
+    from repro.core.evaluator import Evaluator
+    from repro.core.promotion import plan_promotions
+    from repro.search import PromotionLadder, SurrogateGate
+
+    n_warm = max(4, len(points) // 3)
+    warmup, rest = points[:n_warm], points[n_warm:]
+    if not rest:
+        raise SystemExit(f"--ladder needs --n > {n_warm} (warmup slice)")
+
+    db = CostDB(tmp / "db.jsonl")
+    warm_ev = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / "w"),
+                        cache=DryRunCache(tmp / "cw"),
+                        measured_cache=DryRunCache(tmp / "mw"),
+                        max_workers=args.workers)
+    db.append_many(warm_ev.evaluate_batch(args.arch, args.shape, warmup))
+    incumbent = _bound_of(db.all())
+    cm = CostModel.create(in_dim=featurize({}, {}).shape[0])
+    loss = cm.pretrain(db, split=None)
+    print(f"warmup: {len(warmup)} tier-1 compiles, incumbent={incumbent}, "
+          f"surrogate loss={loss:.3f}", flush=True)
+
+    # tier 2: promote and measure the warmup heads — these wall clocks are
+    # the calibration evidence the ladder arm anneals on
+    heads = db.winners(args.arch, args.shape, k=args.measure_top_k,
+                       mesh=mesh_name)
+    measured = []
+    for head in plan_promotions(heads, set(), top_k=args.measure_top_k):
+        point = PlanPoint(dims={k: v for k, v in head.point.items()
+                                if k != "__key__"})
+        dp = warm_ev.measure(args.arch, args.shape, point,
+                             modeled_bound_s=head.metrics.get("bound_s"))
+        db.append(dp)
+        measured.append({
+            "key": point.key(), "status": dp.status,
+            "measured_us": dp.metrics.get("measured_us"),
+            "modeled_bound_us": (head.metrics.get("bound_s") or 0.0) * 1e6,
+            "backend": dp.metrics.get("backend")})
+        print(f"measured: {measured[-1]}", flush=True)
+
+    min_factor = (args.gate_min_factor if args.gate_min_factor is not None
+                  else 1.2)
+    calibration = None
+    arms = []
+    for label, gate in (
+            # require_calibration=False on both arms: the warmup DB is far
+            # too small to clear the guard; the experiment isolates the
+            # *annealing signal* difference, not the guard
+            ("gate", SurrogateGate(cm, factor=args.gate_factor,
+                                   min_factor=min_factor,
+                                   require_calibration=False)),
+            ("ladder", PromotionLadder(cm, factor=args.gate_factor,
+                                       min_factor=min_factor,
+                                       require_calibration=False))):
+        gate.calibrate(db)
+        print(f"{label}: effective factor {gate.effective_factor:g} "
+              f"(configured {gate.factor:g})", flush=True)
+        ev = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / label),
+                       cache=DryRunCache(tmp / f"c_{label}"),
+                       max_workers=args.workers)
+        t0 = time.time()
+        dps = ev.evaluate_batch(args.arch, args.shape, rest, gate=gate,
+                                incumbent_bound=incumbent)
+        best = _bound_of(dps)
+        improvement = (incumbent / best) if (best and incumbent) else 1.0
+        arms.append({
+            "mode": label, "n": len(rest),
+            "compiles": ev.compile_count, "pruned": ev.pruned_count,
+            "wall_s": round(time.time() - t0, 2),
+            "best_bound_s": best, "incumbent_bound_s": incumbent,
+            "improvement_x": round(improvement, 4),
+            "compiles_per_improvement": round(
+                ev.compile_count / max(improvement, 1e-9), 2),
+            "effective_factor": round(gate.effective_factor, 4),
+        })
+        print(arms[-1], flush=True)
+        if label == "ladder":
+            calibration = {
+                "measured_rmse": _num(gate.last_measured_rmse),
+                "measured_n": gate.last_measured_n,
+                "measured_offset": _num(gate.measured_offset),
+                "val_rmse": _num(gate.last_rmse),
+            }
+    g, l = arms
+    print(f"ladder verdict: {l['compiles']}/{g['compiles']} tier-1 compiles "
+          f"({l['pruned']} vs {g['pruned']} pruned) for improvement "
+          f"x{l['improvement_x']} vs x{g['improvement_x']} -> "
+          f"{l['compiles_per_improvement']} vs "
+          f"{g['compiles_per_improvement']} compiles/improvement "
+          f"(effective factor {l['effective_factor']:g} vs "
+          f"{g['effective_factor']:g})")
+    return {
+        "schema": "ladder-bench-v1",
+        "generated_by": "PYTHONPATH=src python "
+                        "benchmarks/bench_dse_throughput.py --ladder",
+        "config": {"arch": args.arch, "shape": args.shape, "mesh": mesh_name,
+                   "n": len(points), "warmup": len(warmup),
+                   "measure_top_k": args.measure_top_k,
+                   "gate_factor": args.gate_factor, "min_factor": min_factor,
+                   "full": args.full},
+        "warmup": {"tier1_compiles": len(warmup),
+                   "incumbent_bound_s": incumbent,
+                   "surrogate_loss": round(loss, 4)},
+        "measured": measured,
+        "calibration": calibration,
+        "arms": arms,
+        "verdict": {
+            "gate_compiles_per_improvement": g["compiles_per_improvement"],
+            "ladder_compiles_per_improvement": l["compiles_per_improvement"],
+            "ladder_fewer_compiles_per_improvement":
+                l["compiles_per_improvement"] < g["compiles_per_improvement"],
+        },
+    }
+
+
+def _num(x):
+    """NaN -> None so the BENCH JSON stays strictly spec-compliant."""
+    return None if x is None or x != x else round(float(x), 6)
 
 
 def _transfer_mode(args, mesh, mesh_name, tmp: Path) -> list:
@@ -280,6 +434,17 @@ def main():
     ap.add_argument("--gate-min-factor", type=float, default=None,
                     help="anneal the gate factor toward this as calibration "
                          "improves (see SurrogateGate.min_factor)")
+    ap.add_argument("--ladder", action="store_true",
+                    help="promotion ladder (measured-calibrated annealing) "
+                         "vs single-factor gate experiment")
+    ap.add_argument("--measure-top-k", type=int, default=3,
+                    help="warmup heads promoted to the measured tier for "
+                         "--ladder (the ladder arm needs at least "
+                         "PromotionLadder.min_measured_points of them)")
+    ap.add_argument("--bench-out", default=None,
+                    help="write the committed BENCH JSON here "
+                         "(BENCH_ladder.json for --ladder, BENCH_dse.json "
+                         "for the default throughput modes)")
     ap.add_argument("--transfer", action="store_true",
                     help="cold vs transfer-seeded search experiment")
     ap.add_argument("--transfer-target", default="stablelm-3b",
@@ -328,6 +493,16 @@ def main():
                 Path(args.out).write_text(json.dumps(rows, indent=1))
             return
 
+        if args.ladder:
+            bench = _ladder_mode(args, mesh, mesh_name, points, tmp)
+            if args.out:
+                Path(args.out).write_text(json.dumps(bench["arms"], indent=1))
+            if args.bench_out:
+                Path(args.bench_out).write_text(
+                    json.dumps(bench, indent=1) + "\n")
+                print(f"bench -> {args.bench_out}")
+            return
+
         if args.transfer:
             rows = _transfer_mode(args, mesh, mesh_name, tmp)
             if args.out:
@@ -336,16 +511,17 @@ def main():
 
         serial = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / "a"),
                            cache=DryRunCache(tmp / "cache_serial"), max_workers=1)
-        rows.append(_mode("serial", serial, args.arch, args.shape, points))
+        row, serial_dps = _mode("serial", serial, args.arch, args.shape, points)
+        rows.append(row)
         print(rows[-1], flush=True)
 
         shared = DryRunCache(tmp / "cache_pool")
         par = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / "b"),
                         cache=shared, max_workers=args.workers)
-        rows.append(_mode("parallel", par, args.arch, args.shape, points))
+        rows.append(_mode("parallel", par, args.arch, args.shape, points)[0])
         print(rows[-1], flush=True)
 
-        rows.append(_mode("cached", par, args.arch, args.shape, points))
+        rows.append(_mode("cached", par, args.arch, args.shape, points)[0])
         rows[-1]["cache"] = shared.stats()
         print(rows[-1], flush=True)
 
@@ -356,6 +532,28 @@ def main():
               "when per-design compile time dominates that startup cost")
         if args.out:
             Path(args.out).write_text(json.dumps(rows, indent=1))
+        if args.bench_out:
+            # incumbent trajectory: cumulative best bound over the serial
+            # evaluation order — the auditable "how fast did we converge"
+            # curve the BENCH artifact exists to pin down
+            traj, best = [], None
+            for d in serial_dps:
+                b = (d.metrics.get("bound_s") if d.status == "ok" else None)
+                if b and (best is None or b < best):
+                    best = b
+                traj.append(best)
+            bench = {
+                "schema": "dse-bench-v1",
+                "generated_by": "PYTHONPATH=src python "
+                                "benchmarks/bench_dse_throughput.py",
+                "config": {"arch": args.arch, "shape": args.shape,
+                           "mesh": mesh_name, "n": len(points),
+                           "workers": args.workers, "full": args.full},
+                "modes": rows,
+                "incumbent_by_eval_bound_s": traj,
+            }
+            Path(args.bench_out).write_text(json.dumps(bench, indent=1) + "\n")
+            print(f"bench -> {args.bench_out}")
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 

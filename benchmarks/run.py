@@ -31,12 +31,21 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
-def _time(fn, n=3):
+N_TIMING_RUNS = 3
+
+
+def _time(fn, n=N_TIMING_RUNS):
+    """Min-of-``n`` wall time in microseconds: one warm call (amortizes
+    compile/tracing), then ``n`` individually timed calls. Min, not mean —
+    a single GC or recompilation hiccup can inflate a mean forever but can
+    never lower a min (same policy as ``repro.launch.measure``)."""
     fn()  # compile/warm
-    t0 = time.perf_counter()
+    times = []
     for _ in range(n):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / n * 1e6
+        times.append(time.perf_counter() - t0)
+    return min(times) * 1e6
 
 
 # ---------------------------------------------------------------------------
@@ -73,7 +82,8 @@ def bench_table1_vecmul_latency():
     emit("table1_latency_total_us", res.est_latency_us,
          f"L={L} block={block} (HLS total-latency analog)")
     wall = _time(lambda: jax.block_until_ready(ops.vecmul(x, y, block=block)))
-    emit("table1_vecmul_interpret_wall", wall, "CPU interpret-mode wall time")
+    emit("table1_vecmul_interpret_wall", wall,
+         f"CPU interpret-mode wall time, min of n={N_TIMING_RUNS}")
 
 
 def bench_table2_resources():
@@ -104,18 +114,19 @@ def bench_kernels():
     x = jax.random.normal(k, (8, 512, 256))
     w = jnp.ones((256,))
     emit("kernel_rmsnorm_us", _time(lambda: jax.block_until_ready(
-        ops.rmsnorm(x, w))), "interpret mode, [4096,256]")
+        ops.rmsnorm(x, w))), f"interpret mode, [4096,256], n={N_TIMING_RUNS}")
     q = 0.3 * jax.random.normal(k, (1, 256, 8, 64))
     kk = 0.3 * jax.random.normal(k, (1, 256, 4, 64))
     emit("kernel_flash_attention_us", _time(lambda: jax.block_until_ready(
         ops.flash_attention(q, kk, kk, block_q=128, block_k=128))),
-        "interpret, s=256 h=8 gqa")
+        f"interpret, s=256 h=8 gqa, n={N_TIMING_RUNS}")
     xs = 0.5 * jax.random.normal(k, (2, 128, 4, 16))
     dt = jax.nn.softplus(jax.random.normal(k, (2, 128, 4)))
     A = -jnp.exp(jax.random.normal(k, (4,)) * 0.3)
     B = 0.3 * jax.random.normal(k, (2, 128, 32))
     emit("kernel_ssd_scan_us", _time(lambda: jax.block_until_ready(
-        ops.ssd_scan(xs, dt, A, B, B, chunk=32)[0])), "interpret, s=128")
+        ops.ssd_scan(xs, dt, A, B, B, chunk=32)[0])),
+        f"interpret, s=128, n={N_TIMING_RUNS}")
 
 
 def bench_dse_convergence(fast: bool):

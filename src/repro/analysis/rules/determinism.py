@@ -43,6 +43,12 @@ PURE_FUNCTIONS: Dict[str, Set[str]] = {
     "src/repro/launch/scheduler.py": {
         "sanitize_owner", "_expire_lease",
     },
+    # the promotion ladder's tier-2 policy: which heads get measured and
+    # which duplicate measured row is canonical must replay identically
+    # on every shard (exactly-once measurement rides on it)
+    "src/repro/core/promotion.py": {
+        "plan_promotions", "select_measured_row",
+    },
 }
 
 _WALL_CLOCK_CALLS = {

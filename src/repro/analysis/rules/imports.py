@@ -30,6 +30,10 @@ _JAX_FREE_FILES = {
     "src/repro/launch/campaign.py",
     "src/repro/launch/merge_db.py",
     "src/repro/launch/ioutil.py",
+    # tier-2 measurement CLI: jax is imported lazily inside measure_cell,
+    # so the supervisor (and the quickstart drift checker) can import the
+    # module for its parser without paying a jax startup
+    "src/repro/launch/measure.py",
 }
 _JAX_FREE_PREFIXES = ("benchmarks/", "src/repro/analysis/")
 

@@ -33,6 +33,15 @@ class DataPoint:
     # design — the Ensemble's bandit credit ledger is rebuilt from them
     iteration: int = -1
     ts: float = field(default_factory=time.time)
+    # evaluation tier that produced the row: ``dryrun`` = analytical
+    # roofline bound from a dry-run compile (every row before the
+    # promotion ladder existed), ``measured`` = wall-clock execution of
+    # the compiled computation (``metrics["measured_s"]``, see
+    # ``repro.launch.measure``). Measured rows are first-class datapoints
+    # but are *not* surrogate training targets and never rank as a cell's
+    # "best" design — the bound stays the leaderboard's ranking key, with
+    # the measurement reported alongside.
+    fidelity: str = "dryrun"
 
     def negative(self) -> bool:
         return self.status != "ok"
@@ -42,10 +51,12 @@ class DataPoint:
 
     @staticmethod
     def from_json(line: str) -> "DataPoint":
-        d = json.loads(line)
-        return DataPoint(**{k: d.get(k) for k in
-                            ("arch", "shape", "mesh", "point", "status", "metrics",
-                             "reason", "source", "iteration", "ts")})
+        d = {k: json.loads(line).get(k) for k in
+             ("arch", "shape", "mesh", "point", "status", "metrics",
+              "reason", "source", "iteration", "ts", "fidelity")}
+        if d.get("fidelity") is None:  # pre-ladder rows are all dry-run
+            d["fidelity"] = "dryrun"
+        return DataPoint(**d)
 
 
 # featurization used by both RAG retrieval and the learned cost model
@@ -176,8 +187,13 @@ class CostDB:
 
     def best(self, arch: str, shape: str, key: str = "bound_s",
              mesh: Optional[str] = None) -> Optional[DataPoint]:
+        # measured rows carry wall-clock timings, not the full roofline
+        # metric set — ranking stays on the dry-run bound, measurement rides
+        # alongside (see build_leaderboard's measured_us column)
         ok = [d for d in self.query(arch, shape, "ok", mesh)
-              if d.metrics.get(key) is not None and d.metrics.get("fits_hbm", True)]
+              if d.fidelity != "measured"
+              and d.metrics.get(key) is not None
+              and d.metrics.get("fits_hbm", True)]
         return min(ok, key=lambda d: d.metrics[key]) if ok else None
 
     def keys(self, arch: str, shape: str, *,
@@ -215,7 +231,8 @@ class CostDB:
         This is the donor query behind cross-workload transfer seeding
         (:class:`repro.search.transfer.TransferSeeded`)."""
         ok = [d for d in self.query(arch, shape, "ok", mesh)
-              if d.metrics.get("bound_s") and d.metrics.get("fits_hbm", True)]
+              if d.fidelity != "measured"
+              and d.metrics.get("bound_s") and d.metrics.get("fits_hbm", True)]
         ok.sort(key=lambda d: (d.metrics["bound_s"], d.ts or 0.0))
         seen, out = set(), []
         for d in ok:
@@ -227,6 +244,15 @@ class CostDB:
             if len(out) == k:
                 break
         return out
+
+    def measured_rows(self, arch: Optional[str] = None,
+                      shape: Optional[str] = None,
+                      mesh: Optional[str] = None) -> List[DataPoint]:
+        """Every tier-2 (``fidelity == "measured"``) row, optionally
+        restricted to one cell — the promotion planner's dedupe source and
+        the leaderboard's ``measured_us`` lookup."""
+        return [d for d in self.query(arch, shape, mesh=mesh)
+                if d.fidelity == "measured"]
 
     def iteration_batches(self, arch: str, shape: str,
                           mesh: Optional[str] = None,
@@ -270,6 +296,12 @@ class CostDB:
                 continue
             wl = d.metrics.get("workload")
             if not wl or d.status == "pruned":
+                continue
+            # measured rows are wall-clock outcomes of a *different*
+            # quantity than the analytical bound the surrogate models —
+            # they calibrate the model (measured_calibration), never
+            # train it
+            if d.fidelity == "measured":
                 continue
             if split is not None:
                 key = d.point.get("__key__") or json.dumps(

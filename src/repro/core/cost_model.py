@@ -133,6 +133,41 @@ class CostModel:
         rmse = float(np.sqrt(np.mean((pred - y[mask]) ** 2)))
         return rmse, int(mask.sum())
 
+    def measured_calibration(self, db: CostDB, *, arch: Optional[str] = None,
+                             shape: Optional[str] = None,
+                             mesh: Optional[str] = None,
+                             ) -> Tuple[float, int, float]:
+        """Prediction-vs-**measured** error over the tier-2 rows:
+        ``(rmse, n, offset)``.
+
+        The surrogate predicts log10 of the analytical roofline bound;
+        measured wall clocks live on a different absolute scale (host
+        interpret-mode backends are orders of magnitude off the modeled
+        device, and even on-device there is constant launch overhead). What
+        the promotion ladder needs from measurements is *relative*
+        calibration — does the surrogate rank and space designs the way the
+        wall clock does — so we first remove the systematic scale:
+        ``offset`` is the mean of ``log10(measured_s) - predicted`` and the
+        returned RMSE is the standard deviation of the residual around it,
+        in decades. Returns ``(nan, 0, nan)`` with no usable measured rows
+        or an untrained model."""
+        if not self.trained:
+            return float("nan"), 0, float("nan")
+        feats, actual = [], []
+        for d in db.measured_rows(arch, shape, mesh=mesh):
+            ms = d.metrics.get("measured_s")
+            if d.status != "ok" or not ms or ms <= 0:
+                continue
+            feats.append(featurize(d.point, d.metrics["workload"]))
+            actual.append(np.log10(ms))
+        if not feats:
+            return float("nan"), 0, float("nan")
+        pred, _ = self.predict(np.stack(feats))
+        resid = np.asarray(actual) - pred
+        offset = float(np.mean(resid))
+        rmse = float(np.sqrt(np.mean((resid - offset) ** 2)))
+        return rmse, len(feats), offset
+
     def rank_candidates(self, feats: np.ndarray) -> np.ndarray:
         """Indices sorted by predicted bound, infeasible-penalised."""
         b, pf = self.predict(feats)

@@ -76,6 +76,11 @@ class Evaluator:
     max_workers: int = 1  # >1 enables the process pool in evaluate_batch
     compile_count: int = 0  # dry-run compile attempts (cache misses; excludes template-skips)
     pruned_count: int = 0  # candidates the surrogate gate kept out of the pool
+    # tier-2 (measured execution) state — see ``measure``
+    measured_cache: Optional[DryRunCache] = None  # content-addressed, beside dryrun_cache
+    measure_runs: int = 3  # timed calls per measurement (min is reported)
+    measured_count: int = 0  # actual timed executions (cache misses)
+    measured_replayed: int = 0  # measurements served from measured_cache
 
     # ------------------------------------------------------------------
     def evaluate(self, arch: str, shape: str, point: PlanPoint,
@@ -139,8 +144,11 @@ class Evaluator:
                 self.pruned_count += 1
                 base = self._base(arch, shape, pt, srcs[i], iteration)
                 # the threshold in force, annealing included — not the
-                # configured maximum (audit rows must match the decision)
-                factor = getattr(gate, "effective_factor", gate.factor)
+                # configured maximum (audit rows must match the decision).
+                # ``effective_factor`` is part of the gate protocol contract
+                # (see SurrogateGate): ladder subclasses inherit it, so no
+                # duck-typed fallback here.
+                factor = gate.effective_factor
                 results[i] = DataPoint(
                     **base, status="pruned",
                     reason=(f"surrogate gate: predicted {pred:.3g}s > "
@@ -169,6 +177,66 @@ class Evaluator:
             base = self._base(arch, shape, point, srcs[i], iteration)
             results[i] = self._rec_to_datapoint(rec, wl, base)
         return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    def measure(self, arch: str, shape: str, point: PlanPoint, *,
+                runs: Optional[int] = None,
+                modeled_bound_s: Optional[float] = None) -> DataPoint:
+        """Tier-2 promotion: execute the compiled step for ``point`` and time
+        it (``repro.launch.measure.measure_cell``), returning a
+        ``fidelity="measured"`` data point.
+
+        Exactly-once semantics ride on ``measured_cache``: a hit replays the
+        recorded timing (``measured_replayed``) and — because the DataPoint
+        is built *solely* from the cached record, ``ts`` included — the
+        replayed row serializes byte-identically to the original, so stolen
+        or re-leased cells and duplicate shards all converge on one canonical
+        row after merge. Only deterministic outcomes (``ok``/``skipped``)
+        are cached; errors stay retryable. ``modeled_bound_s`` (the row's
+        analytical bound) is recorded alongside the wall clock so
+        modeled-vs-real error is auditable per row."""
+        cfg = get_config(arch)
+        cell = SHAPE_BY_NAME[shape]
+        wl = workload_features(cfg, cell)
+        rec = (self.measured_cache.get(arch, shape, self.mesh_name, point.key())
+               if self.measured_cache is not None else None)
+        if rec is not None:
+            self.measured_replayed += 1
+        else:
+            from repro.launch import measure as measure_mod  # needs jax
+
+            plan = point_to_plan(cfg, cell, point,
+                                 multi_pod="pod" in self.mesh.shape)
+            rec = measure_mod.measure_cell(
+                arch, shape, self.mesh, self.mesh_name, plan,
+                runs=runs if runs is not None else self.measure_runs,
+                cfg=cfg, cell=cell)
+            self.measured_count += 1
+            if (self.measured_cache is not None
+                    and rec.get("status") in ("ok", "skipped")):
+                self.measured_cache.put(arch, shape, self.mesh_name,
+                                        point.key(), rec)
+        base = self._base(arch, shape, point, "ladder", -1)
+        base.update(fidelity="measured", ts=rec["measured_at"])
+        if rec["status"] == "skipped":
+            return DataPoint(**base, status="rejected", reason=rec["reason"],
+                             metrics={"workload": wl})
+        if rec["status"] == "error":
+            return DataPoint(**base, status="error", reason=rec["error"],
+                             metrics={"workload": wl})
+        metrics = {
+            "workload": wl,
+            "measured_s": rec["measured_s"],
+            "measured_us": rec["measured_s"] * 1e6,
+            "n": rec["n"],
+            "warm_s": rec["warm_s"],
+            "backend": rec["backend"],
+        }
+        if modeled_bound_s is not None:
+            # deliberately NOT "bound_s": measured rows must never rank in
+            # bound-keyed queries (best/winners exclude them anyway)
+            metrics["bound_s_modeled"] = modeled_bound_s
+        return DataPoint(**base, status="ok", metrics=metrics)
 
     # ------------------------------------------------------------------
     def _base(self, arch: str, shape: str, point: PlanPoint,

@@ -1,0 +1,58 @@
+"""Pure decision functions of the promotion ladder (tier-2 policy).
+
+These two functions decide *which* designs get the expensive measured tier
+and *which* duplicate measurement is canonical. They live here — not in
+``repro.search.ladder`` — because the jax-free supervisor surfaces
+(``merge_db``'s leaderboard rebuild, the orchestrator) call them too, and
+importing anything under ``repro.search`` drags jax in via the design-space
+module. Both are RPR003-registered pure functions: no clock, no RNG, no
+I/O — same inputs, same promotions, on every shard and every replay
+(``repro.search.ladder`` re-exports them for the search-facing API).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence, Set
+
+from repro.core.cost_db import DataPoint
+
+
+def plan_promotions(heads: Sequence[DataPoint], measured_keys: Set[str], *,
+                    top_k: int, budget_left: Optional[int] = None,
+                    ) -> List[DataPoint]:
+    """Pick which leaderboard heads earn a tier-2 measurement.
+
+    ``heads`` come best-first (``CostDB.winners``); anything already
+    measured (``measured_keys`` holds point ``__key__`` values) is skipped
+    — the measured cache would replay it anyway, but not promoting it at
+    all keeps the BENCH counters honest. At most ``top_k`` promotions, and
+    never more than ``budget_left`` when a campaign-wide budget is in
+    force."""
+    if top_k <= 0:
+        return []
+    chosen: List[DataPoint] = []
+    seen: Set[str] = set()
+    for d in heads:
+        key = d.point.get("__key__")
+        if not key or key in measured_keys or key in seen:
+            continue
+        seen.add(key)
+        chosen.append(d)
+        if len(chosen) >= top_k:
+            break
+    if budget_left is not None:
+        chosen = chosen[:max(int(budget_left), 0)]
+    return chosen
+
+
+def select_measured_row(rows: Iterable[DataPoint]) -> Optional[DataPoint]:
+    """The canonical measured row among duplicates: earliest-wins by
+    ``(ts, serialized form)`` — the same total order ``merge_db`` dedupes
+    with, so a leaderboard built from any shard subset reports the same
+    measurement. ``None`` when ``rows`` is empty."""
+    best: Optional[DataPoint] = None
+    best_key = None
+    for d in rows:
+        k = (d.ts, d.to_json())
+        if best is None or k < best_key:
+            best, best_key = d, k
+    return best

@@ -31,6 +31,15 @@ Search policy and surrogate gating (see ``repro.search``):
         > F x the incumbent are recorded as ``pruned`` data points instead
         of compiled; auto-disabled until the surrogate's held-out
         validation RMSE clears the calibration guard
+    --measure-top-k K
+        promotion ladder tier 2 (``repro.search.ladder``): after a cell
+        finishes, its K best designs are *executed and timed* — measured
+        rows land in the cost DB (``fidelity="measured"``), surface as the
+        leaderboard's ``measured_us`` column, replay from the shared
+        ``measured_cache/`` on resume/steal (exactly-once measurement), and
+        feed prediction-vs-measured RMSE back into the gate's factor
+        annealing; with ``--gate-factor`` set the gate is the
+        :class:`~repro.search.ladder.PromotionLadder`
 
 Scale-out over processes/hosts — shard the grid, then merge (or let
 ``repro.launch.orchestrator`` spawn, supervise, and merge the shards for
@@ -72,8 +81,14 @@ from similar cells), so with them a shard layout is its own experiment.
 Outputs under --out:
     cost_db.jsonl                     shared hardware-datapoint DB
     dryrun_cache/                     content-addressed compile cache
+    measured_cache/                   content-addressed tier-2 timing cache
+                                      (queue mode: lives in the queue dir)
     reports/{arch}__{shape}__{mesh}.json   per-cell loop reports
     leaderboard.json                  cells ranked by best bound_s
+    BENCH_ladder.json                 auditable ladder trajectory: per-tier
+                                      eval counts, calibration RMSE
+                                      (validation + measured), incumbent
+                                      bound per iteration per cell
     progress.json                     live heartbeat (atomically replaced
                                       after every loop iteration, every
                                       completed evaluation batch, and every
@@ -126,8 +141,8 @@ from repro.launch.scheduler import CellQueue, sanitize_owner
 __all__ = [
     "build_leaderboard", "build_parser", "cell_report_path",
     "make_campaign_mesh", "parse_shard", "read_progress", "resolve_grid",
-    "run_campaign", "shard_cells", "validate_gate_args", "write_json_atomic",
-    "write_progress",
+    "run_campaign", "shard_cells", "validate_gate_args",
+    "validate_measure_args", "write_json_atomic", "write_progress",
 ]
 
 PROGRESS_FILE = "progress.json"
@@ -204,7 +219,12 @@ def _cell_report(report) -> Dict:
 def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
     """Rank completed cells by their best achieved bound (fastest first);
     cells with no feasible design sink to the bottom with their failure
-    mode preserved."""
+    mode preserved. Cells with tier-2 rows report ``measured_us`` (and the
+    backend that produced it) alongside the analytical bound, preferring
+    the measurement of the cell's best design, so modeled-vs-real error is
+    visible per row; ranking stays on the bound."""
+    from repro.core.promotion import select_measured_row  # jax-free
+
     rows = []
     for c in cell_rows:
         best = db.best(c["arch"], c["shape"], mesh=c["mesh"])
@@ -220,13 +240,16 @@ def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
             "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
             "status": c["status"],
             "feasible": feasible if best is not None else None,
-            # measured designs only: gate-pruned rows are predictions, and
-            # counting them would overstate how thoroughly a cell was explored
-            "n_points": sum(d.status != "pruned" for d in
+            # dry-run-evaluated designs only: gate-pruned rows are
+            # predictions and tier-2 rows re-time an already-counted design —
+            # either would overstate how thoroughly a cell was explored
+            "n_points": sum(d.status != "pruned" and d.fidelity != "measured"
+                            for d in
                             db.query(c["arch"], c["shape"], mesh=c["mesh"])),
             "improvement": c.get("improvement"),
             "bound_s": None, "mfu_at_bound": None, "dominant": None,
             "per_device_gib": None, "best_point": None,
+            "measured_us": None, "measured_backend": None,
         }
         if best is not None:
             row.update(
@@ -240,6 +263,17 @@ def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
                 best_point={k: v for k, v in sorted(best.point.items())
                             if k != "__key__"},
             )
+        measured = [d for d in db.measured_rows(c["arch"], c["shape"],
+                                                mesh=c["mesh"])
+                    if d.status == "ok"]
+        if best is not None:
+            of_best = [d for d in measured
+                       if d.point.get("__key__") == best.point.get("__key__")]
+            measured = of_best or measured
+        m = select_measured_row(measured)
+        if m is not None:
+            row.update(measured_us=m.metrics.get("measured_us"),
+                       measured_backend=m.metrics.get("backend"))
         rows.append(row)
     rows.sort(key=lambda r: (r["bound_s"] is None, r["feasible"] is not True,
                              r["bound_s"] if r["bound_s"] is not None else 0.0))
@@ -265,6 +299,26 @@ def validate_gate_args(gate_factor: Optional[float],
         if not (1.0 < gate_min_factor <= gate_factor):
             return (f"gate-min-factor must be in (1, {gate_factor}], "
                     f"got {gate_min_factor}")
+    return None
+
+
+def validate_measure_args(measure_top_k: int, measure_runs: int,
+                          measure_budget: Optional[int]) -> Optional[str]:
+    """The measured-tier CLI constraints (returns an error string, or
+    ``None`` when valid) — shared by the campaign, dse, and orchestrator
+    CLIs and by ``run_campaign``'s API validation, mirroring
+    :func:`validate_gate_args`."""
+    if measure_top_k < 0:
+        return f"measure-top-k must be >= 0, got {measure_top_k}"
+    if measure_runs < 1:
+        return f"measure-runs must be >= 1, got {measure_runs}"
+    if measure_budget is not None:
+        if measure_top_k <= 0:
+            return ("measure-budget requires measure-top-k > 0: the budget "
+                    "caps tier-2 promotions, and there are none without a "
+                    "top-k")
+        if measure_budget < 0:
+            return f"measure-budget must be >= 0, got {measure_budget}"
     return None
 
 
@@ -307,6 +361,8 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
                  workers: int = 1, llm_client=None, db=None, resume: bool = True,
                  strategy: str = "ensemble", gate_factor: Optional[float] = None,
                  gate_min_factor: Optional[float] = None,
+                 measure_top_k: int = 0, measure_runs: int = 3,
+                 measure_budget: Optional[int] = None,
                  shard: Optional[Tuple[int, int]] = None,
                  queue: Optional[Path | str] = None,
                  queue_owner: Optional[str] = None,
@@ -334,16 +390,22 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     gate_err = validate_gate_args(gate_factor, gate_min_factor)
     if gate_err:
         raise ValueError(gate_err)
+    measure_err = validate_measure_args(measure_top_k, measure_runs,
+                                        measure_budget)
+    if measure_err:
+        raise ValueError(measure_err)
 
     from repro.core.cost_db import CostDB, featurize
     from repro.core.cost_model import CostModel
+    from repro.core.design_space import PlanPoint
     from repro.core.eval_cache import DryRunCache
     from repro.core.evaluator import Evaluator
     from repro.core.llm_client import MockLLM
     from repro.core.llm_stack import LLMStack
     from repro.core.loop import DSELoop
     from repro.models import model as M
-    from repro.search import SurrogateGate, make_strategy
+    from repro.core.promotion import plan_promotions
+    from repro.search import PromotionLadder, SurrogateGate, make_strategy
 
     out_dir = Path(out_dir)
     (out_dir / "reports").mkdir(parents=True, exist_ok=True)
@@ -352,16 +414,25 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     owner = (sanitize_owner(queue_owner or f"pid{os.getpid()}")
              if q is not None else None)
     # queue mode shares one content-addressed cache across every worker —
-    # that is what makes a stolen cell's "resume" free (compiles replay)
+    # that is what makes a stolen cell's "resume" free (compiles replay);
+    # the measured cache rides the same mechanism so a stolen cell's tier-2
+    # timings replay too (exactly-once measurement per design)
     cache = (DryRunCache(q.cache_dir) if q is not None
              else DryRunCache.beside(db.path))
+    measured_cache = DryRunCache(q.measured_dir if q is not None
+                                 else Path(db.path).parent / "measured_cache")
     evaluator = Evaluator(mesh, mesh_name, cache=cache,
                           max_workers=max(workers, 1),
-                          artifact_dir=str(out_dir / "dryrun"))
+                          artifact_dir=str(out_dir / "dryrun"),
+                          measured_cache=measured_cache,
+                          measure_runs=measure_runs)
     stack = LLMStack(client=llm_client or MockLLM(), db=db)
     cost_model = CostModel.create(in_dim=featurize({}, {}).shape[0])
-    gate = (SurrogateGate(cost_model, factor=gate_factor,
-                          min_factor=gate_min_factor)
+    # with the measured tier on, the gate is the full promotion ladder:
+    # same protocol, plus prediction-vs-measured RMSE in the annealing
+    gate_cls = PromotionLadder if measure_top_k > 0 else SurrogateGate
+    gate = (gate_cls(cost_model, factor=gate_factor,
+                     min_factor=gate_min_factor)
             if gate_factor is not None else None)
 
     def log(msg):
@@ -380,6 +451,7 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     cell_best: List[Dict] = []  # {"cell": "arch/shape", "bound_s": float|None}
     counts = {"ran": 0, "resumed": 0, "unsupported": 0}
     qstats = {"stolen": 0}
+    mstate = {"budget_left": measure_budget}  # campaign-wide tier-2 budget
     current_ticket: List[Optional[object]] = [None]  # the lease being worked
 
     # run-local counter baselines: the DB file (and, via the prior
@@ -420,6 +492,8 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
             "cell_in_progress": cell, "iteration": iteration,
             "evaluations": evals - evals0,
             "compiles": compiles, "pruned": pruned,
+            "measured": evaluator.measured_count,
+            "measured_replayed": evaluator.measured_replayed,
             "evaluations_total": evals,
             "compiles_total": compiles_prior + compiles,
             "pruned_total": pruned_prior + pruned,
@@ -443,6 +517,41 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
             progress("running", cell=cell, iteration=info.get("iteration"),
                      iter_stats=info)
         return beat
+
+    def promote_heads(arch: str, shape: str) -> None:
+        """Tier-2 promotion for one finished cell: measure its (up to)
+        ``measure_top_k`` best designs. Runs for *complete and resumed*
+        cells alike — on resume the DB already holds the measured rows, so
+        ``plan_promotions`` dedupes them to nothing; on a stolen/re-leased
+        cell the shard-local DB lacks the rows but the shared measured
+        cache replays the timings, appending byte-identical rows that the
+        merge dedupes to one."""
+        if measure_top_k <= 0:
+            return
+        heads = db.winners(arch, shape, k=measure_top_k, mesh=mesh_name)
+        measured_keys = {d.point.get("__key__")
+                         for d in db.measured_rows(arch, shape,
+                                                   mesh=mesh_name)}
+        promos = plan_promotions(heads, measured_keys, top_k=measure_top_k,
+                                 budget_left=mstate["budget_left"])
+        for head in promos:
+            progress("measuring", cell=f"{arch}/{shape}")
+            point = PlanPoint(dims={k: v for k, v in head.point.items()
+                                    if k != "__key__"})
+            dp = evaluator.measure(arch, shape, point,
+                                   modeled_bound_s=head.metrics.get("bound_s"))
+            db.append(dp)
+            if mstate["budget_left"] is not None:
+                mstate["budget_left"] -= 1
+            if dp.status == "ok":
+                us = dp.metrics["measured_us"]
+                bound = head.metrics.get("bound_s")
+                vs = (f" (bound {bound * 1e6:.0f}us)" if bound else "")
+                log(f"{arch}/{shape}: measured {point.key()} = "
+                    f"{us:.0f}us{vs} [{dp.metrics.get('backend')}]")
+            else:
+                log(f"{arch}/{shape}: measurement of {point.key()} -> "
+                    f"{dp.status}: {dp.reason}")
 
     def note_cell(arch: str, shape: str) -> None:
         best = db.best(arch, shape, mesh=mesh_name)
@@ -475,6 +584,10 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
                               "status": status,
                               "improvement": prior.get("improvement")})
             log(f"{arch}/{shape}: resumed (report exists)")
+            if status == "resumed":
+                # heads may still be unmeasured (e.g. the prior attempt died
+                # between the report write and its promotions, or top-k grew)
+                promote_heads(arch, shape)
             note_cell(arch, shape)
             return status
 
@@ -511,6 +624,7 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
         log(f"{arch}/{shape}: done in {out['wall_s']}s "
             f"(improvement {report.improvement():.2%}, "
             f"cache {cache.stats()})")
+        promote_heads(arch, shape)
         note_cell(arch, shape)
         return "complete"
 
@@ -550,6 +664,54 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     # reader racing the write) must never see a torn leaderboard
     lb_path = write_json_atomic(out_dir / "leaderboard.json", leaderboard)
 
+    # the auditable ladder trajectory — written unconditionally (an empty
+    # measured tier is itself worth auditing). NaN RMSEs become null: the
+    # file must stay strict-JSON parseable by any reader.
+    def _num(x):
+        return None if x is None or x != x else x
+
+    ladder_cells = []
+    for c in cell_rows:
+        try:
+            rep = json.loads(cell_report_path(out_dir, c["arch"], c["shape"],
+                                              mesh_name).read_text())
+        except (OSError, json.JSONDecodeError):
+            rep = {}
+        ladder_cells.append({
+            "cell": f"{c['arch']}/{c['shape']}",
+            "status": c["status"],
+            "incumbent_by_iteration": [_num(it.get("best_bound"))
+                                       for it in rep.get("iterations") or []],
+        })
+    bench = {
+        "schema": "ladder-v1",
+        "mesh": mesh_name,
+        "strategy": strategy,
+        "measure_top_k": measure_top_k,
+        "measure_budget": measure_budget,
+        "tiers": {
+            "surrogate_pruned": evaluator.pruned_count - pruned0,
+            "dryrun_compiles": evaluator.compile_count - compiles0,
+            "dryrun_cache": cache.stats(),
+            "measured": evaluator.measured_count,
+            "measured_replayed": evaluator.measured_replayed,
+        },
+        "calibration": {
+            "val_rmse": _num(gate.last_rmse) if gate else None,
+            "val_n": gate.last_val_n if gate else None,
+            "measured_rmse": (_num(getattr(gate, "last_measured_rmse", None))
+                              if gate else None),
+            "measured_n": (getattr(gate, "last_measured_n", None)
+                           if gate else None),
+            "measured_offset": (_num(getattr(gate, "measured_offset", None))
+                                if gate else None),
+            "effective_factor": gate.effective_factor if gate else None,
+            "gate_active": gate.active if gate else None,
+        },
+        "cells": ladder_cells,
+    }
+    bench_path = write_json_atomic(out_dir / "BENCH_ladder.json", bench)
+
     evals = db.count()
     summary = {
         "mesh": mesh_name, "cells": len(cell_rows), **counts,
@@ -564,11 +726,15 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
         "evaluations": evals - evals0,
         "compiles": evaluator.compile_count - compiles0,
         "pruned": evaluator.pruned_count - pruned0,
+        "measured": evaluator.measured_count,
+        "measured_replayed": evaluator.measured_replayed,
+        "measure_top_k": measure_top_k,
         "evaluations_total": evals,
         "compiles_total": compiles_prior + evaluator.compile_count - compiles0,
         "pruned_total": pruned_prior + evaluator.pruned_count - pruned0,
         "cache": cache.stats(),
         "leaderboard": str(lb_path),
+        "bench": str(bench_path),
     }
     progress("done")
     log(f"summary: {summary}")
@@ -611,6 +777,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "--gate-factor down toward this as the surrogate's "
                          "validation RMSE improves (must be in "
                          "(1, gate-factor]; requires --gate-factor)")
+    ap.add_argument("--measure-top-k", type=int, default=0, metavar="K",
+                    help="promotion ladder tier 2: after each cell, execute "
+                         "and time its K best designs (0 = off); measured "
+                         "rows land in the cost DB and the leaderboard's "
+                         "measured_us column, and replay from the shared "
+                         "measured cache on resume/steal")
+    ap.add_argument("--measure-runs", type=int, default=3, metavar="N",
+                    help="timed executions per measurement (min reported; "
+                         "one warm call first)")
+    ap.add_argument("--measure-budget", type=int, default=None, metavar="M",
+                    help="campaign-wide cap on tier-2 measurements "
+                         "(default: unlimited; requires --measure-top-k)")
     ap.add_argument("--shard", default=None, metavar="I/N",
                     help="run only cells i, i+n, i+2n, ... of the sorted "
                          "arch x shape grid (merge shards with "
@@ -670,6 +848,10 @@ def main():
     gate_err = validate_gate_args(args.gate_factor, args.gate_min_factor)
     if gate_err:
         ap.error(gate_err)
+    measure_err = validate_measure_args(args.measure_top_k, args.measure_runs,
+                                        args.measure_budget)
+    if measure_err:
+        ap.error(measure_err)
     if args.queue and args.shard:
         ap.error("--queue and --shard are mutually exclusive")
     if args.queue_lease_s <= 0:
@@ -698,6 +880,9 @@ def main():
                  workers=args.workers, llm_client=llm_client,
                  strategy=args.strategy, gate_factor=args.gate_factor,
                  gate_min_factor=args.gate_min_factor,
+                 measure_top_k=args.measure_top_k,
+                 measure_runs=args.measure_runs,
+                 measure_budget=args.measure_budget,
                  shard=shard, queue=args.queue, queue_owner=args.queue_owner,
                  queue_lease_s=args.queue_lease_s,
                  queue_poll_s=args.queue_poll_s, resume=not args.force)

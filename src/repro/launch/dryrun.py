@@ -64,12 +64,15 @@ def model_flops(cfg, cell) -> float:
 # per-cell lowering
 # ---------------------------------------------------------------------------
 def build_cell(arch: str, shape_name: str, mesh, plan=None, *,
-               cfg=None, cell=None):
+               cfg=None, cell=None, donate: bool = True):
     """Returns (jitted fn, kwargs of ShapeDtypeStructs) for one cell.
 
     ``cfg``/``cell`` override the registry lookup — pool workers receive the
     caller's (possibly reduced) config by value instead of re-resolving the
-    name in a fresh process.
+    name in a fresh process. ``donate=False`` disables input-buffer donation
+    (train state / decode cache): a dry-run compile wants the production
+    donation pattern, but the measured tier (``repro.launch.measure``) calls
+    the compiled step repeatedly on the same buffers, which donation forbids.
     """
     cfg = cfg if cfg is not None else get_config(arch)
     cell = cell if cell is not None else SHAPE_BY_NAME[shape_name]
@@ -87,7 +90,8 @@ def build_cell(arch: str, shape_name: str, mesh, plan=None, *,
         bspec = plan.batch_specs(mesh, specs["batch"])
         b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), bspec)
         fn = jax.jit(step, in_shardings=(s_shard, b_shard),
-                     out_shardings=(s_shard, None), donate_argnums=(0,))
+                     out_shardings=(s_shard, None),
+                     donate_argnums=(0,) if donate else ())
         args = (state, specs["batch"])
         return (fn, args), None
 
@@ -103,7 +107,8 @@ def build_cell(arch: str, shape_name: str, mesh, plan=None, *,
     else:
         step = serve_step_mod.make_decode_step(cfg, plan, mesh)
     fn = jax.jit(step, in_shardings=(pshard, b_shard, c_shard),
-                 out_shardings=(None, c_shard), donate_argnums=(2,))
+                 out_shardings=(None, c_shard),
+                 donate_argnums=(2,) if donate else ())
     args = (values, specs["batch"], specs["cache"])
     return (fn, args), None
 

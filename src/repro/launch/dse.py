@@ -52,6 +52,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "--gate-factor down toward this as the surrogate's "
                          "validation RMSE improves (must be in "
                          "(1, gate-factor]; requires --gate-factor)")
+    ap.add_argument("--measure-top-k", type=int, default=0, metavar="K",
+                    help="promotion ladder tier 2: after the loop, execute "
+                         "and time the cell's K best designs (0 = off); "
+                         "measured rows land in the cost DB with "
+                         "fidelity=measured")
+    ap.add_argument("--measure-runs", type=int, default=3, metavar="N",
+                    help="timed executions per measurement (min reported)")
     ap.add_argument("--report", default=None, help="write the loop report JSON here")
     return ap
 
@@ -61,11 +68,16 @@ def main():
     and optionally write the loop-report JSON. Exits 2 on bad arguments."""
     ap = build_parser()
     args = ap.parse_args()
-    from repro.launch.campaign import validate_gate_args  # no jax
+    from repro.launch.campaign import (validate_gate_args,  # no jax
+                                       validate_measure_args)
 
     gate_err = validate_gate_args(args.gate_factor, args.gate_min_factor)
     if gate_err:
         ap.error(gate_err)
+    measure_err = validate_measure_args(args.measure_top_k, args.measure_runs,
+                                        None)
+    if measure_err:
+        ap.error(measure_err)
 
     from repro.core.cost_db import CostDB, featurize
     from repro.core.cost_model import CostModel
@@ -76,7 +88,7 @@ def main():
     from repro.core.loop import DSELoop
     from repro.core.rag import CodeIndex
     from repro.launch.mesh import make_mesh, make_production_mesh
-    from repro.search import SurrogateGate, make_strategy
+    from repro.search import PromotionLadder, SurrogateGate, make_strategy
 
     if args.mesh == "pod":
         mesh, mesh_name = make_production_mesh(), "pod16x16"
@@ -98,10 +110,15 @@ def main():
             return ans.strip().lower() not in ("n", "no")
 
     cache = None if args.no_cache else DryRunCache.beside(db.path)
+    measured_cache = (None if args.no_cache else
+                      DryRunCache(Path(db.path).parent / "measured_cache"))
     evaluator = Evaluator(mesh, mesh_name, cache=cache,
-                          max_workers=max(args.workers, 1))
-    gate = (SurrogateGate(cost_model, factor=args.gate_factor,
-                          min_factor=args.gate_min_factor)
+                          max_workers=max(args.workers, 1),
+                          measured_cache=measured_cache,
+                          measure_runs=args.measure_runs)
+    gate_cls = PromotionLadder if args.measure_top_k > 0 else SurrogateGate
+    gate = (gate_cls(cost_model, factor=args.gate_factor,
+                     min_factor=args.gate_min_factor)
             if args.gate_factor is not None else None)
     loop = DSELoop(evaluator=evaluator, db=db,
                    llm_stack=stack, cost_model=cost_model, approve_fn=approve,
@@ -114,6 +131,37 @@ def main():
     if gate is not None:
         print(f"surrogate gate: active={gate.active} pruned={gate.pruned_total} "
               f"val_rmse={gate.last_rmse:.3f} (n={gate.last_val_n})")
+
+    if args.measure_top_k > 0:
+        from repro.core.design_space import PlanPoint
+        from repro.core.promotion import plan_promotions
+
+        heads = db.winners(args.arch, args.shape, k=args.measure_top_k,
+                           mesh=mesh_name)
+        measured_keys = {d.point.get("__key__") for d in
+                         db.measured_rows(args.arch, args.shape,
+                                          mesh=mesh_name)}
+        for head in plan_promotions(heads, measured_keys,
+                                    top_k=args.measure_top_k):
+            point = PlanPoint(dims={k: v for k, v in head.point.items()
+                                    if k != "__key__"})
+            dp = evaluator.measure(args.arch, args.shape, point,
+                                   modeled_bound_s=head.metrics.get("bound_s"))
+            db.append(dp)
+            if dp.status == "ok":
+                bound = head.metrics.get("bound_s")
+                print(f"measured {point.key()}: "
+                      f"{dp.metrics['measured_us']:.0f}us "
+                      f"(modeled bound "
+                      f"{bound * 1e6:.0f}us) [{dp.metrics.get('backend')}]"
+                      if bound else
+                      f"measured {point.key()}: "
+                      f"{dp.metrics['measured_us']:.0f}us")
+            else:
+                print(f"measurement of {point.key()} -> {dp.status}: "
+                      f"{dp.reason}")
+        print(f"measured tier: {evaluator.measured_count} timed, "
+              f"{evaluator.measured_replayed} replayed from cache")
 
     if args.report:
         out = {

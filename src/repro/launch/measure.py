@@ -1,0 +1,170 @@
+"""Tier-2 measured execution: run the compiled computation and time it.
+
+Every other number in this engine is *modeled* — the dry-run tier compiles
+a cell and reads an analytical roofline bound off the HLO. This module is
+the promotion ladder's raw-speed anchor: it builds the same jitted step as
+``launch/dryrun.build_cell`` (donation disabled, so the step can be called
+repeatedly on the same buffers), concretizes the abstract inputs as zeros,
+runs one warm call (compile + first dispatch), then times ``runs`` calls
+and reports the **minimum** wall-clock — the compile-and-replay idiom; a
+GC or dispatch hiccup inflates a mean but never the min.
+
+On a machine with no accelerator the forced-host-platform CPU backend
+executes the computation in interpret-ish mode: the absolute numbers are
+not production latencies, but they are *real executions* of the real HLO,
+which is exactly what calibrating prediction-vs-measured error needs
+(``CostModel.measured_calibration``). The record carries ``backend`` so
+readers can tell the two apart.
+
+Contract mirrors ``dryrun.run_cell``: ``measure_cell`` never raises —
+unsupported cells return ``status="skipped"`` and any build/run exception
+becomes a ``status="error"`` record. ``ok``/``skipped`` records are safe
+to cache content-addressed (``measured_cache/`` beside ``dryrun_cache/``):
+a measurement is taken exactly once per design and every re-leased, stolen,
+or resumed worker replays the recorded timing instead of re-running.
+
+This module is import-safe without jax (RPR004 supervisor scope): jax and
+the dry-run builder are imported lazily inside the functions that need
+them, so the campaign/orchestrator CLIs can import the measured-tier
+plumbing without paying a jax startup.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict
+
+# process-local count of actual timed executions (cache replays never reach
+# measure_cell) — the exactly-once-per-promoted-head tests assert on this,
+# mirroring dryrun.N_COMPILES
+N_MEASUREMENTS = 0
+
+DEFAULT_RUNS = 3
+
+
+def measure_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+                 plan=None, *, runs: int = DEFAULT_RUNS,
+                 cfg=None, cell=None) -> Dict[str, Any]:
+    """Execute one cell's compiled step and time it (see module docstring).
+
+    Returns a record with ``status`` ``ok`` (``measured_s`` = min over
+    ``runs`` timed calls, ``times_s`` the full list, ``warm_s`` the
+    compile+first-dispatch call, ``backend`` the jax backend that ran it),
+    ``skipped`` (unsupported cell), or ``error``. ``measured_at`` is the
+    wall timestamp of the measurement — DataPoints built from a cached
+    record reuse it, so a replayed measurement serializes byte-identically
+    to the original.
+    """
+    global N_MEASUREMENTS
+    if runs < 1:
+        raise ValueError(f"runs must be >= 1, got {runs}")
+    t0 = time.time()
+    # measured_at set up-front so cached *skipped* records are replay-stable
+    # too, not just the ok path
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "fidelity": "measured",
+                           "n": runs, "measured_at": round(t0, 3)}
+    try:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.launch import dryrun
+
+        built, skip = dryrun.build_cell(arch, shape_name, mesh, plan,
+                                        cfg=cfg, cell=cell, donate=False)
+        if built is None:
+            rec.update(status="skipped", reason=skip)
+            return rec
+        fn, args = built
+        # concretize the abstract input specs: zeros are fine — wall time
+        # of a dense step is data-independent, and allocating real batches
+        # here would drag the data pipeline into a timing harness
+        concrete = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), args)
+        N_MEASUREMENTS += 1
+        with mesh:
+            t_warm = time.perf_counter()
+            jax.block_until_ready(fn(*concrete))  # compile + first dispatch
+            warm_s = time.perf_counter() - t_warm
+            times = []
+            for _ in range(runs):
+                t = time.perf_counter()
+                jax.block_until_ready(fn(*concrete))
+                times.append(time.perf_counter() - t)
+        rec.update(status="ok",
+                   measured_s=min(times),
+                   times_s=times,
+                   warm_s=warm_s,
+                   backend=jax.default_backend())
+    except Exception as e:  # noqa: BLE001 — a failed measurement is a negative datapoint
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The measured-execution CLI surface, importable without touching jax
+    (the quickstart drift checker parses documented commands against it)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.measure",
+        description="measure one cell: execute the compiled step and time "
+                    "it (tier 2 of the promotion ladder)")
+    ap.add_argument("--arch", required=True, help="arch id")
+    ap.add_argument("--shape", required=True, help="shape cell name")
+    ap.add_argument("--mesh", default="tiny",
+                    choices=["tiny", "small", "pod", "multipod"])
+    ap.add_argument("--runs", type=int, default=DEFAULT_RUNS,
+                    help="timed executions after the warm call; the "
+                         "reported measured_s is their minimum")
+    ap.add_argument("--out", default=None,
+                    help="write the measurement record JSON here")
+    return ap
+
+
+def main() -> None:
+    """CLI entry: measure one (arch, shape) cell's baseline plan on the
+    chosen mesh and print the record. Exits 1 on a failed measurement."""
+    # before any jax-touching import: jax locks the device count at first init
+    os.environ["XLA_FLAGS"] = os.environ.get(
+        "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    ap = build_parser()
+    args = ap.parse_args()
+    if args.runs < 1:
+        ap.error(f"--runs must be >= 1, got {args.runs}")
+
+    # test/CI hook shared with the campaign CLI: shrink configs before
+    # anything jax-touching runs, so the standalone harness is drivable on
+    # a laptop/CI box where real configs don't fit interpret-mode memory
+    prelude = os.environ.get("REPRO_CAMPAIGN_PRELUDE")
+    if prelude:
+        src = Path(prelude).read_text()
+        exec(compile(src, prelude, "exec"), {"__name__": "__repro_prelude__"})
+
+    from repro.configs import ARCH_NAMES, SHAPE_BY_NAME
+    from repro.launch.campaign import make_campaign_mesh
+
+    if args.arch not in ARCH_NAMES:
+        ap.error(f"unknown arch {args.arch!r}")
+    if args.shape not in SHAPE_BY_NAME:
+        ap.error(f"unknown shape {args.shape!r}")
+    mesh, mesh_name = make_campaign_mesh(args.mesh)
+    rec = measure_cell(args.arch, args.shape, mesh, mesh_name,
+                       runs=args.runs)
+    print(json.dumps({k: v for k, v in rec.items() if k != "trace"},
+                     indent=1, default=str))
+    if args.out:
+        from repro.launch.ioutil import write_json_atomic
+
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        write_json_atomic(Path(args.out), rec)
+    if rec["status"] == "error":
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,14 +5,19 @@ output dirs, each with its own ``cost_db.jsonl``, ``reports/`` and
 ``dryrun_cache/``. This CLI folds them into one:
 
 * **cost DB** — records deduplicated by ``(arch, shape, mesh,
-  point.__key__)``, keeping the *earliest* record (by timestamp, then input
-  order); the merged JSONL is timestamp-sorted so the result reads like one
-  chronological campaign;
+  point.__key__, status, fidelity)``, keeping the *earliest* record (by
+  timestamp, then serialized content); the merged JSONL is timestamp-sorted
+  so the result reads like one chronological campaign. Fidelity in the
+  identity keeps a design's dry-run row and its tier-2 *measured* row as
+  two first-class records, while duplicate measurements of one design
+  (a stolen cell promoted by two owners — byte-identical by the measured
+  cache's replay contract) collapse to the one canonical row;
 * **reports** — per-cell report JSONs copied over (shards own disjoint
   cells; on a collision the earliest-mtime report wins and a warning is
   printed);
-* **dryrun cache** — content-addressed entries unioned (existing entries are
-  never overwritten — they are identical by construction);
+* **caches** — content-addressed ``dryrun_cache/`` and ``measured_cache/``
+  entries unioned (existing entries are never overwritten — they are
+  identical by construction);
 * **leaderboard** — rebuilt from the merged DB + the merged report set,
   using the same ranking/serialization as ``run_campaign``. With the
   deterministic mock LLM this reproduces the single-process
@@ -41,14 +46,18 @@ from repro.launch.ioutil import write_json_atomic
 def merge_cost_dbs(shard_dbs: Sequence[Path], out_db: Path,
                    ) -> Tuple[int, int]:
     """Merge shard JSONL DBs into ``out_db``; returns (kept, dropped_dups).
-    Identity is ``(arch, shape, mesh, point.__key__, status)``; the earliest
-    record (timestamp, then serialized content — NOT input order, so the
-    merge is **order-invariant**: any permutation of the shard list yields
-    byte-identical output, which tier-1 property-tests) wins. Status is
-    part of the identity so a gate-``pruned`` prediction and the later
-    *measured* row for the same design both survive — exactly the pair a
-    single-process campaign's DB holds when the gate relaxes and a
-    once-pruned design gets compiled. Unreadable lines are skipped."""
+    Identity is ``(arch, shape, mesh, point.__key__, status, fidelity)``;
+    the earliest record (timestamp, then serialized content — NOT input
+    order, so the merge is **order-invariant**: any permutation of the
+    shard list yields byte-identical output, which tier-1 property-tests)
+    wins. Status is part of the identity so a gate-``pruned`` prediction
+    and the later evaluated row for the same design both survive — exactly
+    the pair a single-process campaign's DB holds when the gate relaxes
+    and a once-pruned design gets compiled. Fidelity is part of it so a
+    design's dry-run bound and its tier-2 measured timing coexist, while
+    duplicate measurements (one per owner of a stolen cell, byte-identical
+    via the measured-cache replay) dedupe to one. Unreadable lines are
+    skipped."""
     rows: List[DataPoint] = []
     for p in shard_dbs:
         if not p.exists():
@@ -67,7 +76,8 @@ def merge_cost_dbs(shard_dbs: Sequence[Path], out_db: Path,
     seen = set()
     kept: List[DataPoint] = []
     for d in rows:
-        ident = (d.arch, d.shape, d.mesh, d.point.get("__key__"), d.status)
+        ident = (d.arch, d.shape, d.mesh, d.point.get("__key__"), d.status,
+                 d.fidelity)
         if ident[3] is not None and ident in seen:
             continue
         seen.add(ident)
@@ -114,22 +124,28 @@ def _report_rank(path: Path) -> Tuple[float, bytes]:
 
 def merge_caches(shard_dirs: Sequence[Path], out_dir: Path,
                  extra_cache_dirs: Optional[Sequence[Path]] = None) -> int:
-    """Union the content-addressed dry-run caches (same key = same record,
-    so existing entries are never overwritten). ``extra_cache_dirs`` names
-    cache directories *directly* (not shard dirs) — queue-mode campaigns
-    share one cache inside the queue dir, and the merge folds it in so the
-    merged campaign dir resumes for free. Returns entries copied."""
-    dest = out_dir / "dryrun_cache"
-    dest.mkdir(parents=True, exist_ok=True)
+    """Union the content-addressed caches — ``dryrun_cache/`` (compiles)
+    and ``measured_cache/`` (tier-2 timings) — per subdirectory (same key =
+    same record, so existing entries are never overwritten).
+    ``extra_cache_dirs`` names cache directories *directly* (not shard
+    dirs) — queue-mode campaigns share their caches inside the queue dir,
+    and the merge folds them in so the merged campaign dir resumes for
+    free; an extra dir named ``measured_cache`` routes to the measured
+    union, anything else to the dry-run union. Returns entries copied."""
+    extras = [Path(c) for c in (extra_cache_dirs or [])]
     n = 0
-    caches = [sd / "dryrun_cache" for sd in shard_dirs]
-    caches += [Path(c) for c in (extra_cache_dirs or [])]
-    for cd in caches:
-        for f in sorted(cd.glob("*.json")):
-            target = dest / f.name
-            if not target.exists():
-                shutil.copyfile(f, target)
-                n += 1
+    for sub in ("dryrun_cache", "measured_cache"):
+        dest = out_dir / sub
+        dest.mkdir(parents=True, exist_ok=True)
+        caches = [sd / sub for sd in shard_dirs]
+        caches += [c for c in extras
+                   if (c.name == "measured_cache") == (sub == "measured_cache")]
+        for cd in caches:
+            for f in sorted(cd.glob("*.json")):
+                target = dest / f.name
+                if not target.exists():
+                    shutil.copyfile(f, target)
+                    n += 1
     return n
 
 
@@ -206,7 +222,9 @@ def build_parser() -> argparse.ArgumentParser:
                     metavar="DIR",
                     help="additional content-addressed cache dir(s) to fold "
                          "in (e.g. a queue-mode campaign's shared "
-                         "QUEUE/dryrun_cache); repeatable")
+                         "QUEUE/dryrun_cache or QUEUE/measured_cache; a dir "
+                         "named measured_cache routes to the measured "
+                         "union); repeatable")
     return ap
 
 

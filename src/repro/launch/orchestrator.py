@@ -77,7 +77,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.launch.campaign import (MESH_CHOICES, STRATEGY_CHOICES,
                                    resolve_grid, shard_cells,
-                                   validate_gate_args)
+                                   validate_gate_args, validate_measure_args)
 from repro.launch.executors import (EXECUTOR_CHOICES, ShardExecutor,
                                     ShardProc, make_executor)
 from repro.launch.ioutil import write_json_atomic
@@ -114,6 +114,8 @@ def build_shard_cmd(i: int, shards: int, shard_dir: Path, *, archs: str,
                     workers: int, strategy: str,
                     gate_factor: Optional[float],
                     gate_min_factor: Optional[float] = None, llm: str,
+                    measure_top_k: int = 0, measure_runs: int = 3,
+                    measure_budget: Optional[int] = None,
                     queue_dir: Optional[Path] = None,
                     queue_lease_s: float = 300.0) -> List[str]:
     """The exact ``repro.launch.campaign`` argv for shard ``i`` of
@@ -141,6 +143,11 @@ def build_shard_cmd(i: int, shards: int, shard_dir: Path, *, archs: str,
         cmd += ["--gate-factor", str(gate_factor)]
     if gate_min_factor is not None:
         cmd += ["--gate-min-factor", str(gate_min_factor)]
+    if measure_top_k > 0:
+        cmd += ["--measure-top-k", str(measure_top_k),
+                "--measure-runs", str(measure_runs)]
+        if measure_budget is not None:
+            cmd += ["--measure-budget", str(measure_budget)]
     return cmd
 
 
@@ -243,6 +250,8 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                      strategy: str = "ensemble",
                      gate_factor: Optional[float] = None,
                      gate_min_factor: Optional[float] = None,
+                     measure_top_k: int = 0, measure_runs: int = 3,
+                     measure_budget: Optional[int] = None,
                      llm: str = "mock",
                      poll_interval: float = 1.0, hang_timeout: float = 300.0,
                      max_restarts: int = 2,
@@ -335,6 +344,9 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                               workers=workers, strategy=strategy,
                               gate_factor=gate_factor,
                               gate_min_factor=gate_min_factor, llm=llm,
+                              measure_top_k=measure_top_k,
+                              measure_runs=measure_runs,
+                              measure_budget=measure_budget,
                               queue_dir=q.root if q is not None else None,
                               queue_lease_s=queue_lease_s)
         states.append(ShardProc(index=i, out_dir=sd, cmd=cmd, env=env))
@@ -444,8 +456,8 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
     from repro.launch.merge_db import merge
 
     merged = merge([s.out_dir for s in states], out_dir, verbose=verbose,
-                   extra_cache_dirs=([q.cache_dir] if q is not None
-                                     else None))
+                   extra_cache_dirs=([q.cache_dir, q.measured_dir]
+                                     if q is not None else None))
     queue_cells = q.counts() if q is not None else None
     summary = {
         "out": str(out_dir),
@@ -505,6 +517,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="anneal target for the gate factor, forwarded to "
                          "every shard (must be in (1, gate-factor]; "
                          "requires --gate-factor)")
+    ap.add_argument("--measure-top-k", type=int, default=0, metavar="K",
+                    help="promotion ladder tier 2, forwarded to every "
+                         "shard: execute and time each cell's K best "
+                         "designs (0 = off); measured rows merge "
+                         "byte-stably and dedupe exactly-once via the "
+                         "shared measured cache")
+    ap.add_argument("--measure-runs", type=int, default=3, metavar="N",
+                    help="timed executions per measurement, forwarded to "
+                         "every shard (min reported)")
+    ap.add_argument("--measure-budget", type=int, default=None, metavar="M",
+                    help="per-shard cap on tier-2 measurements (requires "
+                         "--measure-top-k)")
     ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
     ap.add_argument("--queue", action="store_true",
                     help="dynamic scheduling: seed a crash-safe cell queue "
@@ -571,6 +595,10 @@ def main():
     gate_err = validate_gate_args(args.gate_factor, args.gate_min_factor)
     if gate_err:
         ap.error(gate_err)
+    measure_err = validate_measure_args(args.measure_top_k, args.measure_runs,
+                                        args.measure_budget)
+    if measure_err:
+        ap.error(measure_err)
     if args.shards < 1:
         ap.error(f"--shards must be >= 1, got {args.shards}")
     if args.executor == "ssh" and not args.hosts:
@@ -593,6 +621,9 @@ def main():
                          budget=args.budget, workers=args.workers,
                          strategy=args.strategy, gate_factor=args.gate_factor,
                          gate_min_factor=args.gate_min_factor,
+                         measure_top_k=args.measure_top_k,
+                         measure_runs=args.measure_runs,
+                         measure_budget=args.measure_budget,
                          llm=args.llm, poll_interval=args.poll_interval,
                          hang_timeout=args.hang_timeout,
                          max_restarts=args.max_restarts, inject_kill=inject,

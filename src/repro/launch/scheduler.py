@@ -252,6 +252,14 @@ class CellQueue:
         replay instead of re-running."""
         return self.root / "dryrun_cache"
 
+    @property
+    def measured_dir(self) -> Path:
+        """The shared content-addressed *measured-timing* cache (promotion
+        ladder tier 2), beside :attr:`cache_dir`: a re-leased or stolen
+        cell replays its recorded wall clocks instead of re-timing, which
+        is what makes measurement exactly-once per design across owners."""
+        return self.root / "measured_cache"
+
     def _state_dir(self, state: str) -> Path:
         return self.root / state
 

@@ -15,6 +15,8 @@ from repro.search.ensemble import Ensemble
 from repro.search.evolutionary import Evolutionary
 from repro.search.gate import SurrogateGate
 from repro.search.greedy import GreedyNeighborhood
+from repro.search.ladder import (PromotionLadder, plan_promotions,
+                                 select_measured_row)
 from repro.search.llm_guided import LLMGuided
 from repro.search.transfer import TransferSeeded
 
@@ -58,7 +60,8 @@ def make_strategy(name: str, *, llm_stack=None, seed: int = 0) -> SearchStrategy
 __all__ = [
     "Candidate", "SearchState", "SearchStrategy", "STRATEGIES",
     "GreedyNeighborhood", "LLMGuided", "SimulatedAnnealing", "Evolutionary",
-    "TransferSeeded", "Ensemble", "SurrogateGate", "make_strategy",
+    "TransferSeeded", "Ensemble", "SurrogateGate", "PromotionLadder",
+    "plan_promotions", "select_measured_row", "make_strategy",
     "best_negative", "bound_of", "point_of", "rank_candidates",
     "select_candidates",
 ]

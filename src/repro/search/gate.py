@@ -76,7 +76,13 @@ class SurrogateGate:
     def effective_factor(self) -> float:
         """The prune threshold currently in force: the annealed factor from
         the last calibration when ``min_factor`` is set and the gate is
-        active, else the configured ``factor``."""
+        active, else the configured ``factor``.
+
+        Part of the gate **protocol contract**: the evaluator reads this
+        property (no ``getattr`` fallback) when recording why a candidate
+        was pruned, so every gate implementation — subclasses like
+        :class:`~repro.search.ladder.PromotionLadder` included — must keep
+        it equal to the threshold ``prune_verdicts`` actually applies."""
         return self.factor if self._annealed is None else self._annealed
 
     def calibrate(self, db: CostDB, *, arch: Optional[str] = None,

@@ -1,0 +1,314 @@
+"""Promotion ladder (surrogate -> dry-run -> measured): tier-2 policy
+purity, the effective_factor protocol contract, measured-calibration
+feedback, and the tier-1 acceptance contract — measurement is exactly-once
+per design under queue re-lease, and merged leaderboards are byte-identical
+under any shard order."""
+import itertools
+
+import pytest
+
+from conftest import run_subprocess
+from repro.core.cost_db import (CostDB, DataPoint, _val_row, featurize)
+from repro.core.promotion import plan_promotions, select_measured_row
+from test_campaign_engine import TINY_PRELUDE
+
+WL = {"n_params": 6e8, "seq_len": 4096, "global_batch": 8, "n_layers": 28,
+      "d_model": 1024, "vocab": 151936, "n_experts": 0,
+      "is_train": 1.0, "is_decode": 0.0}
+
+
+def _head(key, bound, ts=0.0):
+    return DataPoint(arch="a", shape="s", mesh="m",
+                     point={"__key__": key, "microbatches": 1},
+                     status="ok", metrics={"bound_s": bound, "workload": WL},
+                     ts=ts)
+
+
+# ---------------------------------------------------------------------------
+# the two pure decision functions (RPR003 registry)
+# ---------------------------------------------------------------------------
+def test_plan_promotions_policy():
+    heads = [_head("k1", 1.0), _head("k2", 2.0), _head("k1", 1.0),
+             _head("k3", 3.0), _head("", 4.0)]
+    assert plan_promotions(heads, set(), top_k=0) == []
+    assert plan_promotions([], set(), top_k=3) == []
+    # best-first, duplicates and key-less heads skipped
+    got = plan_promotions(heads, set(), top_k=2)
+    assert [d.point["__key__"] for d in got] == ["k1", "k2"]
+    # already-measured designs never re-promoted (exactly-once bookkeeping)
+    got = plan_promotions(heads, {"k1"}, top_k=2)
+    assert [d.point["__key__"] for d in got] == ["k2", "k3"]
+    # campaign-wide budget caps after top_k selection
+    got = plan_promotions(heads, set(), top_k=3, budget_left=1)
+    assert [d.point["__key__"] for d in got] == ["k1"]
+    assert plan_promotions(heads, set(), top_k=3, budget_left=0) == []
+
+
+def test_select_measured_row_order_invariant_earliest_wins():
+    a = _head("ka", 1.0, ts=5.0)
+    b = _head("kb", 1.0, ts=3.0)
+    c = _head("ka", 1.0, ts=3.0)  # ts tie with b -> serialized form decides
+    expected = min([a, b, c], key=lambda d: (d.ts, d.to_json()))
+    for perm in itertools.permutations([a, b, c]):
+        assert select_measured_row(list(perm)) is expected
+    assert select_measured_row([]) is None
+    assert select_measured_row(iter([a])) is a
+
+
+# ---------------------------------------------------------------------------
+# effective_factor is a protocol contract, not duck-typing
+# ---------------------------------------------------------------------------
+def test_effective_factor_contract_fails_loudly(tmp_path):
+    """The evaluator reads ``gate.effective_factor`` directly when recording
+    a pruned row — a gate implementation missing the property must raise,
+    never silently record a wrong threshold (the old ``getattr`` fallback
+    would have)."""
+    from repro.core.design_space import PlanTemplate, baseline_point
+    from repro.core.evaluator import SHAPE_BY_NAME, Evaluator, get_config
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg, cell = get_config("qwen3-0.6b"), SHAPE_BY_NAME["train_4k"]
+    point = baseline_point(cell, PlanTemplate(cfg, cell, dict(mesh.shape)))
+
+    class NoFactorGate:
+        def prune_verdicts(self, points, workload, incumbent_bound):
+            return [(123.0, 1.0)] * len(points)
+
+    ev = Evaluator(mesh, "tiny1x1", artifact_dir=str(tmp_path))
+    with pytest.raises(AttributeError, match="effective_factor"):
+        ev.evaluate_batch("qwen3-0.6b", "train_4k", [point],
+                          gate=NoFactorGate(), incumbent_bound=1.0)
+
+
+def test_ladder_inherits_gate_protocol():
+    from repro.search import PromotionLadder, SurrogateGate
+
+    ladder = PromotionLadder(None, factor=3.0)
+    assert isinstance(ladder, SurrogateGate)
+    assert ladder.effective_factor == 3.0 and not ladder.active
+    assert ladder.min_measured_points == 3
+    # uncalibrated ladder prunes nothing, exactly like the base gate
+    assert ladder.prune_verdicts([], {}, 1.0) == []
+    assert ladder.calibrate(CostDB.__new__(CostDB)) is False  # untrained cm
+
+
+# ---------------------------------------------------------------------------
+# measured calibration: RMSE monotone in disagreement, offset-invariant,
+# and the ladder anneals tighter as wall clocks confirm predictions
+# ---------------------------------------------------------------------------
+def _non_val_keys(n):
+    """Point keys outside the validation split: keeps validation_error at
+    (nan, 0) so the ladder's annealing signal is *only* the measured RMSE."""
+    keys, i = [], 0
+    while len(keys) < n:
+        if not _val_row(f"p{i}"):
+            keys.append(f"p{i}")
+        i += 1
+    return keys
+
+
+def _calibrated_db(tmp_path, label, noise, offset=3.0, n=24, k=8):
+    """A synthetic cell: n dry-run rows train the surrogate, then k measured
+    rows whose log10 wall clock is the model's own prediction plus a
+    constant ``offset`` and alternating +/- ``noise`` decades — so the
+    offset-corrected RMSE is ``noise`` by construction."""
+    from repro.core.cost_model import CostModel
+
+    db = CostDB(tmp_path / f"db_{label}.jsonl")
+    keys = _non_val_keys(n)
+    for i, key in enumerate(keys):
+        point = {"__key__": key, "microbatches": 2 ** (i % 5),
+                 "loss_chunk": 64 * (1 + i % 3), "zero1": bool(i % 2)}
+        db.append(DataPoint(arch="a", shape="s", mesh="m", point=point,
+                            status="ok",
+                            metrics={"bound_s": 1e-4 * (1 + i % 7),
+                                     "fits_hbm": True, "workload": WL}))
+    cm = CostModel.create(in_dim=featurize({}, {}).shape[0])
+    cm.pretrain(db, split=None)
+    for i, d in enumerate(db.all()[:k]):
+        pred = float(cm.predict(featurize(d.point, WL)[None])[0][0])
+        eps = noise if i % 2 else -noise
+        db.append(DataPoint(arch="a", shape="s", mesh="m", point=d.point,
+                            status="ok", fidelity="measured", source="ladder",
+                            metrics={"measured_s": 10 ** (pred + offset + eps),
+                                     "workload": WL}))
+    return cm, db
+
+
+def test_measured_calibration_rmse_monotone_and_offset_invariant(tmp_path):
+    rmses = []
+    for noise in (0.02, 0.10, 0.30):
+        cm, db = _calibrated_db(tmp_path, f"n{noise}", noise)
+        rmse, n, off = cm.measured_calibration(db)
+        assert n == 8
+        assert rmse == pytest.approx(noise, rel=1e-3)
+        assert off == pytest.approx(3.0, abs=0.05)
+        rmses.append(rmse)
+    assert rmses == sorted(rmses) and rmses[0] < rmses[-1]
+
+    # a pure scale change (interpret-mode backend vs device) lands entirely
+    # in the offset, never in the RMSE
+    cm, db5 = _calibrated_db(tmp_path, "off5", 0.10, offset=5.0)
+    rmse5, _, off5 = cm.measured_calibration(db5)
+    assert rmse5 == pytest.approx(0.10, rel=1e-3)
+    assert off5 == pytest.approx(5.0, abs=0.05)
+
+    # untrained model / empty DB degrade to (nan, 0, nan)
+    from repro.core.cost_model import CostModel
+    fresh = CostModel.create(in_dim=featurize({}, {}).shape[0])
+    r, n, o = fresh.measured_calibration(db5)
+    assert n == 0 and r != r and o != o
+
+
+def test_ladder_anneals_tighter_as_measured_agreement_improves(tmp_path):
+    from repro.search import PromotionLadder, SurrogateGate
+
+    factors = []
+    for noise in (0.02, 0.15, 0.40):
+        cm, db = _calibrated_db(tmp_path, f"g{noise}", noise)
+        # plain gate: no validation rows (all keys dodge the val split), so
+        # its annealing signal is nan and the threshold stays at factor
+        gate = SurrogateGate(cm, factor=4.0, min_factor=1.5,
+                             require_calibration=False)
+        assert gate.calibrate(db) and gate.effective_factor == 4.0
+        ladder = PromotionLadder(cm, factor=4.0, min_factor=1.5,
+                                 require_calibration=False)
+        assert ladder.calibrate(db)
+        assert ladder.last_measured_n == 8
+        assert ladder.last_measured_rmse == pytest.approx(noise, rel=1e-3)
+        factors.append(ladder.effective_factor)
+    tight, mid, loose = factors
+    # monotone: better wall-clock agreement -> tighter pruning; and the
+    # ladder never exceeds the configured factor (noise 0.40 > max_val_rmse
+    # clamps to the loose end)
+    assert tight < mid < loose <= 4.0
+    assert tight == pytest.approx(1.5 + (4.0 - 1.5) * 0.02 / 0.35, rel=1e-6)
+
+    # below min_measured_points the measured signal is ignored entirely
+    cm, db = _calibrated_db(tmp_path, "few", 0.02, k=2)
+    ladder = PromotionLadder(cm, factor=4.0, min_factor=1.5,
+                             require_calibration=False)
+    assert ladder.calibrate(db)
+    assert ladder.last_measured_n == 2
+    assert ladder.effective_factor == 4.0
+
+
+# ---------------------------------------------------------------------------
+# merge identity: a design's dry-run row and measured row both survive;
+# duplicate measurements collapse to one canonical row, any shard order
+# ---------------------------------------------------------------------------
+def test_merge_keeps_measured_and_dryrun_rows_dedupes_duplicates(tmp_path):
+    from repro.launch.merge_db import merge_cost_dbs
+
+    dry = _head("k1", 1.0, ts=1.0)
+    meas = DataPoint(arch="a", shape="s", mesh="m",
+                     point={"__key__": "k1", "microbatches": 1}, status="ok",
+                     fidelity="measured", source="ladder",
+                     metrics={"measured_s": 0.5, "workload": WL}, ts=2.0)
+    a = CostDB(tmp_path / "a.jsonl")
+    a.append(dry)
+    a.append(meas)
+    b = CostDB(tmp_path / "b.jsonl")
+    b.append(dry)   # stolen cell: second owner re-recorded both rows
+    b.append(meas)  # (byte-identical by the measured cache's replay contract)
+
+    outs = []
+    for label, order in (("ab", [a.path, b.path]), ("ba", [b.path, a.path])):
+        out = tmp_path / f"m_{label}.jsonl"
+        kept, dups = merge_cost_dbs(order, out)
+        assert kept == 2 and dups == 2
+        outs.append(out.read_bytes())
+    assert outs[0] == outs[1]
+    merged = CostDB(tmp_path / "m_ab.jsonl").all()
+    assert sorted(d.fidelity for d in merged) == ["dryrun", "measured"]
+
+
+# ---------------------------------------------------------------------------
+# tier-1 acceptance: exactly-once measurement under queue re-lease, and
+# shard-order-invariant merged leaderboards with measured rows present
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_measured_exactly_once_under_queue_release_and_merge(tmp_path):
+    out = run_subprocess(f"""{TINY_PRELUDE}
+        import json, shutil
+        from pathlib import Path
+        import repro.launch.measure as measure
+        from repro.launch.campaign import run_campaign
+        from repro.launch.merge_db import merge
+
+        grid = dict(archs=["qwen3-0.6b"], shapes=["train_4k", "decode_32k"])
+        qdir = Path(r"{tmp_path}/q")
+        a = run_campaign(**grid, mesh=mesh, mesh_name="tiny1x1",
+                         out_dir=r"{tmp_path}/A", iterations=1, budget=2,
+                         workers=1, verbose=False, measure_top_k=1,
+                         queue=qdir, queue_owner="w0")
+        assert a["measured"] == 2 and a["measured_replayed"] == 0, a
+        assert measure.N_MEASUREMENTS == 2
+
+        def measured_lines(p):
+            return sorted(l for l in Path(p).read_text().splitlines()
+                          if '"fidelity": "measured"' in l)
+        rows_a = measured_lines(r"{tmp_path}/A/cost_db.jsonl")
+        assert len(rows_a) == 2, rows_a
+
+        # owner w0 "dies" after the work but before anyone trusts it: wipe
+        # the queue's done/ state so a second owner re-leases both cells
+        # and re-runs them against its own empty out dir
+        shutil.rmtree(qdir / "done")
+        b = run_campaign(**grid, mesh=mesh, mesh_name="tiny1x1",
+                         out_dir=r"{tmp_path}/B", iterations=1, budget=2,
+                         workers=1, verbose=False, measure_top_k=1,
+                         queue=qdir, queue_owner="w1")
+        # the re-leased cells replay their recorded wall clocks from the
+        # queue-shared measured_cache — not a single re-timing
+        assert measure.N_MEASUREMENTS == 2, measure.N_MEASUREMENTS
+        assert b["measured"] == 0 and b["measured_replayed"] == 2, b
+        # the replayed rows serialize byte-identically (ts included)
+        assert measured_lines(r"{tmp_path}/B/cost_db.jsonl") == rows_a
+
+        # merge in both shard orders: byte-identical leaderboards, one
+        # canonical measured row per cell, measured_us populated
+        lbs = []
+        for label, order in (("AB", ["A", "B"]), ("BA", ["B", "A"])):
+            m = merge([Path(r"{tmp_path}") / s for s in order],
+                      Path(r"{tmp_path}") / f"m{{label}}", verbose=False,
+                      extra_cache_dirs=[qdir / "dryrun_cache",
+                                        qdir / "measured_cache"])
+            mdb = Path(m["out"]) / "cost_db.jsonl"
+            assert measured_lines(mdb) == rows_a
+            lbs.append(Path(m["leaderboard"]).read_bytes())
+        assert lbs[0] == lbs[1]
+        lb = json.loads(lbs[0])
+        assert len(lb) == 2
+        assert all(r["measured_us"] and r["measured_us"] > 0 for r in lb), lb
+        assert all(r["measured_backend"] == "cpu" for r in lb), lb
+        print("EXACTLY_ONCE_OK")
+    """, n_devices=1, timeout=900)
+    assert "EXACTLY_ONCE_OK" in out
+
+
+@pytest.mark.slow
+def test_measure_cell_interpret_mode_min_of_n(tmp_path):
+    out = run_subprocess(f"""{TINY_PRELUDE}
+        from repro.launch import measure
+
+        try:
+            measure.measure_cell("qwen3-0.6b", "train_4k", mesh, "tiny1x1",
+                                 runs=0)
+            raise AssertionError("runs=0 must be rejected")
+        except ValueError:
+            pass
+        assert measure.N_MEASUREMENTS == 0
+
+        rec = measure.measure_cell("qwen3-0.6b", "train_4k", mesh, "tiny1x1",
+                                   runs=3)
+        assert rec["status"] == "ok", rec
+        assert measure.N_MEASUREMENTS == 1
+        assert rec["n"] == 3 and len(rec["times_s"]) == 3
+        assert rec["measured_s"] == min(rec["times_s"]) > 0
+        assert rec["warm_s"] > 0 and rec["backend"] == "cpu"
+        assert rec["fidelity"] == "measured" and rec["measured_at"] > 0
+        print("MEASURE_OK")
+    """, n_devices=1, timeout=900)
+    assert "MEASURE_OK" in out
