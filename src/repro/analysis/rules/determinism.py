@@ -43,6 +43,11 @@ PURE_FUNCTIONS: Dict[str, Set[str]] = {
     "src/repro/launch/scheduler.py": {
         "sanitize_owner", "_expire_lease",
     },
+    # the kernel campaign's grid cut: every shard and the queue seeding
+    # must agree on cell numbering from the arguments alone
+    "src/repro/launch/kernel_cell.py": {
+        "resolve_kernel_grid", "kernel_grid_cells",
+    },
     # the promotion ladder's tier-2 policy: which heads get measured and
     # which duplicate measured row is canonical must replay identically
     # on every shard (exactly-once measurement rides on it)

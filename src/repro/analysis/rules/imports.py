@@ -34,6 +34,10 @@ _JAX_FREE_FILES = {
     # so the supervisor (and the quickstart drift checker) can import the
     # module for its parser without paying a jax startup
     "src/repro/launch/measure.py",
+    # kernel campaigns: the whole queue/heartbeat/leaderboard drive loop
+    # is supervision; jax enters only through the KernelEvaluator and the
+    # conformance harness, both imported lazily inside run_kernel_campaign
+    "src/repro/launch/kernel_cell.py",
 }
 _JAX_FREE_PREFIXES = ("benchmarks/", "src/repro/analysis/")
 

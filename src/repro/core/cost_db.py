@@ -74,8 +74,11 @@ _CATEGORICAL = {
     "decode_attn": ("gspmd", "sp_shardmap"),
     "attn_impl": ("chunked", "tri"),
 }
-_NUMERIC = ("microbatches", "loss_chunk")
-_BOOLEAN = ("zero1", "opt_int8")
+_NUMERIC = ("microbatches", "loss_chunk",
+            # kernel-space tile dims (plan points simply featurize to zero
+            # here, and vice versa — one surrogate serves both spaces)
+            "block_q", "block_k", "block_rows", "chunk", "block")
+_BOOLEAN = ("zero1", "opt_int8", "causal")
 
 
 def featurize(point: Dict[str, Any], workload: Dict[str, float]) -> np.ndarray:

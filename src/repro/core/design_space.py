@@ -17,6 +17,8 @@ from typing import Any, Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.core.device import DeviceModel, TPU_V5E
+from repro.core.kernel_space import (KernelShape, default_kernel_dims,
+                                     kernel_resources, legal_kernel_dims)
 from repro.sharding.plan import ShardingPlan, baseline_rules
 
 # plan dimensions the explorer may mutate, with their global value pools
@@ -221,6 +223,16 @@ class PlanTemplate:
                 if v != point.dims.get(k):
                     yield PlanPoint(dims={**point.dims, k: v})
 
+    def repair(self, point: PlanPoint) -> PlanPoint:
+        """Template-specific candidate repair (the search layer delegates
+        here, so strategies stay design-space-agnostic): the only plan-space
+        cross-dimension clash — a microbatch count the per-device batch
+        can't absorb — is fixed by dropping back to microbatches=1."""
+        ok, _ = self.validate(point)
+        if ok:
+            return point
+        return PlanPoint(dims={**point.dims, "microbatches": 1})
+
     def random_points(self, rng, n: int) -> List[PlanPoint]:
         legal = self.dims()
         keys = sorted(legal)
@@ -228,8 +240,109 @@ class PlanTemplate:
         for _ in range(n):
             p = PlanPoint(dims={k: legal[k][rng.randrange(len(legal[k]))]
                                 for k in keys})
-            ok, _ = self.validate(p)
-            if not ok:  # cross-dimension repair (microbatch/batch-rule clash)
-                p = PlanPoint(dims={**p.dims, "microbatches": 1})
-            out.append(p)
+            out.append(self.repair(p))
+        return out
+
+
+@dataclass(frozen=True)
+class KernelPoint(PlanPoint):
+    """A kernel-space candidate: assignments over one kernel's tile dims.
+
+    Shares ``PlanPoint``'s key/serialization contract so the CostDB,
+    caches, and search strategies treat both spaces identically; the
+    subclass exists so call sites can tell the spaces apart.
+    """
+
+
+def baseline_kernel_point(shape: KernelShape,
+                          template: Optional["KernelTemplate"] = None
+                          ) -> KernelPoint:
+    """The expert initial design for a kernel cell: the shipped defaults
+    (``ops.py`` signatures), snapped into the shape's legal pools and —
+    with a template — repaired to VMEM feasibility."""
+    p = KernelPoint(dims=default_kernel_dims(shape))
+    if template is not None:
+        p = template.repair(p)
+    return p
+
+
+@dataclass
+class KernelTemplate:
+    """Device-aware legal tile ranges for one kernel workload shape.
+
+    The kernel-space sibling of :class:`PlanTemplate`: same ``dims`` /
+    ``validate`` / ``neighbors`` / ``repair`` / ``random_points`` surface
+    (so every search strategy runs unchanged), but legality means Pallas
+    grid divisibility and a double-buffered VMEM budget from
+    ``kernels.resource_model`` instead of mesh divisibility.
+    ``validate``'s reject strings are a pinned contract shared with
+    ``PlanTemplate`` (tests assert them verbatim).
+    """
+
+    kshape: KernelShape
+    device: DeviceModel = TPU_V5E
+
+    def dims(self) -> Dict[str, Tuple]:
+        """Legal pools, divisibility-filtered against the workload shape."""
+        return legal_kernel_dims(self.kshape)
+
+    def validate(self, point: PlanPoint) -> Tuple[bool, str]:
+        """(ok, reason): unknown dims and out-of-pool values reuse
+        PlanTemplate's pinned messages; the kernel-specific constraint is
+        the double-buffered VMEM bound from the resource model."""
+        legal = self.dims()
+        for k, v in point.dims.items():
+            if k not in legal:
+                return False, f"unknown dimension {k}"
+            if v not in legal[k]:
+                return False, f"{k}={v!r} outside device-aware range {legal[k]}"
+        res = kernel_resources(self.kshape, point.dims, self.device)
+        if not res.feasible:
+            return False, (f"VMEM {res.vmem_bytes} B double-buffered exceeds "
+                           f"{self.device.vmem_bytes} B budget")
+        return True, ""
+
+    def neighbors(self, point: PlanPoint) -> Iterator[PlanPoint]:
+        """Single-dimension mutations, filtered to validity (closure
+        property: every yielded point passes ``validate``)."""
+        legal = self.dims()
+        for k, vals in legal.items():
+            for v in vals:
+                if v != point.dims.get(k):
+                    cand = KernelPoint(dims={**point.dims, k: v})
+                    ok, _ = self.validate(cand)
+                    if ok:
+                        yield cand
+
+    def repair(self, point: PlanPoint) -> KernelPoint:
+        """Snap a candidate into the template: unknown dims are dropped,
+        out-of-pool values fall back to the shipped default, and block
+        dims shrink (largest first) until the double-buffered working set
+        fits VMEM."""
+        legal = self.dims()
+        dims = dict(default_kernel_dims(self.kshape))
+        for k, v in point.dims.items():
+            if k in legal and v in legal[k]:
+                dims[k] = v
+        while not kernel_resources(self.kshape, dims, self.device).feasible:
+            shrinkable = [(k, [v for v in legal[k]
+                               if isinstance(v, int) and v < dims[k]])
+                          for k in dims if isinstance(dims[k], int)]
+            shrinkable = [(k, vs) for k, vs in shrinkable if vs]
+            if not shrinkable:
+                break  # nothing left to shrink; validate() will reject
+            k, vs = max(shrinkable, key=lambda kv: dims[kv[0]])
+            dims[k] = max(vs)
+        return KernelPoint(dims=dims)
+
+    def random_points(self, rng, n: int) -> List[KernelPoint]:
+        """n uniform samples over the legal pools, each repaired to a
+        valid point (closure property shared with ``neighbors``)."""
+        legal = self.dims()
+        keys = sorted(legal)
+        out = []
+        for _ in range(n):
+            p = KernelPoint(dims={k: legal[k][rng.randrange(len(legal[k]))]
+                                  for k in keys})
+            out.append(self.repair(p))
         return out

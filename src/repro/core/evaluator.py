@@ -130,33 +130,10 @@ class Evaluator:
                 continue
             pending.append((i, point))
 
-        # the gate only sees candidates that would actually compile: cache
-        # hits are free and template rejections are already negative points
-        if gate is not None and pending:
-            verdicts = gate.prune_verdicts([pt for _, pt in pending], wl,
-                                           incumbent_bound)
-            still: List[Tuple[int, PlanPoint]] = []
-            for (i, pt), v in zip(pending, verdicts):
-                if v is None:
-                    still.append((i, pt))
-                    continue
-                pred, pfeas = v
-                self.pruned_count += 1
-                base = self._base(arch, shape, pt, srcs[i], iteration)
-                # the threshold in force, annealing included — not the
-                # configured maximum (audit rows must match the decision).
-                # ``effective_factor`` is part of the gate protocol contract
-                # (see SurrogateGate): ladder subclasses inherit it, so no
-                # duck-typed fallback here.
-                factor = gate.effective_factor
-                results[i] = DataPoint(
-                    **base, status="pruned",
-                    reason=(f"surrogate gate: predicted {pred:.3g}s > "
-                            f"{factor:g}x incumbent {incumbent_bound:.3g}s"),
-                    metrics={"workload": wl, "predicted_bound_s": pred,
-                             "predicted_p_feasible": pfeas,
-                             "gate_factor": factor})
-            pending = still
+        pending = self._gate_prune(gate, pending, wl=wl,
+                                   incumbent_bound=incumbent_bound,
+                                   srcs=srcs, arch=arch, shape=shape,
+                                   iteration=iteration, results=results)
 
         n_workers = self.max_workers if workers is None else workers
         n_workers = min(n_workers, len(pending))
@@ -177,6 +154,46 @@ class Evaluator:
             base = self._base(arch, shape, point, srcs[i], iteration)
             results[i] = self._rec_to_datapoint(rec, wl, base)
         return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    def _gate_prune(self, gate, pending: List[Tuple[int, PlanPoint]], *,
+                    wl: Dict[str, float], incumbent_bound: Optional[float],
+                    srcs: Sequence[str], arch: str, shape: str,
+                    iteration: int,
+                    results: List[Optional[DataPoint]],
+                    ) -> List[Tuple[int, PlanPoint]]:
+        """Tier-0 surrogate gate, shared by the plan and kernel evaluation
+        paths. The gate only sees candidates that would actually compile:
+        cache hits are free and template rejections are already negative
+        points. Pruned candidates are written into ``results`` as
+        ``status="pruned"`` rows with the prediction; returns the
+        still-pending subset."""
+        if gate is None or not pending:
+            return pending
+        verdicts = gate.prune_verdicts([pt for _, pt in pending], wl,
+                                       incumbent_bound)
+        still: List[Tuple[int, PlanPoint]] = []
+        for (i, pt), v in zip(pending, verdicts):
+            if v is None:
+                still.append((i, pt))
+                continue
+            pred, pfeas = v
+            self.pruned_count += 1
+            base = self._base(arch, shape, pt, srcs[i], iteration)
+            # the threshold in force, annealing included — not the
+            # configured maximum (audit rows must match the decision).
+            # ``effective_factor`` is part of the gate protocol contract
+            # (see SurrogateGate): ladder subclasses inherit it, so no
+            # duck-typed fallback here.
+            factor = gate.effective_factor
+            results[i] = DataPoint(
+                **base, status="pruned",
+                reason=(f"surrogate gate: predicted {pred:.3g}s > "
+                        f"{factor:g}x incumbent {incumbent_bound:.3g}s"),
+                metrics={"workload": wl, "predicted_bound_s": pred,
+                         "predicted_p_feasible": pfeas,
+                         "gate_factor": factor})
+        return still
 
     # ------------------------------------------------------------------
     def measure(self, arch: str, shape: str, point: PlanPoint, *,
@@ -324,3 +341,213 @@ class Evaluator:
             f"per-device {metrics['per_device_gib']:.1f} GiB exceeds "
             f"{self.device.hbm_bytes/2**30:.0f} GiB HBM")
         return DataPoint(**base, status=status, reason=reason, metrics=metrics)
+
+
+@dataclass
+class KernelEvaluator(Evaluator):
+    """Kernel-cell evaluation: the same multi-fidelity surface as
+    :class:`Evaluator`, but the design space is a Pallas kernel's tile dims.
+
+    The tier mapping for kernel cells:
+
+    * dry-run tier — run the kernel **in interpret mode** on deterministic
+      inputs, check it element-wise against the ``kernels.ref`` oracle
+      (the correctness gate), and take ``bound_s`` from the analytic
+      ``kernels.resource_model`` roofline (``est_latency_us``). A candidate
+      that computes the wrong answer becomes a ``status="infeasible"`` row
+      with ``max_abs_err`` recorded — never a winner, no matter how fast
+      its bound claims it is.
+    * measured tier — ``measure`` times real executions via
+      ``launch.measure.measure_kernel_cell`` (min over ``measure_runs``
+      timed calls after a warm call), re-checking correctness on the warm
+      output; ``measured_cache`` replay keeps measurement exactly-once
+      with byte-identical rows, exactly like plan cells.
+
+    ``arch`` is the encoded ``kernel:<name>`` column and ``shape`` a
+    ``KERNEL_SHAPES`` registry name, so the CostDB/queue/merge plumbing is
+    untouched. ``mesh`` is unused (kernels are single-device); pass None.
+    Evaluation is serial — interpret-mode candidates run in milliseconds,
+    so a spawn pool would cost more than it saves.
+    """
+
+    interpret: Optional[bool] = True
+
+    def evaluate_batch(self, arch: str, shape: str,
+                       points: Sequence[PlanPoint], *,
+                       source: str | Sequence[str] = "explorer",
+                       iteration: int = -1,
+                       workers: Optional[int] = None,
+                       gate=None,
+                       incumbent_bound: Optional[float] = None,
+                       ) -> List[DataPoint]:
+        """Evaluate kernel candidates (order-preserving): template
+        rejections inline, cache hits replayed, surrogate-gate pruning,
+        then interpret-mode execution + correctness check + analytic bound
+        for the rest. ``workers`` is accepted for interface parity and
+        ignored (see class docstring)."""
+        from repro.core.design_space import KernelTemplate
+        from repro.core.kernel_space import (KERNEL_SHAPE_BY_NAME,
+                                             kernel_workload,
+                                             parse_kernel_arch)
+
+        srcs = ([source] * len(points) if isinstance(source, str)
+                else list(source))
+        if len(srcs) != len(points):
+            raise ValueError(f"{len(srcs)} sources for {len(points)} points")
+        kernel = parse_kernel_arch(arch)
+        if kernel is None:
+            raise ValueError(
+                f"KernelEvaluator expects a 'kernel:<name>' arch, got {arch!r}")
+        kshape = KERNEL_SHAPE_BY_NAME[shape]
+        template = KernelTemplate(kshape, self.device)
+        wl = kernel_workload(kshape)
+
+        results: List[Optional[DataPoint]] = [None] * len(points)
+        pending: List[Tuple[int, PlanPoint]] = []
+        for i, point in enumerate(points):
+            base = self._base(arch, shape, point, srcs[i], iteration)
+            ok, why = template.validate(point)
+            if not ok:
+                results[i] = DataPoint(**base, status="rejected", reason=why,
+                                       metrics={"workload": wl})
+                continue
+            rec = (self.cache.get(arch, shape, self.mesh_name, point.key())
+                   if self.cache is not None else None)
+            if rec is not None:
+                results[i] = self._kernel_rec_to_datapoint(rec, wl, base)
+                continue
+            pending.append((i, point))
+
+        pending = self._gate_prune(gate, pending, wl=wl,
+                                   incumbent_bound=incumbent_bound,
+                                   srcs=srcs, arch=arch, shape=shape,
+                                   iteration=iteration, results=results)
+
+        if pending:
+            from repro.kernels import conformance  # deferred: needs jax
+
+            inputs = conformance.make_inputs(kshape)
+            for i, point in pending:
+                rec = self._run_kernel(kshape, point, inputs, conformance)
+                if rec.get("status") != "skipped":
+                    self.compile_count += 1
+                # errors stay retryable; correctness verdicts are
+                # deterministic and replay forever
+                if self.cache is not None and rec.get("status") == "ok":
+                    self.cache.put(arch, shape, self.mesh_name, point.key(),
+                                   rec)
+                base = self._base(arch, shape, point, srcs[i], iteration)
+                results[i] = self._kernel_rec_to_datapoint(rec, wl, base)
+        return results  # type: ignore[return-value]
+
+    def measure(self, arch: str, shape: str, point: PlanPoint, *,
+                runs: Optional[int] = None,
+                modeled_bound_s: Optional[float] = None) -> DataPoint:
+        """Tier-2 promotion for a kernel cell: time real executions of the
+        Pallas kernel (``launch.measure.measure_kernel_cell``) and re-run
+        the correctness gate on the executed output. Same exactly-once
+        ``measured_cache`` replay contract as the plan path: the DataPoint
+        is built solely from the cached record (``ts`` included), so
+        replayed rows serialize byte-identically."""
+        from repro.core.kernel_space import (KERNEL_SHAPE_BY_NAME,
+                                             kernel_workload)
+
+        kshape = KERNEL_SHAPE_BY_NAME[shape]
+        wl = kernel_workload(kshape)
+        rec = (self.measured_cache.get(arch, shape, self.mesh_name,
+                                       point.key())
+               if self.measured_cache is not None else None)
+        if rec is not None:
+            self.measured_replayed += 1
+        else:
+            from repro.launch import measure as measure_mod  # needs jax
+
+            rec = measure_mod.measure_kernel_cell(
+                kshape, dict(point.dims), mesh_name=self.mesh_name,
+                runs=runs if runs is not None else self.measure_runs,
+                interpret=self.interpret)
+            self.measured_count += 1
+            if (self.measured_cache is not None
+                    and rec.get("status") in ("ok", "incorrect")):
+                self.measured_cache.put(arch, shape, self.mesh_name,
+                                        point.key(), rec)
+        base = self._base(arch, shape, point, "ladder", -1)
+        base.update(fidelity="measured", ts=rec["measured_at"])
+        if rec["status"] == "error":
+            return DataPoint(**base, status="error", reason=rec["error"],
+                             metrics={"workload": wl})
+        metrics = {
+            "workload": wl,
+            "measured_s": rec["measured_s"],
+            "measured_us": rec["measured_s"] * 1e6,
+            "n": rec["n"],
+            "warm_s": rec["warm_s"],
+            "backend": rec["backend"],
+            "max_abs_err": rec["max_abs_err"],
+            "tol": rec["tol"],
+        }
+        if modeled_bound_s is not None:
+            metrics["bound_s_modeled"] = modeled_bound_s
+        if rec["status"] == "incorrect":
+            return DataPoint(
+                **base, status="infeasible",
+                reason=(f"correctness gate: max|err| {rec['max_abs_err']:.3g}"
+                        f" > tol {rec['tol']:.3g} vs kernels.ref"),
+                metrics=metrics)
+        return DataPoint(**base, status="ok", metrics=metrics)
+
+    # ------------------------------------------------------------------
+    def _run_kernel(self, kshape, point: PlanPoint, inputs,
+                    conformance) -> Dict[str, Any]:
+        """One dry-run-tier kernel evaluation record: correctness check +
+        analytic resources. Never raises — a crashed interpret run is a
+        negative datapoint."""
+        import time
+        import traceback
+
+        from repro.core.kernel_space import kernel_resources
+
+        t0 = time.perf_counter()
+        try:
+            check = conformance.check_candidate(
+                kshape, point.dims, interpret=self.interpret, inputs=inputs)
+        except Exception as e:  # noqa: BLE001 — negative datapoint
+            return {"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:]}
+        res = kernel_resources(kshape, point.dims, self.device)
+        return {"status": "ok", "check": check, "resources": res.to_dict(),
+                "run_s": round(time.perf_counter() - t0, 4)}
+
+    def _kernel_rec_to_datapoint(self, rec: Dict[str, Any],
+                                 wl: Dict[str, float],
+                                 base: Dict[str, Any]) -> DataPoint:
+        """Map a kernel evaluation record onto the DataPoint contract: a
+        failed correctness check is ``infeasible`` (with the error pinned
+        in the reason), a passing one ranks on the analytic ``bound_s``."""
+        if rec["status"] in ("error", "worker-failed"):
+            return DataPoint(**base, status="error", reason=rec["error"],
+                             metrics={"workload": wl})
+        res = rec["resources"]
+        check = rec["check"]
+        metrics = {
+            "workload": wl,
+            "bound_s": res["est_latency_us"] / 1e6,
+            "est_latency_us": res["est_latency_us"],
+            "est_cycles_per_block": res["est_cycles_per_block"],
+            "vmem_util": res["vmem_util"],
+            "mxu_aligned": res["mxu_aligned"],
+            "vpu_aligned": res["vpu_aligned"],
+            "fits_hbm": res["feasible"],
+            "max_abs_err": check["max_abs_err"],
+            "tol": check["tol"],
+            "correct": check["passed"],
+            "run_s": rec.get("run_s"),
+        }
+        if not check["passed"]:
+            return DataPoint(
+                **base, status="infeasible",
+                reason=(f"correctness gate: max|err| "
+                        f"{check['max_abs_err']:.3g} > tol "
+                        f"{check['tol']:.3g} vs kernels.ref"),
+                metrics=metrics)
+        return DataPoint(**base, status="ok", metrics=metrics)

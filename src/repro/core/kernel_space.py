@@ -1,0 +1,190 @@
+"""Kernel design space registry — the jax-free half of kernel cells.
+
+SECDA-DSE explores *accelerator-internal* parameters, not just sharding
+plans: the Pallas tile/block knobs in ``repro.kernels`` (``block_q`` /
+``block_k`` / ``causal`` for flash attention, ``block_rows`` for rmsnorm,
+``chunk`` for the SSD scan, ``block`` for vecmul) are the pragma-level
+dials the paper's DSE loop turns. This module holds everything the
+supervisor layer (campaign / orchestrator CLIs, queue seeding, shard
+math) needs to reason about that space **without importing jax**:
+
+  * ``KernelShape`` — a named workload instance for one kernel (the
+    analog of a ``ShapeCell``), carrying the problem sizes and dtype;
+  * ``KERNEL_SHAPES`` / ``KERNEL_SHAPE_BY_NAME`` — the benchmark
+    registry, sized to run in interpret mode on a CPU CI box;
+  * the legal per-kernel dimension pools (divisibility-filtered against
+    the shape, VMEM-checked via ``kernels.resource_model``);
+  * the ``kernel:<name>`` arch-column encoding that threads kernel cells
+    through the existing ``CostDB``/``CellQueue``/``merge_db`` plumbing
+    unchanged (the colon is filesystem-safe and contains no ``__``, so
+    report stems still split cleanly).
+
+The jax-coupled half — ``KernelTemplate``/``KernelPoint`` — lives beside
+``PlanTemplate`` in ``core.design_space`` and delegates here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from repro.core.device import DeviceModel, TPU_V5E
+from repro.kernels.resource_model import RESOURCE_FNS, KernelResources
+
+#: arch-column prefix that marks a row/ticket/report as a kernel cell
+KERNEL_ARCH_PREFIX = "kernel:"
+
+#: bytes per element for the dtypes the kernel space explores
+_ITEMSIZE = {"float32": 4, "bfloat16": 2}
+
+#: candidate pools per tunable dimension, before per-shape filtering
+_POOLS: Dict[str, Dict[str, Tuple[Any, ...]]] = {
+    "flash_attention": {"block_q": (64, 128, 256, 512),
+                        "block_k": (64, 128, 256, 512),
+                        "causal": (True, False)},
+    "rmsnorm": {"block_rows": (32, 64, 128, 256)},
+    "ssd_scan": {"chunk": (32, 64, 128, 256)},
+    "vecmul": {"block": (256, 512, 1024, 2048, 4096)},
+}
+
+#: the frozen-default point each kernel ships with today (``ops.py``
+#: signatures) — the "default" side of every tuned-vs-default comparison,
+#: snapped down to the largest legal value for small shapes
+_DEFAULTS: Dict[str, Dict[str, Any]] = {
+    "flash_attention": {"block_q": 512, "block_k": 512, "causal": True},
+    "rmsnorm": {"block_rows": 128},
+    "ssd_scan": {"chunk": 256},
+    "vecmul": {"block": 1024},
+}
+
+
+@dataclass(frozen=True)
+class KernelShape:
+    """One kernel workload instance: problem sizes + dtype.
+
+    ``params`` keys per kernel: flash_attention ``b,sq,sk,h,kh,d``;
+    rmsnorm ``rows,d``; ssd_scan ``b,s,nh,dh,N``; vecmul ``L``.
+    """
+
+    name: str
+    kernel: str
+    params: Mapping[str, int] = field(default_factory=dict)
+    dtype: str = "float32"
+
+    @property
+    def itemsize(self) -> int:
+        """Bytes per element of the working dtype."""
+        return _ITEMSIZE[self.dtype]
+
+
+#: CI/interpret-sized benchmark shapes — at least one per kernel, two
+#: dtypes in play, plus a GQA attention variant (kh < h)
+KERNEL_SHAPES: Tuple[KernelShape, ...] = (
+    KernelShape("attn_s128_f32", "flash_attention",
+                {"b": 2, "sq": 128, "sk": 128, "h": 4, "kh": 4, "d": 64},
+                "float32"),
+    KernelShape("attn_s256_gqa_bf16", "flash_attention",
+                {"b": 1, "sq": 256, "sk": 256, "h": 4, "kh": 2, "d": 64},
+                "bfloat16"),
+    KernelShape("rms_512x512_f32", "rmsnorm",
+                {"rows": 512, "d": 512}, "float32"),
+    KernelShape("rms_1kx256_bf16", "rmsnorm",
+                {"rows": 1024, "d": 256}, "bfloat16"),
+    KernelShape("ssd_s256_f32", "ssd_scan",
+                {"b": 1, "s": 256, "nh": 4, "dh": 32, "N": 32}, "float32"),
+    KernelShape("vec_64k_f32", "vecmul", {"L": 65536}, "float32"),
+)
+
+KERNEL_SHAPE_BY_NAME: Dict[str, KernelShape] = {
+    s.name: s for s in KERNEL_SHAPES}
+
+KERNEL_NAMES: Tuple[str, ...] = tuple(sorted(_POOLS))
+
+
+def kernel_arch(kernel: str) -> str:
+    """Encode a kernel name into the CostDB/queue ``arch`` column."""
+    return KERNEL_ARCH_PREFIX + kernel
+
+
+def parse_kernel_arch(arch: str) -> Optional[str]:
+    """Inverse of :func:`kernel_arch`; None for plan-space arch ids."""
+    if arch.startswith(KERNEL_ARCH_PREFIX):
+        return arch[len(KERNEL_ARCH_PREFIX):]
+    return None
+
+
+def legal_kernel_dims(shape: KernelShape) -> Dict[str, Tuple[Any, ...]]:
+    """Per-shape legal pools: block dims that must divide a sequence axis
+    (flash ``block_q``/``block_k``, ssd ``chunk``) are filtered to exact
+    divisors no larger than the axis — those kernels assert divisibility
+    after clamping; rmsnorm/vecmul pad internally, so their pools pass
+    through unfiltered."""
+    pools = dict(_POOLS[shape.kernel])
+    p = shape.params
+    if shape.kernel == "flash_attention":
+        pools["block_q"] = tuple(v for v in pools["block_q"]
+                                 if v <= p["sq"] and p["sq"] % v == 0)
+        pools["block_k"] = tuple(v for v in pools["block_k"]
+                                 if v <= p["sk"] and p["sk"] % v == 0)
+    elif shape.kernel == "ssd_scan":
+        pools["chunk"] = tuple(v for v in pools["chunk"]
+                               if v <= p["s"] and p["s"] % v == 0)
+    return pools
+
+
+def kernel_resources(shape: KernelShape, dims: Mapping[str, Any],
+                     device: DeviceModel = TPU_V5E) -> KernelResources:
+    """Run the analytic resource model for one candidate point: the
+    dry-run-tier feasibility check and latency bound for kernel cells."""
+    fn = RESOURCE_FNS[shape.kernel]
+    p = shape.params
+    if shape.kernel == "vecmul":
+        return fn(p["L"], int(dims["block"]),
+                  itemsize=shape.itemsize, dev=device)
+    if shape.kernel == "rmsnorm":
+        return fn(p["rows"], p["d"], int(dims["block_rows"]),
+                  itemsize=shape.itemsize, dev=device)
+    if shape.kernel == "flash_attention":
+        return fn(p["b"], p["sq"], p["sk"], p["h"], p["kh"], p["d"],
+                  int(dims["block_q"]), int(dims["block_k"]),
+                  itemsize=shape.itemsize, dev=device)
+    if shape.kernel == "ssd_scan":
+        return fn(p["b"], p["s"], p["nh"], p["dh"], p["N"],
+                  int(dims["chunk"]), itemsize=shape.itemsize, dev=device)
+    raise KeyError(f"unknown kernel {shape.kernel!r}")
+
+
+def default_kernel_dims(shape: KernelShape) -> Dict[str, Any]:
+    """The shipped-default point for a shape, snapped into the legal
+    pools (e.g. ``block_q=512`` becomes 128 on a 128-long sequence —
+    exactly what the kernel's own min-clamp would run)."""
+    legal = legal_kernel_dims(shape)
+    out: Dict[str, Any] = {}
+    for k, default in _DEFAULTS[shape.kernel].items():
+        pool = legal[k]
+        if default in pool:
+            out[k] = default
+        else:
+            # the kernels clamp block=min(block, axis): the largest legal
+            # value <= default is what the default actually executes as
+            smaller = [v for v in pool if isinstance(v, int) and v <= default]
+            out[k] = max(smaller) if smaller else pool[0]
+    return out
+
+
+def kernel_workload(shape: KernelShape) -> Dict[str, float]:
+    """Map a kernel shape onto the fixed workload-feature keys the cost
+    model featurizer reads (missing keys featurize to zero), so one
+    surrogate architecture serves both design spaces."""
+    p = shape.params
+    seq = p.get("sq") or p.get("s") or p.get("rows") or p.get("L") or 0
+    elems = 1
+    for v in p.values():
+        elems *= max(int(v), 1)
+    return {
+        "n_params": float(elems),
+        "seq_len": float(seq),
+        "global_batch": float(p.get("b", 1)),
+        "d_model": float(p.get("d") or p.get("dh") or 0),
+        "is_train": 0.0,
+        "is_decode": 0.0,
+    }

@@ -8,6 +8,11 @@ importing anything under ``repro.search`` drags jax in via the design-space
 module. Both are RPR003-registered pure functions: no clock, no RNG, no
 I/O — same inputs, same promotions, on every shard and every replay
 (``repro.search.ladder`` re-exports them for the search-facing API).
+
+Design-space agnostic by construction: the policy sees only DataPoints and
+``__key__`` identities, never plan dims — kernel campaigns
+(``launch.kernel_cell``, ``arch="kernel:<name>"`` rows) promote and dedupe
+through these same two functions unchanged.
 """
 from __future__ import annotations
 

@@ -1,0 +1,187 @@
+"""Kernel correctness gate: run a candidate tile against its ref.py oracle.
+
+Every kernel-cell candidate the DSE engine evaluates or measures passes
+through :func:`check_candidate` before it may enter a leaderboard: the
+Pallas kernel runs (interpret mode on CPU, native on TPU) on deterministic
+inputs and its output is compared element-wise against the pure-jnp oracle
+in ``kernels.ref``. A fast-but-wrong tile becomes a ``status="infeasible"``
+row with the max error recorded — never a winner.
+
+Tolerances are per (kernel, dtype): absolute max-|error| thresholds chosen
+from the kernels' existing conformance sweeps (online-softmax reassociation
+for flash attention, chunked-vs-sequential reassociation for the SSD scan,
+bf16 rounding for everything).
+
+Fault-injection hook for tests/CI: ``REPRO_KERNEL_INJECT_BAD`` holds a spec
+``<kernel>:<dim>=<value>`` (e.g. ``vecmul:block=1024``); any candidate of
+that kernel whose point sets that dim to that value gets its output
+perturbed by +0.1 — far outside every tolerance — so the smoke arm can
+assert the correctness gate actually rejects a broken variant end to end.
+
+This module imports jax at the top level; supervisor-layer code reaches it
+only through lazy imports (the evaluator's compile path, the measured tier).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernel_space import KernelShape
+from repro.kernels import ops, ref
+
+#: absolute max-|error| threshold per (kernel, dtype)
+TOLERANCES: Dict[Tuple[str, str], float] = {
+    ("vecmul", "float32"): 1e-6,
+    ("vecmul", "bfloat16"): 1e-2,
+    ("rmsnorm", "float32"): 1e-5,
+    ("rmsnorm", "bfloat16"): 3e-2,
+    ("flash_attention", "float32"): 2e-3,
+    ("flash_attention", "bfloat16"): 3e-2,
+    ("ssd_scan", "float32"): 3e-3,
+    ("ssd_scan", "bfloat16"): 5e-2,
+}
+
+INJECT_ENV = "REPRO_KERNEL_INJECT_BAD"
+
+
+def tolerance(kernel: str, dtype: str) -> float:
+    """The gate threshold for one (kernel, dtype) pair."""
+    return TOLERANCES[(kernel, dtype)]
+
+
+def make_inputs(shape: KernelShape, seed: int = 0) -> Tuple[Any, ...]:
+    """Deterministic inputs for one kernel shape (numpy RNG -> jnp arrays,
+    scaled small so softmax/scan accumulations stay well-conditioned)."""
+    rng = np.random.default_rng(seed)
+    dt_ = shape.dtype
+    p = shape.params
+
+    def arr(*dims):
+        return jnp.asarray(0.3 * rng.standard_normal(dims), dtype=dt_)
+
+    if shape.kernel == "vecmul":
+        return arr(p["L"]), arr(p["L"])
+    if shape.kernel == "rmsnorm":
+        return arr(p["rows"], p["d"]), arr(p["d"])
+    if shape.kernel == "flash_attention":
+        return (arr(p["b"], p["sq"], p["h"], p["d"]),
+                arr(p["b"], p["sk"], p["kh"], p["d"]),
+                arr(p["b"], p["sk"], p["kh"], p["d"]))
+    if shape.kernel == "ssd_scan":
+        x = arr(p["b"], p["s"], p["nh"], p["dh"])
+        dt = jnp.asarray(0.1 + 0.2 * rng.random((p["b"], p["s"], p["nh"])),
+                         dtype=dt_)
+        A = jnp.asarray(-(0.5 + rng.random(p["nh"])), dtype=jnp.float32)
+        B = arr(p["b"], p["s"], p["N"])
+        C = arr(p["b"], p["s"], p["N"])
+        return x, dt, A, B, C
+    raise KeyError(f"unknown kernel {shape.kernel!r}")
+
+
+def _parse_inject_spec(spec: str) -> Optional[Tuple[str, str, Any]]:
+    """``kernel:dim=value`` -> (kernel, dim, typed value); None if malformed."""
+    try:
+        kernel, assign = spec.split(":", 1)
+        dim, raw = assign.split("=", 1)
+    except ValueError:
+        return None
+    raw = raw.strip()
+    if raw.lower() in ("true", "false"):
+        val: Any = raw.lower() == "true"
+    else:
+        try:
+            val = int(raw)
+        except ValueError:
+            val = raw
+    return kernel.strip(), dim.strip(), val
+
+
+def _maybe_inject_bad(kernel: str, dims: Mapping[str, Any], out):
+    """Apply the REPRO_KERNEL_INJECT_BAD perturbation if this candidate
+    matches the spec (test/CI hook — inert in production runs)."""
+    spec = os.environ.get(INJECT_ENV)
+    if not spec:
+        return out
+    parsed = _parse_inject_spec(spec)
+    if parsed is None:
+        return out
+    want_kernel, dim, val = parsed
+    if kernel != want_kernel or dims.get(dim) != val:
+        return out
+    return out + jnp.asarray(0.1, out.dtype)
+
+
+def run_candidate(shape: KernelShape, dims: Mapping[str, Any],
+                  inputs: Tuple[Any, ...], *, interpret: Optional[bool] = True):
+    """Execute the Pallas kernel with the candidate's tile dims. Returns
+    the primary output array (flash/rmsnorm/vecmul) — for ssd_scan, the
+    ``(y, final_state)`` pair with the injection applied to ``y``."""
+    if shape.kernel == "vecmul":
+        out = ops.vecmul(*inputs, block=int(dims["block"]),
+                         interpret=interpret)
+    elif shape.kernel == "rmsnorm":
+        out = ops.rmsnorm(*inputs, block_rows=int(dims["block_rows"]),
+                          interpret=interpret)
+    elif shape.kernel == "flash_attention":
+        out = ops.flash_attention(*inputs, causal=bool(dims["causal"]),
+                                  block_q=int(dims["block_q"]),
+                                  block_k=int(dims["block_k"]),
+                                  interpret=interpret)
+    elif shape.kernel == "ssd_scan":
+        y, state = ops.ssd_scan(*inputs, chunk=int(dims["chunk"]),
+                                interpret=interpret)
+        return _maybe_inject_bad(shape.kernel, dims, y), state
+    else:
+        raise KeyError(f"unknown kernel {shape.kernel!r}")
+    return _maybe_inject_bad(shape.kernel, dims, out)
+
+
+def run_reference(shape: KernelShape, dims: Mapping[str, Any],
+                  inputs: Tuple[Any, ...]):
+    """The ref.py oracle on the same inputs (GQA K/V heads repeated up to
+    the query head count; causal flag threaded through for attention)."""
+    if shape.kernel == "vecmul":
+        return ref.vecmul_ref(*inputs)
+    if shape.kernel == "rmsnorm":
+        return ref.rmsnorm_ref(*inputs)
+    if shape.kernel == "flash_attention":
+        q, k, v = inputs
+        g = q.shape[2] // k.shape[2]
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        return ref.attention_ref(q, k, v, causal=bool(dims["causal"]))
+    if shape.kernel == "ssd_scan":
+        return ref.ssd_ref(*inputs)
+    raise KeyError(f"unknown kernel {shape.kernel!r}")
+
+
+def max_abs_error(got, want) -> float:
+    """Max element-wise |got - want| in float32, tuple-aware (ssd returns
+    (y, final_state) and both must match)."""
+    if isinstance(got, tuple) or isinstance(want, tuple):
+        return max(max_abs_error(g, w) for g, w in zip(got, want))
+    g = np.asarray(got, np.float32)
+    w = np.asarray(want, np.float32)
+    return float(np.max(np.abs(g - w))) if g.size else 0.0
+
+
+def check_candidate(shape: KernelShape, dims: Mapping[str, Any], *,
+                    interpret: Optional[bool] = True,
+                    inputs: Optional[Tuple[Any, ...]] = None,
+                    seed: int = 0) -> Dict[str, Any]:
+    """The correctness gate: run candidate and oracle, compare.
+
+    Returns ``{"max_abs_err", "tol", "passed"}``; callers turn a failed
+    check into a ``status="infeasible"`` DataPoint.
+    """
+    if inputs is None:
+        inputs = make_inputs(shape, seed=seed)
+    got = run_candidate(shape, dims, inputs, interpret=interpret)
+    want = run_reference(shape, dims, inputs)
+    err = max_abs_error(got, want)
+    tol = tolerance(shape.kernel, shape.dtype)
+    return {"max_abs_err": err, "tol": tol, "passed": bool(err <= tol)}

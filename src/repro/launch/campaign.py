@@ -747,10 +747,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.campaign",
         description="parallel, cached, resumable multi-workload DSE campaign")
+    ap.add_argument("--space", default="plans",
+                    choices=["plans", "kernels"],
+                    help="design space to explore: 'plans' tunes sharding "
+                         "plans over the arch x shape grid; 'kernels' tunes "
+                         "Pallas kernel tile configs (--archs become kernel "
+                         "names, --shapes KERNEL_SHAPES names, --mesh is "
+                         "ignored — kernels are single-device)")
     ap.add_argument("--archs", default="qwen3-0.6b,stablelm-3b",
-                    help="comma-separated arch ids, or 'all'")
+                    help="comma-separated arch ids, or 'all' "
+                         "(--space kernels: kernel names)")
     ap.add_argument("--shapes", default="train_4k,decode_32k",
-                    help="comma-separated shape cells, or 'all'")
+                    help="comma-separated shape cells, or 'all' "
+                         "(--space kernels: kernel shape names)")
     ap.add_argument("--mesh", default="small", choices=list(MESH_CHOICES))
     ap.add_argument("--iterations", type=int, default=2)
     ap.add_argument("--budget", type=int, default=3,
@@ -862,6 +871,38 @@ def main():
         shard = parse_shard(args.shard)
     except ValueError as e:
         ap.error(str(e))
+    if args.space == "kernels":
+        from repro.launch import kernel_cell
+
+        # the plan-grid defaults are meaningless kernel ids: an untouched
+        # --archs/--shapes means "the whole kernel grid", while explicit
+        # values go through kernel-space validation unchanged
+        kernels = ("all" if args.archs == ap.get_default("archs")
+                   else args.archs)
+        kshapes = ("all" if args.shapes == ap.get_default("shapes")
+                   else args.shapes)
+        if args.strategy not in kernel_cell.KERNEL_STRATEGY_CHOICES:
+            ap.error(f"--space kernels supports --strategy "
+                     f"{kernel_cell.KERNEL_STRATEGY_CHOICES}; llm/transfer "
+                     f"variants are plan-coupled (got {args.strategy!r})")
+        try:
+            kernel_list, shape_list = kernel_cell.resolve_kernel_grid(
+                kernels, kshapes)
+        except ValueError as e:
+            ap.error(str(e))
+        kernel_cell.run_kernel_campaign(
+            kernel_list, shape_list, out_dir=args.out,
+            iterations=args.iterations, budget=args.budget,
+            strategy=args.strategy, gate_factor=args.gate_factor,
+            gate_min_factor=args.gate_min_factor,
+            measure_top_k=args.measure_top_k,
+            measure_runs=args.measure_runs,
+            measure_budget=args.measure_budget,
+            shard=shard, queue=args.queue, queue_owner=args.queue_owner,
+            queue_lease_s=args.queue_lease_s,
+            queue_poll_s=args.queue_poll_s, resume=not args.force)
+        return
+
     try:
         archs, shapes = resolve_grid(args.archs, args.shapes)
     except ValueError as e:

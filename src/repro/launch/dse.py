@@ -19,14 +19,23 @@ import argparse
 from pathlib import Path
 
 from repro.configs import ARCH_NAMES, SHAPES
+from repro.core.kernel_space import KERNEL_NAMES, KERNEL_SHAPES
 
 
 def build_parser() -> argparse.ArgumentParser:
     """The single-cell DSE CLI surface, importable cheaply (the quickstart
     drift checker parses documented commands against it)."""
     ap = argparse.ArgumentParser(prog="python -m repro.launch.dse")
-    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
-    ap.add_argument("--shape", required=True, choices=[s.name for s in SHAPES])
+    ap.add_argument("--space", default="plans", choices=["plans", "kernels"],
+                    help="design space: 'plans' tunes a sharding plan for "
+                         "one arch x shape cell; 'kernels' tunes one Pallas "
+                         "kernel's tile config (--arch is the kernel name, "
+                         "--shape a KERNEL_SHAPES name; --mesh ignored)")
+    ap.add_argument("--arch", required=True,
+                    choices=list(ARCH_NAMES) + list(KERNEL_NAMES))
+    ap.add_argument("--shape", required=True,
+                    choices=[s.name for s in SHAPES]
+                    + [s.name for s in KERNEL_SHAPES])
     ap.add_argument("--iterations", type=int, default=4)
     ap.add_argument("--budget", type=int, default=3, help="evaluations per iteration")
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "small"])
@@ -78,6 +87,16 @@ def main():
                                         None)
     if measure_err:
         ap.error(measure_err)
+
+    if args.space == "kernels":
+        _run_kernel_cell(ap, args)
+        return
+    if args.arch not in ARCH_NAMES:
+        ap.error(f"--arch {args.arch!r} is a kernel name; pass "
+                 f"--space kernels to tune it")
+    if args.shape not in {s.name for s in SHAPES}:
+        ap.error(f"--shape {args.shape!r} is a kernel shape; pass "
+                 f"--space kernels to tune it")
 
     from repro.core.cost_db import CostDB, featurize
     from repro.core.cost_model import CostModel
@@ -177,6 +196,92 @@ def main():
         # atomic: report consumers (dashboards, EXPERIMENTS harvesting) may
         # poll this path while a long loop is finishing
         write_json_atomic(Path(args.report), out)
+        print(f"report -> {args.report}")
+
+
+def _run_kernel_cell(ap, args):
+    """``--space kernels``: run the DSE loop over one kernel cell —
+    arch/shape are a kernel name + a ``KERNEL_SHAPES`` name; evaluation is
+    interpret-mode + correctness gate + analytic bound, tier 2 times real
+    executions. Mirrors the plan path's cache/gate/measure/report plumbing."""
+    from repro.core.kernel_space import KERNEL_SHAPE_BY_NAME, kernel_arch
+    from repro.launch.kernel_cell import (KERNEL_MESH_NAME,
+                                          KERNEL_STRATEGY_CHOICES)
+
+    if args.arch not in KERNEL_NAMES:
+        ap.error(f"--space kernels needs a kernel name for --arch "
+                 f"(one of {KERNEL_NAMES}), got {args.arch!r}")
+    kshape = KERNEL_SHAPE_BY_NAME.get(args.shape)
+    if kshape is None or kshape.kernel != args.arch:
+        ours = tuple(s.name for s in KERNEL_SHAPES if s.kernel == args.arch)
+        ap.error(f"--shape must name a {args.arch} kernel shape "
+                 f"(one of {ours}), got {args.shape!r}")
+    if args.strategy not in KERNEL_STRATEGY_CHOICES:
+        ap.error(f"--space kernels supports --strategy "
+                 f"{KERNEL_STRATEGY_CHOICES}; llm/transfer variants are "
+                 f"plan-coupled (got {args.strategy!r})")
+
+    from repro.core.cost_db import CostDB, featurize
+    from repro.core.cost_model import CostModel
+    from repro.core.design_space import PlanPoint
+    from repro.core.eval_cache import DryRunCache
+    from repro.core.evaluator import KernelEvaluator
+    from repro.core.promotion import plan_promotions
+    from repro.launch.kernel_cell import _explore_kernel_cell
+    from repro.search import PromotionLadder, SurrogateGate, make_strategy
+
+    arch = kernel_arch(args.arch)
+    db = CostDB(args.db)
+    cache = None if args.no_cache else DryRunCache.beside(db.path)
+    measured_cache = (None if args.no_cache else
+                      DryRunCache(Path(db.path).parent / "measured_cache"))
+    evaluator = KernelEvaluator(mesh=None, mesh_name=KERNEL_MESH_NAME,
+                                cache=cache, measured_cache=measured_cache,
+                                measure_runs=args.measure_runs)
+    cost_model = CostModel.create(in_dim=featurize({}, {}).shape[0])
+    gate_cls = PromotionLadder if args.measure_top_k > 0 else SurrogateGate
+    gate = (gate_cls(cost_model, factor=args.gate_factor,
+                     min_factor=args.gate_min_factor)
+            if args.gate_factor is not None else None)
+    report = _explore_kernel_cell(
+        arch, args.shape, evaluator=evaluator, db=db, cost_model=cost_model,
+        gate=gate, strategy=make_strategy(args.strategy),
+        iterations=args.iterations, budget=args.budget, seed=0)
+    if cache is not None:
+        print(f"dry-run cache: {cache.stats()}")
+    if gate is not None:
+        print(f"surrogate gate: active={gate.active} "
+              f"pruned={gate.pruned_total} "
+              f"val_rmse={gate.last_rmse:.3f} (n={gate.last_val_n})")
+
+    if args.measure_top_k > 0:
+        heads = db.winners(arch, args.shape, k=args.measure_top_k,
+                           mesh=KERNEL_MESH_NAME)
+        measured_keys = {d.point.get("__key__") for d in
+                         db.measured_rows(arch, args.shape,
+                                          mesh=KERNEL_MESH_NAME)}
+        for head in plan_promotions(heads, measured_keys,
+                                    top_k=args.measure_top_k):
+            point = PlanPoint(dims={k: v for k, v in head.point.items()
+                                    if k != "__key__"})
+            dp = evaluator.measure(arch, args.shape, point,
+                                   modeled_bound_s=head.metrics.get("bound_s"))
+            db.append(dp)
+            if dp.status == "ok":
+                print(f"measured {point.key()}: "
+                      f"{dp.metrics['measured_us']:.0f}us "
+                      f"[{dp.metrics.get('backend')}]")
+            else:
+                print(f"measurement of {point.key()} -> {dp.status}: "
+                      f"{dp.reason}")
+        print(f"measured tier: {evaluator.measured_count} timed, "
+              f"{evaluator.measured_replayed} replayed from cache")
+
+    if args.report:
+        from repro.launch.ioutil import write_json_atomic
+
+        Path(args.report).parent.mkdir(parents=True, exist_ok=True)
+        write_json_atomic(Path(args.report), report)
         print(f"report -> {args.report}")
 
 

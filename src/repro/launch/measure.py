@@ -44,6 +44,9 @@ from typing import Any, Dict
 # mirroring dryrun.N_COMPILES
 N_MEASUREMENTS = 0
 
+# same counter for the kernel-cell measured tier (measure_kernel_cell)
+N_KERNEL_MEASUREMENTS = 0
+
 DEFAULT_RUNS = 3
 
 
@@ -100,6 +103,64 @@ def measure_cell(arch: str, shape_name: str, mesh, mesh_name: str,
                    times_s=times,
                    warm_s=warm_s,
                    backend=jax.default_backend())
+    except Exception as e:  # noqa: BLE001 — a failed measurement is a negative datapoint
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def measure_kernel_cell(kshape, dims: Dict[str, Any], *,
+                        mesh_name: str = "dev1", runs: int = DEFAULT_RUNS,
+                        interpret=True, seed: int = 0) -> Dict[str, Any]:
+    """Measured tier for a kernel cell: execute the Pallas kernel with the
+    candidate tile dims and time it (same warm-then-min-of-``runs`` idiom
+    as :func:`measure_cell`), then re-run the correctness gate on the warm
+    output against the ``kernels.ref`` oracle.
+
+    ``kshape`` is a ``repro.core.kernel_space.KernelShape``. Never raises:
+    returns ``status`` ``ok`` (correct within tolerance), ``incorrect``
+    (ran fine but the output is wrong — ``max_abs_err`` > ``tol``; the
+    caller turns this into an ``infeasible`` row, never a winner), or
+    ``error``. Both ``ok`` and ``incorrect`` are deterministic verdicts
+    and safe to cache content-addressed; ``measured_at`` makes replayed
+    rows serialize byte-identically, exactly like plan cells.
+    """
+    global N_KERNEL_MEASUREMENTS
+    if runs < 1:
+        raise ValueError(f"runs must be >= 1, got {runs}")
+    t0 = time.time()
+    rec: Dict[str, Any] = {"arch": f"kernel:{kshape.kernel}",
+                           "shape": kshape.name, "mesh": mesh_name,
+                           "fidelity": "measured", "n": runs,
+                           "measured_at": round(t0, 3)}
+    try:
+        import jax
+
+        from repro.kernels import conformance
+
+        inputs = conformance.make_inputs(kshape, seed=seed)
+        N_KERNEL_MEASUREMENTS += 1
+        t_warm = time.perf_counter()
+        out = jax.block_until_ready(conformance.run_candidate(
+            kshape, dims, inputs, interpret=interpret))
+        warm_s = time.perf_counter() - t_warm
+        want = conformance.run_reference(kshape, dims, inputs)
+        err = conformance.max_abs_error(out, want)
+        tol = conformance.tolerance(kshape.kernel, kshape.dtype)
+        times = []
+        for _ in range(runs):
+            t = time.perf_counter()
+            jax.block_until_ready(conformance.run_candidate(
+                kshape, dims, inputs, interpret=interpret))
+            times.append(time.perf_counter() - t)
+        rec.update(status="ok" if err <= tol else "incorrect",
+                   measured_s=min(times),
+                   times_s=times,
+                   warm_s=warm_s,
+                   backend=jax.default_backend(),
+                   max_abs_err=err,
+                   tol=tol)
     except Exception as e:  # noqa: BLE001 — a failed measurement is a negative datapoint
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    trace=traceback.format_exc()[-2000:])

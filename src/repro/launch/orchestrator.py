@@ -117,7 +117,8 @@ def build_shard_cmd(i: int, shards: int, shard_dir: Path, *, archs: str,
                     measure_top_k: int = 0, measure_runs: int = 3,
                     measure_budget: Optional[int] = None,
                     queue_dir: Optional[Path] = None,
-                    queue_lease_s: float = 300.0) -> List[str]:
+                    queue_lease_s: float = 300.0,
+                    space: str = "plans") -> List[str]:
     """The exact ``repro.launch.campaign`` argv for shard ``i`` of
     ``shards`` — one place, so supervisor restarts always replay the
     original command (campaign resume makes that idempotent). With
@@ -131,6 +132,10 @@ def build_shard_cmd(i: int, shards: int, shard_dir: Path, *, archs: str,
            "--iterations", str(iterations), "--budget", str(budget),
            "--workers", str(workers), "--strategy", strategy,
            "--llm", llm, "--out", str(shard_dir)]
+    if space != "plans":
+        # appended only for non-default spaces: plan-campaign argv stays
+        # byte-identical to what pre---space supervisors replayed
+        cmd += ["--space", space]
     if queue_dir is not None:
         # absolute: the queue is the shards' rendezvous, and remote
         # executors assume one shared-filesystem path on every host
@@ -264,6 +269,7 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                      remote_root: Optional[str] = None,
                      remote_repo: Optional[str] = None,
                      remote_python: str = "python3",
+                     space: str = "plans",
                      verbose: bool = True) -> Dict:
     """Run the full supervised campaign; returns the summary dict (also
     written to ``OUT/summary.json``).
@@ -292,7 +298,17 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
     Queue mode (``queue=True``) seeds ``OUT/queue/`` from the grid before
     any shard spawns, releases a crashed/hung shard's leases immediately on
     restart, and runs the steal rule (:func:`plan_steals`) every poll."""
-    grid_archs, grid_shapes = resolve_grid(archs, shapes)  # fail fast
+    if space == "kernels":  # fail fast, and seed the queue from the same grid
+        from repro.launch.kernel_cell import (KERNEL_STRATEGY_CHOICES,
+                                              resolve_kernel_grid)
+
+        if strategy not in KERNEL_STRATEGY_CHOICES:
+            raise ValueError(
+                f"--space kernels supports strategies "
+                f"{KERNEL_STRATEGY_CHOICES} (got {strategy!r})")
+        grid_archs, grid_shapes = resolve_kernel_grid(archs, shapes)
+    else:
+        grid_archs, grid_shapes = resolve_grid(archs, shapes)
     if shards < 1:
         raise ValueError(f"need shards >= 1, got {shards}")
     if inject_kill is not None and not (0 <= inject_kill[0] < shards):
@@ -320,7 +336,17 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
     q: Optional[CellQueue] = None
     if queue:
         q = CellQueue(out_dir / QUEUE_DIR, lease_s=queue_lease_s)
-        seeded = q.seed(shard_cells(grid_archs, grid_shapes), mesh=mesh)
+        if space == "kernels":
+            from repro.launch.kernel_cell import (KERNEL_MESH_NAME,
+                                                  kernel_grid_cells)
+
+            # same cells + mesh tag the shard campaigns seed with, so the
+            # supervisor's seeding stays an idempotent no-op for them
+            cells, seed_mesh = (kernel_grid_cells(grid_archs, grid_shapes),
+                                KERNEL_MESH_NAME)
+        else:
+            cells, seed_mesh = shard_cells(grid_archs, grid_shapes), mesh
+        seeded = q.seed(cells, mesh=seed_mesh)
         c = q.counts()
         log(f"queue {q.root}: seeded {seeded} ticket(s) "
             f"({c['done']} already done, {c['pending']} pending)")
@@ -348,7 +374,7 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                               measure_runs=measure_runs,
                               measure_budget=measure_budget,
                               queue_dir=q.root if q is not None else None,
-                              queue_lease_s=queue_lease_s)
+                              queue_lease_s=queue_lease_s, space=space)
         states.append(ShardProc(index=i, out_dir=sd, cmd=cmd, env=env))
 
     t0 = time.time()
@@ -494,10 +520,18 @@ def build_parser() -> argparse.ArgumentParser:
         prog="python -m repro.launch.orchestrator",
         description="spawn, supervise, heal, and merge a sharded DSE "
                     "campaign in one command")
+    ap.add_argument("--space", default="plans",
+                    choices=["plans", "kernels"],
+                    help="design space the shards explore (forwarded to "
+                         "every shard): 'kernels' tunes Pallas kernel tile "
+                         "configs — --archs become kernel names, --shapes "
+                         "KERNEL_SHAPES names, --mesh is ignored")
     ap.add_argument("--archs", default="qwen3-0.6b,stablelm-3b",
-                    help="comma-separated arch ids, or 'all'")
+                    help="comma-separated arch ids, or 'all' "
+                         "(--space kernels: kernel names)")
     ap.add_argument("--shapes", default="train_4k,decode_32k",
-                    help="comma-separated shape cells, or 'all'")
+                    help="comma-separated shape cells, or 'all' "
+                         "(--space kernels: kernel shape names)")
     ap.add_argument("--shards", type=int, default=2,
                     help="number of campaign processes to dispatch")
     ap.add_argument("--out", default="artifacts/run",
@@ -609,10 +643,29 @@ def main():
         inject = parse_inject_kill(args.inject_kill)
     except ValueError as e:
         ap.error(str(e))
-    try:
-        resolve_grid(args.archs, args.shapes)
-    except ValueError as e:
-        ap.error(str(e))
+    if args.space == "kernels":
+        from repro.launch.kernel_cell import (KERNEL_STRATEGY_CHOICES,
+                                              resolve_kernel_grid)
+
+        # the plan-grid defaults are meaningless kernel ids (same remap as
+        # the campaign CLI): untouched --archs/--shapes mean the whole grid
+        if args.archs == ap.get_default("archs"):
+            args.archs = "all"
+        if args.shapes == ap.get_default("shapes"):
+            args.shapes = "all"
+        if args.strategy not in KERNEL_STRATEGY_CHOICES:
+            ap.error(f"--space kernels supports --strategy "
+                     f"{KERNEL_STRATEGY_CHOICES}; llm/transfer variants "
+                     f"are plan-coupled (got {args.strategy!r})")
+        try:
+            resolve_kernel_grid(args.archs, args.shapes)
+        except ValueError as e:
+            ap.error(str(e))
+    else:
+        try:
+            resolve_grid(args.archs, args.shapes)
+        except ValueError as e:
+            ap.error(str(e))
     hosts = args.hosts.split(",") if args.hosts else None
     try:
         run_orchestrator(archs=args.archs, shapes=args.shapes,
@@ -634,7 +687,8 @@ def main():
                          executor=args.executor, hosts=hosts,
                          remote_root=args.remote_root,
                          remote_repo=args.remote_repo,
-                         remote_python=args.remote_python)
+                         remote_python=args.remote_python,
+                         space=args.space)
     except (RuntimeError, ValueError) as e:
         print(f"[orchestrator] FAILED: {e}", file=sys.stderr)
         sys.exit(1)

@@ -134,12 +134,11 @@ def select_candidates(state: SearchState, cands: Sequence[Candidate],
 
 
 def repair(template: PlanTemplate, point: PlanPoint) -> PlanPoint:
-    """Cross-dimension repair mirroring ``PlanTemplate.random_points``: a
-    microbatch/batch-rule clash is fixed by dropping to microbatches=1."""
-    ok, _ = template.validate(point)
-    if not ok:
-        point = PlanPoint(dims={**point.dims, "microbatches": 1})
-    return point
+    """Template-delegated candidate repair: each design space owns its own
+    cross-dimension fixes (``PlanTemplate.repair`` drops a clashing
+    microbatch count to 1; ``KernelTemplate.repair`` shrinks tile dims to
+    VMEM feasibility), so strategies stay design-space-agnostic."""
+    return template.repair(point)
 
 
 def mutate(template: PlanTemplate, point: PlanPoint, rng: random.Random,

@@ -126,3 +126,140 @@ def test_ssd_initial_state_threading():
 def test_ssd_resources():
     r = ssd_scan_resources(8, 4096, 48, 64, 128, 256)
     assert r.feasible
+
+
+# ---------------------------------------------------------------------------
+# full-grid conformance: every legal template point of every registry shape
+# passes the correctness gate (the DSE engine's oracle check)
+# ---------------------------------------------------------------------------
+def _grid_cases():
+    import itertools
+
+    from repro.core.kernel_space import (KERNEL_SHAPES, KernelShape,
+                                         legal_kernel_dims)
+
+    shapes = list(KERNEL_SHAPES) + [
+        # odd / non-divisible sizes: the kernels' internal padding paths
+        KernelShape("rms_odd_173x96_f32", "rmsnorm",
+                    {"rows": 173, "d": 96}, "float32"),
+        KernelShape("vec_odd_5000_bf16", "vecmul", {"L": 5000}, "bfloat16"),
+    ]
+    cases = []
+    for shape in shapes:
+        pools = legal_kernel_dims(shape)
+        keys = sorted(pools)
+        for combo in itertools.product(*(pools[k] for k in keys)):
+            dims = dict(zip(keys, combo))
+            label = shape.name + "-" + ",".join(f"{k}={v}" for k, v in dims.items())
+            cases.append(pytest.param(shape, dims, id=label))
+    return cases
+
+
+@pytest.mark.parametrize("shape,dims", _grid_cases())
+def test_kernel_grid_conformance(shape, dims):
+    from repro.kernels.conformance import check_candidate
+
+    res = check_candidate(shape, dims, interpret=True)
+    assert res["passed"], (
+        f"{shape.name} {dims}: max|err|={res['max_abs_err']:.3g} "
+        f"> tol={res['tol']:.3g}")
+    assert res["max_abs_err"] <= res["tol"]
+
+
+def test_legal_pools_respect_divisibility():
+    from repro.core.kernel_space import (KERNEL_SHAPE_BY_NAME,
+                                         legal_kernel_dims)
+
+    attn = legal_kernel_dims(KERNEL_SHAPE_BY_NAME["attn_s128_f32"])
+    assert attn["block_q"] == (64, 128) and attn["block_k"] == (64, 128)
+    ssd = legal_kernel_dims(KERNEL_SHAPE_BY_NAME["ssd_s256_f32"])
+    assert all(256 % c == 0 for c in ssd["chunk"])
+    # rmsnorm/vecmul pad internally: pools pass through unfiltered
+    rms = legal_kernel_dims(KERNEL_SHAPE_BY_NAME["rms_1kx256_bf16"])
+    assert rms["block_rows"] == (32, 64, 128, 256)
+
+
+def test_default_kernel_dims_snap_to_legal():
+    from repro.core.kernel_space import (KERNEL_SHAPE_BY_NAME,
+                                         default_kernel_dims,
+                                         legal_kernel_dims)
+
+    # block_q/block_k=512 defaults snap down to 128 on a 128-long sequence
+    shape = KERNEL_SHAPE_BY_NAME["attn_s128_f32"]
+    d = default_kernel_dims(shape)
+    assert d == {"block_q": 128, "block_k": 128, "causal": True}
+    for s in KERNEL_SHAPE_BY_NAME.values():
+        legal = legal_kernel_dims(s)
+        assert all(v in legal[k] for k, v in default_kernel_dims(s).items())
+
+
+# ---------------------------------------------------------------------------
+# resource model: closed-form arithmetic against the device constants
+# ---------------------------------------------------------------------------
+def test_vecmul_resources_closed_form():
+    from repro.core.device import TPU_V5E
+
+    L, block, isz = 65536, 1024, 4
+    r = vecmul_resources(L, block, itemsize=isz)
+    assert r.vmem_bytes == 2 * 3 * block * isz  # X,Y,Z double-buffered
+    assert r.vmem_util == pytest.approx(r.vmem_bytes / TPU_V5E.vmem_bytes)
+    t_block = max(block / TPU_V5E.peak_flops_bf16,
+                  3 * block * isz / TPU_V5E.hbm_bw)
+    assert r.est_latency_us == pytest.approx(t_block * (L // block) * 1e6)
+    assert r.est_cycles_per_block == pytest.approx(t_block * 940e6)
+    assert r.mxu_aligned  # vecmul never touches the MXU
+    assert vecmul_resources(4096, 1024).vpu_aligned  # 1024 = 8*128
+    assert not vecmul_resources(4096, 512).vpu_aligned
+
+
+def test_rmsnorm_resources_closed_form():
+    from repro.core.device import TPU_V5E
+
+    rows, d, br, isz = 1024, 256, 128, 2
+    r = rmsnorm_resources(rows, d, br, itemsize=isz)
+    assert r.vmem_bytes == 2 * ((2 * br * d + d) * isz + br * 4)
+    assert r.est_latency_us == pytest.approx(
+        max(3 * br * d / TPU_V5E.peak_flops_bf16,
+            2 * br * d * isz / TPU_V5E.hbm_bw) * (rows // br) * 1e6)
+    assert rmsnorm_resources(64, 256, 32).vpu_aligned  # d % 128 == 0
+    assert not rmsnorm_resources(64, 96, 32).vpu_aligned
+    # ceil-div block count: 173 rows at block 128 -> 2 blocks
+    a = rmsnorm_resources(173, 128, 128)
+    b = rmsnorm_resources(256, 128, 128)
+    assert a.est_latency_us == pytest.approx(b.est_latency_us)
+
+
+def test_flash_resources_closed_form():
+    b, sq, sk, h, kh, d, bq, bk, isz = 2, 128, 128, 4, 4, 64, 64, 64, 4
+    r = flash_attention_resources(b, sq, sk, h, kh, d, bq, bk, itemsize=isz)
+    vmem = (bq * d + 2 * bk * d) * isz + bq * d * 4 + 2 * bq * 4 + bq * bk * 4
+    assert r.vmem_bytes == 2 * vmem
+    assert r.feasible and not r.mxu_aligned  # 64-tiles miss the 128 MXU edge
+    full = flash_attention_resources(1, 256, 256, 8, 8, 128, 128, 128)
+    assert full.mxu_aligned
+    # halving block_q doubles the block count and re-streams the full K/V
+    # window per block: total latency goes UP — the roofline term the DSE
+    # engine actually optimizes against
+    r2 = flash_attention_resources(b, sq, sk, h, kh, d, bq // 2, bk, itemsize=isz)
+    assert r2.est_latency_us > r.est_latency_us
+
+
+def test_ssd_resources_closed_form():
+    b, s, nh, dh, N, chunk, isz = 1, 256, 4, 32, 32, 64, 4
+    r = ssd_scan_resources(b, s, nh, dh, N, chunk, itemsize=isz)
+    vmem = (chunk * nh * dh + chunk * nh + 2 * chunk * N) * isz \
+        + chunk * chunk * nh * 4 + chunk * nh * dh * 4 + nh * dh * N * 4
+    assert r.vmem_bytes == 2 * vmem
+    assert r.feasible
+    assert not r.mxu_aligned and r.vpu_aligned  # chunk=64 < 128; dh % 8 == 0
+
+
+def test_resource_model_feasibility_boundary():
+    """The double-buffered footprint is what is charged against VMEM: a
+    block just under half the budget is feasible, just over is not."""
+    from repro.core.device import TPU_V5E
+
+    half = TPU_V5E.vmem_bytes // 2
+    block_ok = half // (3 * 4)           # 3 f32 buffers, double-buffered
+    assert vecmul_resources(1 << 26, block_ok, itemsize=4).feasible
+    assert not vecmul_resources(1 << 26, block_ok + 1, itemsize=4).feasible
