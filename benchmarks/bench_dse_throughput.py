@@ -35,6 +35,14 @@ DB) — and the benchmark reports each arm's best bound and compiles spent
 (transfer's whole point is matching the cold arm's best design on fewer
 compiles by skipping re-discovery).
 
+``--pareto`` runs the multi-objective front-growth experiment: the same
+candidate set is evaluated serially and after every evaluation the
+benchmark records the Pareto front size and the exact hypervolume it
+covers (objectives min-max normalized over the final row set, reference
+1.1 per dimension). The committed artifact (BENCH_pareto.json via
+``--bench-out``) pins the auditable "how fast did the front fill in"
+curve that the scalar incumbent trajectory cannot express.
+
 ``--straggler`` runs the scheduling experiment: the same tiny grid is
 orchestrated twice with shard 0 deliberately slowed (every evaluation
 sleeps ``--straggler-sleep-s`` seconds, via the straggler prelude) — once
@@ -438,6 +446,85 @@ def _kernels_mode(args, tmp: Path) -> dict:
     }
 
 
+def _pareto_mode(args, mesh, mesh_name, points, tmp: Path) -> dict:
+    """Front growth under multi-objective ranking: evaluate the candidate
+    set serially, then replay the evaluation order recording, after each
+    design, the Pareto front size and the exact hypervolume the front
+    covers. Objectives are min-max normalized over the *final* row set
+    (so every trajectory entry shares one scale and the curve is
+    monotone), with reference point 1.1 per dimension so boundary designs
+    still contribute volume."""
+    from repro.core.cost_db import MAXIMIZE_OBJECTIVES, pareto_rows
+    from repro.core.eval_cache import DryRunCache
+    from repro.core.evaluator import Evaluator
+    from repro.core.pareto import hypervolume
+
+    ev = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / "p"),
+                   cache=DryRunCache(tmp / "cp"), max_workers=1)
+    t0 = time.time()
+    dps = ev.evaluate_batch(args.arch, args.shape, points)
+    wall = time.time() - t0
+
+    final = pareto_rows(dps)
+    if not final:
+        raise SystemExit("--pareto: no eligible rows — every candidate "
+                         "failed or was pruned")
+    keys = sorted({k for _, _, _, objs in final for k in objs})
+
+    def vec(objs):
+        return tuple(
+            float("inf") if objs.get(k) is None
+            else -float(objs[k]) if k in MAXIMIZE_OBJECTIVES
+            else float(objs[k])
+            for k in keys)
+
+    finals = [vec(objs) for _, _, _, objs in final]
+    lo = [min(v[i] for v in finals) for i in range(len(keys))]
+    hi = [max(v[i] for v in finals) for i in range(len(keys))]
+
+    def norm(v):
+        return tuple(0.0 if hi[i] == lo[i] or v[i] == float("inf")
+                     else (v[i] - lo[i]) / (hi[i] - lo[i])
+                     for i in range(len(keys)))
+
+    ref = tuple(1.1 for _ in keys)
+    traj = []
+    for i in range(len(dps)):
+        ranked = pareto_rows(dps[:i + 1])
+        front = [objs for _, rank, _, objs in ranked if rank == 0]
+        hv = hypervolume([norm(vec(o)) for o in front], ref)
+        traj.append({"eval": i + 1, "front_size": len(front),
+                     "hypervolume": round(hv, 6)})
+        print(traj[-1], flush=True)
+
+    front_rows = [(d, crowd, objs) for d, rank, crowd, objs in final
+                  if rank == 0]
+    final_front = [{
+        "point": {k: v for k, v in sorted(d.point.items())
+                  if k != "__key__"},
+        "objectives": {k: objs[k] for k in sorted(objs)},
+        "crowding": None if crowd == float("inf") else round(crowd, 6),
+    } for d, crowd, objs in front_rows]
+    print(f"pareto verdict: {len(final_front)}-point front over "
+          f"{len(keys)} objectives ({', '.join(keys)}) after "
+          f"{len(dps)} evaluations; hypervolume "
+          f"{traj[-1]['hypervolume']:g} in {wall:.1f}s")
+    return {
+        "schema": "pareto-bench-v1",
+        "generated_by": "PYTHONPATH=src python "
+                        "benchmarks/bench_dse_throughput.py --pareto",
+        "config": {"arch": args.arch, "shape": args.shape, "mesh": mesh_name,
+                   "n": len(points), "full": args.full},
+        "objectives": keys,
+        "normalization": {"lo": [_num(x) for x in lo],
+                          "hi": [_num(x) for x in hi],
+                          "ref": 1.1},
+        "trajectory": traj,
+        "final_front": final_front,
+        "wall_s": round(wall, 2),
+    }
+
+
 def _straggler_mode(args, tmp: Path) -> list:
     """Static grid cut vs dynamic queue + stealing under one slow shard.
 
@@ -517,7 +604,8 @@ def main():
                          "PromotionLadder.min_measured_points of them)")
     ap.add_argument("--bench-out", default=None,
                     help="write the committed BENCH JSON here "
-                         "(BENCH_ladder.json for --ladder, BENCH_dse.json "
+                         "(BENCH_ladder.json for --ladder, "
+                         "BENCH_pareto.json for --pareto, BENCH_dse.json "
                          "for the default throughput modes)")
     ap.add_argument("--transfer", action="store_true",
                     help="cold vs transfer-seeded search experiment")
@@ -530,6 +618,10 @@ def main():
     ap.add_argument("--kernels-list", default="rmsnorm,vecmul",
                     help="comma-separated kernel names (or 'all') for "
                          "--kernels; needs >= 2")
+    ap.add_argument("--pareto", action="store_true",
+                    help="multi-objective front-growth experiment: front "
+                         "size + hypervolume after every evaluation (emits "
+                         "BENCH_pareto.json via --bench-out)")
     ap.add_argument("--straggler", action="store_true",
                     help="static --shard cut vs --queue work stealing with "
                          "one deliberately slowed shard")
@@ -604,6 +696,17 @@ def main():
             rows = _transfer_mode(args, mesh, mesh_name, tmp)
             if args.out:
                 Path(args.out).write_text(json.dumps(rows, indent=1))
+            return
+
+        if args.pareto:
+            bench = _pareto_mode(args, mesh, mesh_name, points, tmp)
+            if args.out:
+                Path(args.out).write_text(
+                    json.dumps(bench["trajectory"], indent=1))
+            if args.bench_out:
+                Path(args.bench_out).write_text(
+                    json.dumps(bench, indent=1) + "\n")
+                print(f"bench -> {args.bench_out}")
             return
 
         serial = Evaluator(mesh, mesh_name, artifact_dir=str(tmp / "a"),

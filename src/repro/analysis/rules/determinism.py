@@ -52,7 +52,21 @@ PURE_FUNCTIONS: Dict[str, Set[str]] = {
     # which duplicate measured row is canonical must replay identically
     # on every shard (exactly-once measurement rides on it)
     "src/repro/core/promotion.py": {
-        "plan_promotions", "select_measured_row",
+        "plan_promotions", "plan_front_promotions", "select_measured_row",
+    },
+    # Pareto machinery: dominance ranking, crowding, and the total front
+    # order must be pure functions of the row set — merged leaderboards
+    # are byte-compared across shard permutations
+    "src/repro/core/pareto.py": {
+        "dominates", "front_ranks", "crowding_distances", "front_order",
+        "hypervolume",
+    },
+    # objective extraction + front assembly: one shared code path ranks
+    # kernel rows and plan rows, replayed identically by every shard and
+    # by the merge's leaderboard rebuild
+    "src/repro/core/cost_db.py": {
+        "derive_objectives", "objectives_of", "objective_value",
+        "pareto_rows",
     },
 }
 

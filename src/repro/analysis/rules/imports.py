@@ -38,6 +38,9 @@ _JAX_FREE_FILES = {
     # is supervision; jax enters only through the KernelEvaluator and the
     # conformance harness, both imported lazily inside run_kernel_campaign
     "src/repro/launch/kernel_cell.py",
+    # Pareto dominance/crowding/hypervolume: stdlib-only so the merge CLI
+    # and the leaderboard rebuild can rank fronts on login nodes
+    "src/repro/core/pareto.py",
 }
 _JAX_FREE_PREFIXES = ("benchmarks/", "src/repro/analysis/")
 

@@ -112,6 +112,108 @@ def workload_features(cfg, cell) -> Dict[str, float]:
     }
 
 
+#: objective keys where larger is better — ``pareto_rows`` negates them
+#: when building minimization vectors, and scalarization weights score
+#: them inverted (see ``repro.search.base.weighted_objective``)
+MAXIMIZE_OBJECTIVES = frozenset({"flops_util"})
+
+
+def derive_objectives(metrics: Dict[str, Any]) -> Dict[str, float]:
+    """Objective vector for one row's metric dict, derived from the metrics
+    every evaluator already records (so pre-refactor DB rows rank in Pareto
+    campaigns too). Returns ``{}`` for rows with no bound (errors,
+    rejections, pruned predictions).
+
+    Plan rows: ``bound_s`` (s), ``hbm_bytes`` (HLO HBM traffic),
+    ``vmem_bytes`` (per-device working set, ``per_device_gib * 2**30``),
+    ``flops_util`` (``mfu_at_bound``, maximized). Kernel rows (detected by
+    ``est_latency_us``): ``bound_s``, ``vmem_util`` (resource-model VMEM
+    pressure), ``flops_util`` (mean MXU/VPU alignment, maximized)."""
+    bound = metrics.get("bound_s")
+    if not bound:
+        return {}
+    obj: Dict[str, float] = {"bound_s": float(bound)}
+    if "est_latency_us" in metrics:  # kernel-cell row: resource-model vector
+        if metrics.get("vmem_util") is not None:
+            obj["vmem_util"] = float(metrics["vmem_util"])
+        mxu, vpu = metrics.get("mxu_aligned"), metrics.get("vpu_aligned")
+        if mxu is not None and vpu is not None:
+            obj["flops_util"] = (float(mxu) + float(vpu)) / 2.0
+        return obj
+    if metrics.get("hbm_bytes") is not None:
+        obj["hbm_bytes"] = float(metrics["hbm_bytes"])
+    if metrics.get("per_device_gib") is not None:
+        obj["vmem_bytes"] = float(metrics["per_device_gib"]) * 2**30
+    if metrics.get("mfu_at_bound") is not None:
+        obj["flops_util"] = float(metrics["mfu_at_bound"])
+    return obj
+
+
+def objectives_of(dp: "DataPoint") -> Dict[str, float]:
+    """The row's stored objective vector (``metrics["objectives"]``,
+    stamped by the evaluators) with a derived fallback for rows written
+    before objective storage existed."""
+    stored = dp.metrics.get("objectives")
+    if isinstance(stored, dict) and stored:
+        return {k: float(v) for k, v in stored.items() if v is not None}
+    return derive_objectives(dp.metrics)
+
+
+def objective_value(dp: "DataPoint", key: str = "bound_s",
+                    ) -> Optional[float]:
+    """Shared objective extraction behind every ranking query (``best``,
+    ``winners``, ``pareto_rows``): one code path for plan rows, kernel
+    rows (``kernel:<name>`` archs), and measured rows. Returns None when
+    the row must not rank — measured fidelity (wall clocks measure a
+    different quantity than the modeled bound), failed resource gate
+    (``fits_hbm``), or no such objective on the row."""
+    if dp.fidelity == "measured":
+        return None
+    if not dp.metrics.get("fits_hbm", True):
+        return None
+    if key in dp.metrics:
+        v = dp.metrics.get(key)
+        return None if v is None else v
+    v = objectives_of(dp).get(key)
+    return None if v is None else v
+
+
+def pareto_rows(rows: Sequence["DataPoint"],
+                ) -> List[Tuple["DataPoint", int, float, Dict[str, float]]]:
+    """Deterministic Pareto ordering of one cell's rows: ``(row, rank,
+    crowding, objectives)`` tuples sorted by ``(rank, -crowding, ts,
+    serialized row)``. A pure function of the row *set* — any insertion
+    order (shard merges, queue steals, kill/heal replays) yields the same
+    sequence, which is what keeps merged Pareto leaderboards
+    byte-identical.
+
+    Eligibility matches ``winners``: ``status == "ok"``, dry-run fidelity,
+    ``fits_hbm``, truthy bound; one row per design key (earliest
+    ``(ts, to_json())`` wins, mirroring ``merge_cost_dbs``). Vectors are
+    aligned over the sorted union of objective keys — a missing objective
+    is ``+inf`` (never better), maximize-objectives are negated."""
+    from repro.core.pareto import front_order
+
+    eligible = [d for d in rows
+                if d.status == "ok" and objective_value(d, "bound_s")]
+    by_key: Dict[str, DataPoint] = {}
+    for d in sorted(eligible, key=lambda d: (d.ts or 0.0, d.to_json())):
+        by_key.setdefault(d.point.get("__key__") or d.to_json(), d)
+    deduped = list(by_key.values())
+    if not deduped:
+        return []
+    objs = [objectives_of(d) for d in deduped]
+    keys = sorted({k for o in objs for k in o})
+    vectors = [tuple(
+        float("inf") if o.get(k) is None
+        else -float(o[k]) if k in MAXIMIZE_OBJECTIVES
+        else float(o[k])
+        for k in keys) for o in objs]
+    tiebreaks = [(d.ts or 0.0, d.to_json()) for d in deduped]
+    order, ranks, crowding = front_order(vectors, tiebreaks)
+    return [(deduped[i], ranks[i], crowding[i], objs[i]) for i in order]
+
+
 def _val_row(point_key: str) -> bool:
     """Deterministic ~20% held-out split by point-key hash: ``val`` rows are
     never used for surrogate training, so the gate's calibration error is
@@ -192,12 +294,14 @@ class CostDB:
              mesh: Optional[str] = None) -> Optional[DataPoint]:
         # measured rows carry wall-clock timings, not the full roofline
         # metric set — ranking stays on the dry-run bound, measurement rides
-        # alongside (see build_leaderboard's measured_us column)
-        ok = [d for d in self.query(arch, shape, "ok", mesh)
-              if d.fidelity != "measured"
-              and d.metrics.get(key) is not None
-              and d.metrics.get("fits_hbm", True)]
-        return min(ok, key=lambda d: d.metrics[key]) if ok else None
+        # alongside (see build_leaderboard's measured_us column). The
+        # eligibility/extraction rules live in ``objective_value`` so plan,
+        # kernel, and measured rows share one code path with ``winners``
+        # and ``pareto_rows``.
+        ok = [(objective_value(d, key), d)
+              for d in self.query(arch, shape, "ok", mesh)]
+        ok = [(v, d) for v, d in ok if v is not None]
+        return min(ok, key=lambda vd: vd[0])[1] if ok else None
 
     def keys(self, arch: str, shape: str, *,
              include_pruned: bool = True) -> set:
@@ -233,12 +337,12 @@ class CostDB:
         excluded; an empty list means the cell has no feasible design yet.
         This is the donor query behind cross-workload transfer seeding
         (:class:`repro.search.transfer.TransferSeeded`)."""
-        ok = [d for d in self.query(arch, shape, "ok", mesh)
-              if d.fidelity != "measured"
-              and d.metrics.get("bound_s") and d.metrics.get("fits_hbm", True)]
-        ok.sort(key=lambda d: (d.metrics["bound_s"], d.ts or 0.0))
+        ok = [(objective_value(d), d)
+              for d in self.query(arch, shape, "ok", mesh)]
+        ok = [(v, d) for v, d in ok if v]  # truthy: a zero bound never ranks
+        ok.sort(key=lambda vd: (vd[0], vd[1].ts or 0.0))
         seen, out = set(), []
-        for d in ok:
+        for _, d in ok:
             key = d.point.get("__key__")
             if key is not None and key in seen:
                 continue
@@ -247,6 +351,24 @@ class CostDB:
             if len(out) == k:
                 break
         return out
+
+    def pareto(self, arch: str, shape: str, mesh: Optional[str] = None,
+               ) -> List[Tuple[DataPoint, int, float, Dict[str, float]]]:
+        """The cell's rows in deterministic Pareto order: ``(row, rank,
+        crowding, objectives)`` per unique feasible design, rank 0 = the
+        non-dominated front (see :func:`pareto_rows` for the ordering and
+        byte-stability contract)."""
+        return pareto_rows(self.query(arch, shape, "ok", mesh))
+
+    def front(self, arch: str, shape: str, k: Optional[int] = 3,
+              mesh: Optional[str] = None) -> List[DataPoint]:
+        """The cell's ``k`` leading designs in Pareto front order — the
+        multi-objective analog of :meth:`winners`, and the promotion
+        ladder's head query under ``--objective pareto``: rank-0 boundary
+        points first, so measured execution covers the front's extremes
+        before its interior. ``k=None`` returns every ranked design."""
+        heads = [d for d, _, _, _ in self.pareto(arch, shape, mesh)]
+        return heads if k is None else heads[:k]
 
     def measured_rows(self, arch: Optional[str] = None,
                       shape: Optional[str] = None,

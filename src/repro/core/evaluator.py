@@ -24,7 +24,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import SHAPE_BY_NAME, get_config
-from repro.core.cost_db import DataPoint, workload_features
+from repro.core.cost_db import DataPoint, derive_objectives, workload_features
 from repro.core.design_space import PlanPoint, PlanTemplate, point_to_plan
 from repro.core.device import TPU_V5E, DeviceModel
 from repro.core.eval_cache import DryRunCache
@@ -336,6 +336,9 @@ class Evaluator:
                 max(r["bound_s"], 1e-9) * self.device.peak_flops_bf16),
             "compile_s": rec["compile_s"],
         }
+        # per-row objective storage for Pareto campaigns; built from the
+        # metric dict either way, so cache replays stamp identically
+        metrics["objectives"] = derive_objectives(metrics)
         status = "ok" if fits else "infeasible"
         reason = "" if fits else (
             f"per-device {metrics['per_device_gib']:.1f} GiB exceeds "
@@ -543,6 +546,7 @@ class KernelEvaluator(Evaluator):
             "correct": check["passed"],
             "run_s": rec.get("run_s"),
         }
+        metrics["objectives"] = derive_objectives(metrics)
         if not check["passed"]:
             return DataPoint(
                 **base, status="infeasible",

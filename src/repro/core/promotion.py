@@ -49,6 +49,22 @@ def plan_promotions(heads: Sequence[DataPoint], measured_keys: Set[str], *,
     return chosen
 
 
+def plan_front_promotions(front: Sequence[DataPoint],
+                          measured_keys: Set[str], *, top_k: int,
+                          budget_left: Optional[int] = None,
+                          ) -> List[DataPoint]:
+    """Front-rank promotion plan for ``--objective pareto`` campaigns:
+    the same dedupe/cap/budget contract as :func:`plan_promotions`, but
+    ``front`` comes in deterministic Pareto order (``CostDB.front`` —
+    rank, then crowding, boundary points first), so measured execution
+    covers the front's extremes and spread instead of re-measuring the
+    scalar head's neighborhood. Kept as its own registered entry point so
+    supervisors can dispatch on objective mode without re-deriving the
+    ordering contract."""
+    return plan_promotions(front, measured_keys, top_k=top_k,
+                           budget_left=budget_left)
+
+
 def select_measured_row(rows: Iterable[DataPoint]) -> Optional[DataPoint]:
     """The canonical measured row among duplicates: earliest-wins by
     ``(ts, serialized form)`` — the same total order ``merge_db`` dedupes

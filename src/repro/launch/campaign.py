@@ -40,6 +40,13 @@ Search policy and surrogate gating (see ``repro.search``):
         feed prediction-vs-measured RMSE back into the gate's factor
         annealing; with ``--gate-factor`` set the gate is the
         :class:`~repro.search.ladder.PromotionLadder`
+    --objective {bound_s,pareto}
+        leaderboard ranking mode: ``bound_s`` (default) keeps the scalar
+        bound and produces byte-identical leaderboards to pre-Pareto
+        campaigns; ``pareto`` ranks designs by objective-vector dominance
+        (``repro.core.pareto``), emits each cell's non-dominated front,
+        promotes the measured tier along the front, and adds
+        scalarization-weight arms to the ensemble
 
 Scale-out over processes/hosts — shard the grid, then merge (or let
 ``repro.launch.orchestrator`` spawn, supervise, and merge the shards for
@@ -142,13 +149,17 @@ __all__ = [
     "build_leaderboard", "build_parser", "cell_report_path",
     "make_campaign_mesh", "parse_shard", "read_progress", "resolve_grid",
     "run_campaign", "shard_cells", "validate_gate_args",
-    "validate_measure_args", "write_json_atomic", "write_progress",
+    "validate_measure_args", "validate_objective_args", "write_json_atomic",
+    "write_progress",
 ]
 
 PROGRESS_FILE = "progress.json"
 MESH_CHOICES = ("tiny", "small", "pod", "multipod")
 STRATEGY_CHOICES = ("greedy", "llm", "anneal", "evolve", "transfer",
                     "ensemble", "ensemble+transfer")
+#: leaderboard ranking modes: the scalar bound (byte-compatible with every
+#: pre-Pareto campaign) or the dominance-ranked multi-objective front
+OBJECTIVE_CHOICES = ("bound_s", "pareto")
 
 
 def cell_report_path(out_dir: Path, arch: str, shape: str, mesh_name: str) -> Path:
@@ -216,18 +227,39 @@ def _cell_report(report) -> Dict:
     }
 
 
-def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
+def build_leaderboard(db, cell_rows: Sequence[Dict],
+                      objective: str = "bound_s") -> List[Dict]:
     """Rank completed cells by their best achieved bound (fastest first);
     cells with no feasible design sink to the bottom with their failure
     mode preserved. Cells with tier-2 rows report ``measured_us`` (and the
     backend that produced it) alongside the analytical bound, preferring
     the measurement of the cell's best design, so modeled-vs-real error is
-    visible per row; ranking stays on the bound."""
+    visible per row; ranking stays on the bound.
+
+    ``objective="pareto"`` ranks each cell's designs by objective-vector
+    dominance instead (``CostDB.pareto``): the representative design
+    becomes the deterministic front head, and every row gains
+    ``objective`` / ``front`` (the rank-0 non-dominated set, each entry
+    ``{point, objectives, crowding}`` with boundary ``inf`` crowding
+    serialized as null) / ``front_size``. The default scalar mode adds no
+    keys and reorders nothing — its output is byte-identical to
+    pre-Pareto leaderboards, which CI pins against a committed fixture."""
     from repro.core.promotion import select_measured_row  # jax-free
 
+    err = validate_objective_args(objective)
+    if err:
+        raise ValueError(err)
+    pareto = objective == "pareto"
     rows = []
     for c in cell_rows:
-        best = db.best(c["arch"], c["shape"], mesh=c["mesh"])
+        front = []
+        if pareto:
+            ranked = db.pareto(c["arch"], c["shape"], mesh=c["mesh"])
+            front = [(d, crowd, objs) for d, rank, crowd, objs in ranked
+                     if rank == 0]
+            best = ranked[0][0] if ranked else None
+        else:
+            best = db.best(c["arch"], c["shape"], mesh=c["mesh"])
         feasible = best is not None
         if best is None:
             # negative datapoints still rank: the fastest *infeasible* design
@@ -263,6 +295,18 @@ def build_leaderboard(db, cell_rows: Sequence[Dict]) -> List[Dict]:
                 best_point={k: v for k, v in sorted(best.point.items())
                             if k != "__key__"},
             )
+        if pareto:
+            row["objective"] = "pareto"
+            # rank-0 entries in deterministic front order; inf crowding
+            # (boundary points) serializes as null — the file must stay
+            # strict-JSON parseable by any reader
+            row["front"] = [
+                {"point": {k: v for k, v in sorted(d.point.items())
+                           if k != "__key__"},
+                 "objectives": {k: objs[k] for k in sorted(objs)},
+                 "crowding": (None if crowd == float("inf") else crowd)}
+                for d, crowd, objs in front]
+            row["front_size"] = len(row["front"])
         measured = [d for d in db.measured_rows(c["arch"], c["shape"],
                                                 mesh=c["mesh"])
                     if d.status == "ok"]
@@ -322,6 +366,17 @@ def validate_measure_args(measure_top_k: int, measure_runs: int,
     return None
 
 
+def validate_objective_args(objective: str) -> Optional[str]:
+    """The objective-mode CLI constraint (returns an error string, or
+    ``None`` when valid) — shared by the campaign, dse, merge, and
+    orchestrator CLIs and by ``run_campaign``/``build_leaderboard``'s API
+    validation, mirroring :func:`validate_gate_args`."""
+    if objective not in OBJECTIVE_CHOICES:
+        return (f"objective must be one of {OBJECTIVE_CHOICES}, "
+                f"got {objective!r}")
+    return None
+
+
 def write_progress(out_dir: Path, payload: Dict) -> Path:
     """Atomically replace ``progress.json`` under ``out_dir`` (see
     :func:`write_json_atomic`) so a concurrently-polling supervisor never
@@ -363,6 +418,7 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
                  gate_min_factor: Optional[float] = None,
                  measure_top_k: int = 0, measure_runs: int = 3,
                  measure_budget: Optional[int] = None,
+                 objective: str = "bound_s",
                  shard: Optional[Tuple[int, int]] = None,
                  queue: Optional[Path | str] = None,
                  queue_owner: Optional[str] = None,
@@ -394,6 +450,9 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
                                         measure_budget)
     if measure_err:
         raise ValueError(measure_err)
+    objective_err = validate_objective_args(objective)
+    if objective_err:
+        raise ValueError(objective_err)
 
     from repro.core.cost_db import CostDB, featurize
     from repro.core.cost_model import CostModel
@@ -404,7 +463,7 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     from repro.core.llm_stack import LLMStack
     from repro.core.loop import DSELoop
     from repro.models import model as M
-    from repro.core.promotion import plan_promotions
+    from repro.core.promotion import plan_front_promotions, plan_promotions
     from repro.search import PromotionLadder, SurrogateGate, make_strategy
 
     out_dir = Path(out_dir)
@@ -525,15 +584,24 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
         ``plan_promotions`` dedupes them to nothing; on a stolen/re-leased
         cell the shard-local DB lacks the rows but the shared measured
         cache replays the timings, appending byte-identical rows that the
-        merge dedupes to one."""
+        merge dedupes to one. Under ``objective="pareto"`` the heads come
+        in Pareto front order (``CostDB.front``) so measured execution
+        covers the front, not just the scalar head."""
         if measure_top_k <= 0:
             return
-        heads = db.winners(arch, shape, k=measure_top_k, mesh=mesh_name)
         measured_keys = {d.point.get("__key__")
                          for d in db.measured_rows(arch, shape,
                                                    mesh=mesh_name)}
-        promos = plan_promotions(heads, measured_keys, top_k=measure_top_k,
-                                 budget_left=mstate["budget_left"])
+        if objective == "pareto":
+            front = db.front(arch, shape, k=measure_top_k, mesh=mesh_name)
+            promos = plan_front_promotions(front, measured_keys,
+                                           top_k=measure_top_k,
+                                           budget_left=mstate["budget_left"])
+        else:
+            heads = db.winners(arch, shape, k=measure_top_k, mesh=mesh_name)
+            promos = plan_promotions(heads, measured_keys,
+                                     top_k=measure_top_k,
+                                     budget_left=mstate["budget_left"])
         for head in promos:
             progress("measuring", cell=f"{arch}/{shape}")
             point = PlanPoint(dims={k: v for k, v in head.point.items()
@@ -607,7 +675,8 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
         t_cell = time.time()
         loop = DSELoop(evaluator=evaluator, db=db, llm_stack=stack,
                        cost_model=cost_model, gate=gate,
-                       strategy=make_strategy(strategy, llm_stack=stack))
+                       strategy=make_strategy(strategy, llm_stack=stack,
+                                              objective=objective))
         report = loop.run(arch, shape, iterations=iterations,
                           eval_budget=budget, verbose=verbose,
                           heartbeat=cell_heartbeat(arch, shape))
@@ -659,7 +728,7 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
     # sorted rows -> deterministic leaderboard tie order, and the exact
     # order merge_db reconstructs from report files after a sharded run
     cell_rows.sort(key=lambda c: (c["arch"], c["shape"], c["mesh"]))
-    leaderboard = build_leaderboard(db, cell_rows)
+    leaderboard = build_leaderboard(db, cell_rows, objective=objective)
     # atomic like every other campaign artifact: a supervisor SIGKILL (or a
     # reader racing the write) must never see a torn leaderboard
     lb_path = write_json_atomic(out_dir / "leaderboard.json", leaderboard)
@@ -720,6 +789,7 @@ def run_campaign(archs: Sequence[str], shapes: Sequence[str], mesh, mesh_name: s
         "queue_owner": owner,
         "stolen": qstats["stolen"] if q is not None else None,
         "strategy": strategy,
+        "objective": objective,
         "wall_s": round(time.time() - t0, 1),
         # run-local work vs cumulative totals: same contract as the
         # heartbeat (a resumed attempt reports only what it actually did)
@@ -798,6 +868,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--measure-budget", type=int, default=None, metavar="M",
                     help="campaign-wide cap on tier-2 measurements "
                          "(default: unlimited; requires --measure-top-k)")
+    ap.add_argument("--objective", default="bound_s",
+                    choices=list(OBJECTIVE_CHOICES),
+                    help="leaderboard ranking: 'bound_s' keeps the scalar "
+                         "bound (byte-compatible with pre-Pareto "
+                         "leaderboards); 'pareto' ranks each cell's designs "
+                         "by objective-vector dominance, emits the "
+                         "non-dominated front per cell, promotes the "
+                         "measured tier along the front, and arms the "
+                         "ensemble with scalarization-weight strategies")
     ap.add_argument("--shard", default=None, metavar="I/N",
                     help="run only cells i, i+n, i+2n, ... of the sorted "
                          "arch x shape grid (merge shards with "
@@ -861,6 +940,9 @@ def main():
                                         args.measure_budget)
     if measure_err:
         ap.error(measure_err)
+    objective_err = validate_objective_args(args.objective)
+    if objective_err:
+        ap.error(objective_err)
     if args.queue and args.shard:
         ap.error("--queue and --shard are mutually exclusive")
     if args.queue_lease_s <= 0:
@@ -898,6 +980,7 @@ def main():
             measure_top_k=args.measure_top_k,
             measure_runs=args.measure_runs,
             measure_budget=args.measure_budget,
+            objective=args.objective,
             shard=shard, queue=args.queue, queue_owner=args.queue_owner,
             queue_lease_s=args.queue_lease_s,
             queue_poll_s=args.queue_poll_s, resume=not args.force)
@@ -924,6 +1007,7 @@ def main():
                  measure_top_k=args.measure_top_k,
                  measure_runs=args.measure_runs,
                  measure_budget=args.measure_budget,
+                 objective=args.objective,
                  shard=shard, queue=args.queue, queue_owner=args.queue_owner,
                  queue_lease_s=args.queue_lease_s,
                  queue_poll_s=args.queue_poll_s, resume=not args.force)

@@ -46,12 +46,19 @@ def build_parser() -> argparse.ArgumentParser:
                     help="disable the content-addressed dry-run cache")
     ap.add_argument("--approve", action="store_true",
                     help="human-in-the-loop: confirm each accepted design")
-    from repro.launch.campaign import STRATEGY_CHOICES  # light import, no jax
+    from repro.launch.campaign import (OBJECTIVE_CHOICES,  # light, no jax
+                                       STRATEGY_CHOICES)
 
     ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
     ap.add_argument("--strategy", default="ensemble",
                     choices=list(STRATEGY_CHOICES),
                     help="search strategy (see repro.search)")
+    ap.add_argument("--objective", default="bound_s",
+                    choices=list(OBJECTIVE_CHOICES),
+                    help="ranking mode: scalar bound_s (default) or "
+                         "multi-objective pareto — the strategy scalarizes "
+                         "along weight arms and tier-2 promotions walk the "
+                         "dominance front instead of the scalar head")
     ap.add_argument("--gate-factor", type=float, default=None,
                     help="enable the surrogate gate: prune candidates whose "
                          "predicted bound is > FACTOR x the incumbent "
@@ -78,7 +85,8 @@ def main():
     ap = build_parser()
     args = ap.parse_args()
     from repro.launch.campaign import (validate_gate_args,  # no jax
-                                       validate_measure_args)
+                                       validate_measure_args,
+                                       validate_objective_args)
 
     gate_err = validate_gate_args(args.gate_factor, args.gate_min_factor)
     if gate_err:
@@ -87,6 +95,9 @@ def main():
                                         None)
     if measure_err:
         ap.error(measure_err)
+    objective_err = validate_objective_args(args.objective)
+    if objective_err:
+        ap.error(objective_err)
 
     if args.space == "kernels":
         _run_kernel_cell(ap, args)
@@ -141,7 +152,8 @@ def main():
             if args.gate_factor is not None else None)
     loop = DSELoop(evaluator=evaluator, db=db,
                    llm_stack=stack, cost_model=cost_model, approve_fn=approve,
-                   strategy=make_strategy(args.strategy, llm_stack=stack),
+                   strategy=make_strategy(args.strategy, llm_stack=stack,
+                                          objective=args.objective),
                    gate=gate)
     report = loop.run(args.arch, args.shape, iterations=args.iterations,
                       eval_budget=args.budget)
@@ -153,15 +165,23 @@ def main():
 
     if args.measure_top_k > 0:
         from repro.core.design_space import PlanPoint
-        from repro.core.promotion import plan_promotions
+        from repro.core.promotion import (plan_front_promotions,
+                                          plan_promotions)
 
-        heads = db.winners(args.arch, args.shape, k=args.measure_top_k,
-                           mesh=mesh_name)
         measured_keys = {d.point.get("__key__") for d in
                          db.measured_rows(args.arch, args.shape,
                                           mesh=mesh_name)}
-        for head in plan_promotions(heads, measured_keys,
-                                    top_k=args.measure_top_k):
+        if args.objective == "pareto":
+            front = db.front(args.arch, args.shape, k=args.measure_top_k,
+                             mesh=mesh_name)
+            promos = plan_front_promotions(front, measured_keys,
+                                           top_k=args.measure_top_k)
+        else:
+            heads = db.winners(args.arch, args.shape, k=args.measure_top_k,
+                               mesh=mesh_name)
+            promos = plan_promotions(heads, measured_keys,
+                                     top_k=args.measure_top_k)
+        for head in promos:
             point = PlanPoint(dims={k: v for k, v in head.point.items()
                                     if k != "__key__"})
             dp = evaluator.measure(args.arch, args.shape, point,
@@ -226,7 +246,7 @@ def _run_kernel_cell(ap, args):
     from repro.core.design_space import PlanPoint
     from repro.core.eval_cache import DryRunCache
     from repro.core.evaluator import KernelEvaluator
-    from repro.core.promotion import plan_promotions
+    from repro.core.promotion import plan_front_promotions, plan_promotions
     from repro.launch.kernel_cell import _explore_kernel_cell
     from repro.search import PromotionLadder, SurrogateGate, make_strategy
 
@@ -245,7 +265,8 @@ def _run_kernel_cell(ap, args):
             if args.gate_factor is not None else None)
     report = _explore_kernel_cell(
         arch, args.shape, evaluator=evaluator, db=db, cost_model=cost_model,
-        gate=gate, strategy=make_strategy(args.strategy),
+        gate=gate, strategy=make_strategy(args.strategy,
+                                          objective=args.objective),
         iterations=args.iterations, budget=args.budget, seed=0)
     if cache is not None:
         print(f"dry-run cache: {cache.stats()}")
@@ -255,13 +276,20 @@ def _run_kernel_cell(ap, args):
               f"val_rmse={gate.last_rmse:.3f} (n={gate.last_val_n})")
 
     if args.measure_top_k > 0:
-        heads = db.winners(arch, args.shape, k=args.measure_top_k,
-                           mesh=KERNEL_MESH_NAME)
         measured_keys = {d.point.get("__key__") for d in
                          db.measured_rows(arch, args.shape,
                                           mesh=KERNEL_MESH_NAME)}
-        for head in plan_promotions(heads, measured_keys,
-                                    top_k=args.measure_top_k):
+        if args.objective == "pareto":
+            front = db.front(arch, args.shape, k=args.measure_top_k,
+                             mesh=KERNEL_MESH_NAME)
+            promos = plan_front_promotions(front, measured_keys,
+                                           top_k=args.measure_top_k)
+        else:
+            heads = db.winners(arch, args.shape, k=args.measure_top_k,
+                               mesh=KERNEL_MESH_NAME)
+            promos = plan_promotions(heads, measured_keys,
+                                     top_k=args.measure_top_k)
+        for head in promos:
             point = PlanPoint(dims={k: v for k, v in head.point.items()
                                     if k != "__key__"})
             dp = evaluator.measure(arch, args.shape, point,

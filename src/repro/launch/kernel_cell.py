@@ -48,7 +48,7 @@ from repro.core.kernel_space import (KERNEL_NAMES, KERNEL_SHAPES,
 from repro.launch.campaign import (_injected_crash_hook, build_leaderboard,
                                    cell_report_path, read_progress,
                                    validate_gate_args, validate_measure_args,
-                                   write_progress)
+                                   validate_objective_args, write_progress)
 from repro.launch.ioutil import write_json_atomic
 from repro.launch.scheduler import CellQueue, sanitize_owner
 
@@ -126,6 +126,7 @@ def run_kernel_campaign(kernels: Sequence[str], shapes: Sequence[str], *,
                         gate_min_factor: Optional[float] = None,
                         measure_top_k: int = 0, measure_runs: int = 3,
                         measure_budget: Optional[int] = None,
+                        objective: str = "bound_s",
                         db=None, resume: bool = True,
                         shard: Optional[Tuple[int, int]] = None,
                         queue: Optional[Path | str] = None,
@@ -158,13 +159,16 @@ def run_kernel_campaign(kernels: Sequence[str], shapes: Sequence[str], *,
                                         measure_budget)
     if measure_err:
         raise ValueError(measure_err)
+    objective_err = validate_objective_args(objective)
+    if objective_err:
+        raise ValueError(objective_err)
 
     from repro.core.cost_db import CostDB, featurize
     from repro.core.cost_model import CostModel
     from repro.core.design_space import PlanPoint
     from repro.core.eval_cache import DryRunCache
     from repro.core.evaluator import KernelEvaluator
-    from repro.core.promotion import plan_promotions
+    from repro.core.promotion import plan_front_promotions, plan_promotions
     from repro.search import PromotionLadder, SurrogateGate, make_strategy
 
     mesh_name = KERNEL_MESH_NAME
@@ -258,12 +262,19 @@ def run_kernel_campaign(kernels: Sequence[str], shapes: Sequence[str], *,
         gate runs again on the executed output)."""
         if measure_top_k <= 0:
             return
-        heads = db.winners(arch, shape, k=measure_top_k, mesh=mesh_name)
         measured_keys = {d.point.get("__key__")
                          for d in db.measured_rows(arch, shape,
                                                    mesh=mesh_name)}
-        promos = plan_promotions(heads, measured_keys, top_k=measure_top_k,
-                                 budget_left=mstate["budget_left"])
+        if objective == "pareto":
+            front = db.front(arch, shape, k=measure_top_k, mesh=mesh_name)
+            promos = plan_front_promotions(front, measured_keys,
+                                           top_k=measure_top_k,
+                                           budget_left=mstate["budget_left"])
+        else:
+            heads = db.winners(arch, shape, k=measure_top_k, mesh=mesh_name)
+            promos = plan_promotions(heads, measured_keys,
+                                     top_k=measure_top_k,
+                                     budget_left=mstate["budget_left"])
         for head in promos:
             progress("measuring", cell=f"{arch}/{shape}")
             point = PlanPoint(dims={k: v for k, v in head.point.items()
@@ -313,7 +324,8 @@ def run_kernel_campaign(kernels: Sequence[str], shapes: Sequence[str], *,
         t_cell = time.time()
         report = _explore_kernel_cell(
             arch, shape, evaluator=evaluator, db=db, cost_model=cost_model,
-            gate=gate, strategy=make_strategy(strategy, seed=seed),
+            gate=gate, strategy=make_strategy(strategy, seed=seed,
+                                              objective=objective),
             iterations=iterations, budget=budget, seed=seed,
             heartbeat=lambda info: progress(
                 "running", cell=f"{arch}/{shape}",
@@ -356,7 +368,7 @@ def run_kernel_campaign(kernels: Sequence[str], shapes: Sequence[str], *,
                     f"(stolen/reclaimed) — results kept, merge dedupes")
 
     cell_rows.sort(key=lambda c: (c["arch"], c["shape"], c["mesh"]))
-    leaderboard = build_leaderboard(db, cell_rows)
+    leaderboard = build_leaderboard(db, cell_rows, objective=objective)
     lb_path = write_json_atomic(out_dir / "leaderboard.json", leaderboard)
 
     def _num(x):
@@ -409,6 +421,7 @@ def run_kernel_campaign(kernels: Sequence[str], shapes: Sequence[str], *,
         "queue_owner": owner,
         "stolen": qstats["stolen"] if q is not None else None,
         "strategy": strategy,
+        "objective": objective,
         "wall_s": round(time.time() - t0, 1),
         "evaluations": evals - evals0,
         "compiles": evaluator.compile_count - compiles0,

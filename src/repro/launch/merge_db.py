@@ -39,7 +39,8 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_db import CostDB, DataPoint
-from repro.launch.campaign import build_leaderboard
+from repro.launch.campaign import (OBJECTIVE_CHOICES, build_leaderboard,
+                                   validate_objective_args)
 from repro.launch.ioutil import write_json_atomic
 
 
@@ -149,9 +150,13 @@ def merge_caches(shard_dirs: Sequence[Path], out_dir: Path,
     return n
 
 
-def rebuild_leaderboard(out_dir: Path) -> Path:
+def rebuild_leaderboard(out_dir: Path, objective: str = "bound_s") -> Path:
     """Reconstruct cell rows from the merged report set and rank them with
-    the same ``build_leaderboard`` + serialization as ``run_campaign``."""
+    the same ``build_leaderboard`` + serialization as ``run_campaign``.
+    ``objective="pareto"`` rebuilds dominance-ranked fronts instead of the
+    scalar heads — because ``pareto_rows`` is a pure function of the merged
+    row *set* (dedupe + canonical front ordering), the rebuilt front is
+    byte-identical under any shard permutation, same as scalar mode."""
     rows: List[Dict] = []
     for f in (out_dir / "reports").glob("*.json"):
         parts = f.stem.split("__")
@@ -168,12 +173,13 @@ def rebuild_leaderboard(out_dir: Path) -> Path:
     # same serialization as run_campaign, and atomic for the same reason:
     # a reader (or a killed merge) must never see a torn leaderboard
     return write_json_atomic(out_dir / "leaderboard.json",
-                             build_leaderboard(db, rows))
+                             build_leaderboard(db, rows, objective=objective))
 
 
 def merge(shard_dirs: Sequence[Path | str], out_dir: Path | str,
           verbose: bool = True,
-          extra_cache_dirs: Optional[Sequence[Path | str]] = None) -> Dict:
+          extra_cache_dirs: Optional[Sequence[Path | str]] = None,
+          objective: str = "bound_s") -> Dict:
     """Fold the shard dirs into ``out_dir`` (DB dedup + reports + caches +
     rebuilt leaderboard, see module docstring); returns the merge summary.
     ``extra_cache_dirs`` folds additional content-addressed cache dirs in
@@ -184,6 +190,9 @@ def merge(shard_dirs: Sequence[Path | str], out_dir: Path | str,
     any permutation of ``shard_dirs`` (row dedup ties break on serialized
     content, report collisions on (mtime, content)) — tier-1
     property-tests both."""
+    err = validate_objective_args(objective)
+    if err:
+        raise ValueError(err)
     shard_dirs = [Path(s) for s in shard_dirs]
     out_dir = Path(out_dir)
     for sd in shard_dirs:
@@ -196,7 +205,7 @@ def merge(shard_dirs: Sequence[Path | str], out_dir: Path | str,
     reports = merge_reports(shard_dirs, out_dir)
     cached = merge_caches(shard_dirs, out_dir,
                           [Path(c) for c in (extra_cache_dirs or [])])
-    lb_path = rebuild_leaderboard(out_dir)
+    lb_path = rebuild_leaderboard(out_dir, objective=objective)
     summary = {
         "shards": [str(s) for s in shard_dirs],
         "out": str(out_dir),
@@ -225,6 +234,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "QUEUE/dryrun_cache or QUEUE/measured_cache; a dir "
                          "named measured_cache routes to the measured "
                          "union); repeatable")
+    ap.add_argument("--objective", choices=list(OBJECTIVE_CHOICES),
+                    default="bound_s",
+                    help="ranking mode for the rebuilt leaderboard: scalar "
+                         "bound_s heads (default) or dominance-ranked "
+                         "pareto fronts")
     return ap
 
 
@@ -233,7 +247,8 @@ def main():
     (FileNotFoundError/ValueError) on missing shard dirs or ``--out``
     aliasing a shard dir."""
     args = build_parser().parse_args()
-    merge(args.shards, args.out, extra_cache_dirs=args.extra_cache)
+    merge(args.shards, args.out, extra_cache_dirs=args.extra_cache,
+          objective=args.objective)
 
 
 if __name__ == "__main__":

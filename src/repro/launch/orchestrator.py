@@ -75,9 +75,11 @@ import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.launch.campaign import (MESH_CHOICES, STRATEGY_CHOICES,
-                                   resolve_grid, shard_cells,
-                                   validate_gate_args, validate_measure_args)
+from repro.launch.campaign import (MESH_CHOICES, OBJECTIVE_CHOICES,
+                                   STRATEGY_CHOICES, resolve_grid,
+                                   shard_cells, validate_gate_args,
+                                   validate_measure_args,
+                                   validate_objective_args)
 from repro.launch.executors import (EXECUTOR_CHOICES, ShardExecutor,
                                     ShardProc, make_executor)
 from repro.launch.ioutil import write_json_atomic
@@ -118,7 +120,8 @@ def build_shard_cmd(i: int, shards: int, shard_dir: Path, *, archs: str,
                     measure_budget: Optional[int] = None,
                     queue_dir: Optional[Path] = None,
                     queue_lease_s: float = 300.0,
-                    space: str = "plans") -> List[str]:
+                    space: str = "plans",
+                    objective: str = "bound_s") -> List[str]:
     """The exact ``repro.launch.campaign`` argv for shard ``i`` of
     ``shards`` — one place, so supervisor restarts always replay the
     original command (campaign resume makes that idempotent). With
@@ -136,6 +139,9 @@ def build_shard_cmd(i: int, shards: int, shard_dir: Path, *, archs: str,
         # appended only for non-default spaces: plan-campaign argv stays
         # byte-identical to what pre---space supervisors replayed
         cmd += ["--space", space]
+    if objective != "bound_s":
+        # same append-only-non-default contract as --space
+        cmd += ["--objective", objective]
     if queue_dir is not None:
         # absolute: the queue is the shards' rendezvous, and remote
         # executors assume one shared-filesystem path on every host
@@ -270,6 +276,7 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                      remote_repo: Optional[str] = None,
                      remote_python: str = "python3",
                      space: str = "plans",
+                     objective: str = "bound_s",
                      verbose: bool = True) -> Dict:
     """Run the full supervised campaign; returns the summary dict (also
     written to ``OUT/summary.json``).
@@ -309,6 +316,9 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
         grid_archs, grid_shapes = resolve_kernel_grid(archs, shapes)
     else:
         grid_archs, grid_shapes = resolve_grid(archs, shapes)
+    objective_err = validate_objective_args(objective)
+    if objective_err:
+        raise ValueError(objective_err)
     if shards < 1:
         raise ValueError(f"need shards >= 1, got {shards}")
     if inject_kill is not None and not (0 <= inject_kill[0] < shards):
@@ -374,7 +384,8 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
                               measure_runs=measure_runs,
                               measure_budget=measure_budget,
                               queue_dir=q.root if q is not None else None,
-                              queue_lease_s=queue_lease_s, space=space)
+                              queue_lease_s=queue_lease_s, space=space,
+                              objective=objective)
         states.append(ShardProc(index=i, out_dir=sd, cmd=cmd, env=env))
 
     t0 = time.time()
@@ -483,11 +494,13 @@ def run_orchestrator(*, archs: str, shapes: str, shards: int,
 
     merged = merge([s.out_dir for s in states], out_dir, verbose=verbose,
                    extra_cache_dirs=([q.cache_dir, q.measured_dir]
-                                     if q is not None else None))
+                                     if q is not None else None),
+                   objective=objective)
     queue_cells = q.counts() if q is not None else None
     summary = {
         "out": str(out_dir),
         "shards": shards,
+        "objective": objective,
         "executor": ex.name,
         "hosts": list(hosts) if hosts else None,
         # queue mode counts DONE tickets, not the sum of shard-local
@@ -564,6 +577,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-shard cap on tier-2 measurements (requires "
                          "--measure-top-k)")
     ap.add_argument("--llm", default="mock", choices=["mock", "ollama"])
+    ap.add_argument("--objective", default="bound_s",
+                    choices=list(OBJECTIVE_CHOICES),
+                    help="ranking mode, forwarded to every shard and to the "
+                         "final merge: scalar bound_s heads (default, "
+                         "byte-identical to pre-pareto leaderboards) or "
+                         "dominance-ranked pareto fronts over the full "
+                         "objective vector")
     ap.add_argument("--queue", action="store_true",
                     help="dynamic scheduling: seed a crash-safe cell queue "
                          "under OUT/queue/ and let shards pull leases from "
@@ -633,6 +653,9 @@ def main():
                                         args.measure_budget)
     if measure_err:
         ap.error(measure_err)
+    objective_err = validate_objective_args(args.objective)
+    if objective_err:
+        ap.error(objective_err)
     if args.shards < 1:
         ap.error(f"--shards must be >= 1, got {args.shards}")
     if args.executor == "ssh" and not args.hosts:
@@ -688,7 +711,7 @@ def main():
                          remote_root=args.remote_root,
                          remote_repo=args.remote_repo,
                          remote_python=args.remote_python,
-                         space=args.space)
+                         space=args.space, objective=args.objective)
     except (RuntimeError, ValueError) as e:
         print(f"[orchestrator] FAILED: {e}", file=sys.stderr)
         sys.exit(1)

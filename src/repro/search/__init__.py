@@ -8,9 +8,10 @@ builds any registered strategy by name — ``--strategy`` on the ``dse``,
 from __future__ import annotations
 
 from repro.search.annealing import SimulatedAnnealing
-from repro.search.base import (Candidate, SearchState, SearchStrategy,
-                               best_negative, bound_of, point_of,
-                               rank_candidates, select_candidates)
+from repro.search.base import (WEIGHT_ARMS, Candidate, SearchState,
+                               SearchStrategy, best_negative, bound_of,
+                               point_of, rank_candidates, select_candidates,
+                               weighted_objective)
 from repro.search.ensemble import Ensemble
 from repro.search.evolutionary import Evolutionary
 from repro.search.gate import SurrogateGate
@@ -24,7 +25,8 @@ STRATEGIES = ("greedy", "llm", "anneal", "evolve", "transfer", "ensemble",
               "ensemble+transfer")
 
 
-def make_strategy(name: str, *, llm_stack=None, seed: int = 0) -> SearchStrategy:
+def make_strategy(name: str, *, llm_stack=None, seed: int = 0,
+                  objective: str = "bound_s") -> SearchStrategy:
     """Build a fresh strategy instance (strategies carry per-cell state —
     campaigns must construct one per (arch, shape, mesh) cell).
 
@@ -32,8 +34,23 @@ def make_strategy(name: str, *, llm_stack=None, seed: int = 0) -> SearchStrategy
     campaigns merge byte-for-byte; ``"ensemble+transfer"`` adds the
     cross-workload :class:`~repro.search.transfer.TransferSeeded` member,
     trading that byte-reproducibility for warm starts from similar cells.
-    Raises ``ValueError`` for an unknown name or for ``"llm"`` /
-    ``"ensemble*"``-with-LLM without an ``llm_stack``."""
+
+    ``objective="pareto"`` makes proposals cover the front instead of
+    chasing one scalar head: the single-walker strategies (``anneal``,
+    ``evolve``) scalarize through the ``balanced``
+    :data:`~repro.search.base.WEIGHT_ARMS` vector, and the ensembles gain
+    weight-armed members (``anneal@memory``, ``evolve@latency``, ...) so
+    the bandit learns *which region of the front* pays — each arm's name
+    rides into DB provenance (``search:anneal@memory``), keeping credit
+    reconstruction offline-exact. ``objective="bound_s"`` (default) is
+    bit-for-bit today's behavior. Raises ``ValueError`` for an unknown
+    name or for ``"llm"`` / ``"ensemble*"``-with-LLM without an
+    ``llm_stack``."""
+    if objective not in ("bound_s", "pareto"):
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"have ('bound_s', 'pareto')")
+    pareto = objective == "pareto"
+    balanced = WEIGHT_ARMS["balanced"] if pareto else None
     if name == "greedy":
         return GreedyNeighborhood(seed=seed)
     if name == "llm":
@@ -41,16 +58,31 @@ def make_strategy(name: str, *, llm_stack=None, seed: int = 0) -> SearchStrategy
             raise ValueError("strategy 'llm' needs llm_stack=")
         return LLMGuided(llm_stack)
     if name == "anneal":
-        return SimulatedAnnealing(seed=seed)
+        return SimulatedAnnealing(seed=seed, weights=balanced)
     if name == "evolve":
-        return Evolutionary(seed=seed)
+        return Evolutionary(seed=seed, weights=balanced)
     if name == "transfer":
         return TransferSeeded(seed=seed)
     if name in ("ensemble", "ensemble+transfer"):
         members: list = [GreedyNeighborhood(seed=seed)]
         if llm_stack is not None:
             members.append(LLMGuided(llm_stack))
-        members += [SimulatedAnnealing(seed=seed), Evolutionary(seed=seed)]
+        members += [SimulatedAnnealing(seed=seed, weights=balanced),
+                    Evolutionary(seed=seed, weights=balanced)]
+        if pareto:
+            # weight-armed walkers: distinct deterministic seed offsets so
+            # each arm explores its own trajectory; names carry the arm
+            # into provenance for the bandit's offline credit rebuild
+            members += [
+                SimulatedAnnealing(name="anneal@latency", seed=seed + 11,
+                                   weights=WEIGHT_ARMS["latency"]),
+                SimulatedAnnealing(name="anneal@memory", seed=seed + 12,
+                                   weights=WEIGHT_ARMS["memory"]),
+                Evolutionary(name="evolve@latency", seed=seed + 13,
+                             weights=WEIGHT_ARMS["latency"]),
+                Evolutionary(name="evolve@memory", seed=seed + 14,
+                             weights=WEIGHT_ARMS["memory"]),
+            ]
         if name == "ensemble+transfer":
             members.append(TransferSeeded(seed=seed))
         return Ensemble(members)
@@ -59,9 +91,9 @@ def make_strategy(name: str, *, llm_stack=None, seed: int = 0) -> SearchStrategy
 
 __all__ = [
     "Candidate", "SearchState", "SearchStrategy", "STRATEGIES",
-    "GreedyNeighborhood", "LLMGuided", "SimulatedAnnealing", "Evolutionary",
-    "TransferSeeded", "Ensemble", "SurrogateGate", "PromotionLadder",
-    "plan_promotions", "select_measured_row", "make_strategy",
-    "best_negative", "bound_of", "point_of", "rank_candidates",
-    "select_candidates",
+    "WEIGHT_ARMS", "GreedyNeighborhood", "LLMGuided", "SimulatedAnnealing",
+    "Evolutionary", "TransferSeeded", "Ensemble", "SurrogateGate",
+    "PromotionLadder", "plan_promotions", "select_measured_row",
+    "make_strategy", "best_negative", "bound_of", "point_of",
+    "rank_candidates", "select_candidates", "weighted_objective",
 ]

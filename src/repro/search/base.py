@@ -16,14 +16,63 @@ alone.
 """
 from __future__ import annotations
 
+import math
 import random
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-from repro.core.cost_db import CostDB, DataPoint, featurize
+from repro.core.cost_db import (MAXIMIZE_OBJECTIVES, CostDB, DataPoint,
+                                featurize, objectives_of)
 from repro.core.design_space import PlanPoint, PlanTemplate
+
+# Named scalarization-weight vectors for Pareto campaigns: each arm turns
+# the objective vector into one weighted log-scale score, so the existing
+# single-score walkers (anneal, evolve) can sweep different regions of the
+# front without learning a new acceptance rule. Keys index into a row's
+# ``objectives`` dict; keys a row lacks (plan vs kernel vectors differ) are
+# simply skipped and the weights renormalized, so one arm table serves both
+# design spaces. Under ``--objective pareto`` the Ensemble runs these as
+# extra bandit members (``anneal@memory`` etc.), and the arm name lands in
+# DB provenance via the member name.
+WEIGHT_ARMS: Dict[str, Dict[str, float]] = {
+    "latency": {"bound_s": 1.0},
+    "memory": {"bound_s": 1.0, "hbm_bytes": 1.0, "vmem_bytes": 1.0,
+               "vmem_util": 1.0},
+    "balanced": {"bound_s": 1.0, "hbm_bytes": 0.5, "vmem_bytes": 0.5,
+                 "vmem_util": 0.5, "flops_util": 0.5},
+}
+
+
+def weighted_objective(dp: Optional[DataPoint],
+                       weights: Optional[Dict[str, float]],
+                       ) -> Optional[float]:
+    """One weighted scalar score (lower is better) for a feasible row's
+    objective vector: the weight-normalized sum of ``log10`` objective
+    values, maximize-sense objectives negated. Log scale keeps objectives
+    of wildly different magnitudes (seconds vs bytes) commensurable — a
+    weight point buys a *decade* in any objective. ``None``/empty weights,
+    or a row whose objectives carry none of the weighted keys, fall back
+    to :func:`bound_of`; missing/failed rows return ``None``."""
+    if dp is None or dp.status != "ok":
+        return None
+    if not weights:
+        return bound_of(dp)
+    objs = objectives_of(dp)
+    total = wsum = 0.0
+    for k in sorted(weights):
+        v = objs.get(k)
+        if v is None or not v > 0:
+            continue
+        term = math.log10(v)
+        if k in MAXIMIZE_OBJECTIVES:
+            term = -term
+        total += weights[k] * term
+        wsum += weights[k]
+    if wsum == 0.0:
+        return bound_of(dp)
+    return total / wsum
 
 
 @dataclass(frozen=True)

@@ -12,12 +12,12 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_db import DataPoint
 from repro.core.design_space import PlanPoint
 from repro.search.base import (Candidate, SearchState, mutate, point_of,
-                               repair)
+                               repair, weighted_objective)
 
 
 @dataclass
@@ -31,8 +31,14 @@ class Evolutionary:
     pop_size: int = 8
     tournament: int = 2
     p_mutate: float = 0.3
+    # Pareto scalarization arm (see base.WEIGHT_ARMS): None keeps bound_s
+    # fitness bit-for-bit; a weight dict breeds toward the weighted
+    # log-scale objective instead (scores can be negative — log10 of
+    # sub-second bounds — so weighted mode tests ``is not None``, never
+    # truthiness).
+    weights: Optional[Dict[str, float]] = None
 
-    # key -> (bound_s, point); fittest = lowest bound
+    # key -> (fitness, point); fittest = lowest score
     _pop: Dict[str, Tuple[float, PlanPoint]] = field(default_factory=dict,
                                                      init=False)
 
@@ -42,11 +48,19 @@ class Evolutionary:
         seeded from the DB."""
         return sorted(self._pop.values(), key=lambda t: t[0])[: self.pop_size]
 
+    def _fitness(self, d: DataPoint) -> Optional[float]:
+        """Fitness score (lower is fitter): raw ``bound_s`` in scalar mode,
+        the weighted log-scale objective under a Pareto weight arm."""
+        if not self.weights:
+            b = d.metrics.get("bound_s")
+            return b if b else None
+        return weighted_objective(d, self.weights)
+
     def _seed_population(self, state: SearchState) -> None:
         for d in state.db.query(state.arch, state.shape, "ok"):
-            b = d.metrics.get("bound_s")
-            if b:
-                self._pop.setdefault(d.point.get("__key__", ""), (b, point_of(d)))
+            f = self._fitness(d)
+            if f is not None:
+                self._pop.setdefault(d.point.get("__key__", ""), (f, point_of(d)))
 
     def _pick(self, pop: List[Tuple[float, PlanPoint]],
               rng: random.Random) -> PlanPoint:
@@ -88,9 +102,11 @@ class Evolutionary:
         """Add every feasible result to the gene pool (negatives never
         breed); compact the pool when it outgrows 4x ``pop_size``."""
         for d in datapoints:
-            b = d.metrics.get("bound_s")
-            if d.status == "ok" and b:
-                self._pop[d.point.get("__key__", "")] = (b, point_of(d))
+            if d.status != "ok":
+                continue
+            f = self._fitness(d)
+            if f is not None:
+                self._pop[d.point.get("__key__", "")] = (f, point_of(d))
         if len(self._pop) > 4 * self.pop_size:  # bound memory on long runs
             keep = self.population()
             self._pop = {p.key(): (b, p) for b, p in keep}

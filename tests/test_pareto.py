@@ -1,0 +1,244 @@
+"""Unit tests for the multi-objective Pareto layer: dominance / ranking /
+crowding / hypervolume (``repro.core.pareto``), objective extraction and
+front queries (``repro.core.cost_db``), weight-arm scalarization
+(``repro.search``), and the front-aware promotion planner. Pure python —
+no jax, no subprocesses."""
+import json
+import math
+import random
+
+import pytest
+from repro.core.cost_db import (CostDB, DataPoint, derive_objectives,
+                                objective_value, objectives_of, pareto_rows)
+from repro.core.pareto import (crowding_distances, dominates, front_order,
+                               front_ranks, hypervolume)
+from repro.core.promotion import plan_front_promotions, plan_promotions
+from repro.search import WEIGHT_ARMS, make_strategy, weighted_objective
+
+INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# pareto.py primitives
+# ---------------------------------------------------------------------------
+def test_dominates_is_strict():
+    assert dominates((1, 2), (2, 3))          # better in both
+    assert dominates((1, 3), (2, 3))          # better in one, equal other
+    assert not dominates((1, 2), (1, 2))      # equal never dominates
+    assert not dominates((1, 4), (2, 3))      # trade-off: incomparable
+    assert not dominates((2, 3), (1, 4))
+
+
+def test_front_ranks_peels_layers():
+    #  (1,4) and (4,1) and (2,2) are the front; (3,3) is dominated by (2,2);
+    #  (5,5) is dominated by everything
+    vecs = [(1, 4), (4, 1), (2, 2), (3, 3), (5, 5)]
+    assert front_ranks(vecs) == [0, 0, 0, 1, 2]
+
+
+def test_front_ranks_duplicates_share_rank():
+    assert front_ranks([(1, 1), (1, 1), (2, 2)]) == [0, 0, 1]
+
+
+def test_crowding_boundaries_are_infinite():
+    d = crowding_distances([(0, 4), (1, 3), (2, 2), (4, 0)])
+    assert d[0] == INF and d[-1] == INF
+    assert 0 < d[1] < INF and 0 < d[2] < INF
+    # interior spread: (1,3) is closer to its neighbors than (2,2) is to its
+    assert d[1] == pytest.approx((2 - 0) / 4 + (4 - 2) / 4)
+
+
+def test_front_order_is_insertion_order_invariant():
+    rng = random.Random(7)
+    vecs = [(rng.randrange(5), rng.randrange(5)) for _ in range(12)]
+    ties = [f"t{i:02d}" for i in range(12)]
+    base = front_order(vecs, ties)[0]
+    canonical = [(vecs[i], ties[i]) for i in base]
+    for _ in range(10):
+        idx = list(range(12))
+        rng.shuffle(idx)
+        order = front_order([vecs[i] for i in idx], [ties[i] for i in idx])[0]
+        assert [(vecs[idx[i]], ties[idx[i]]) for i in order] == canonical
+
+
+def test_front_order_length_mismatch_raises():
+    with pytest.raises(ValueError):
+        front_order([(1, 2)], [])
+
+
+def test_hypervolume_known_values():
+    assert hypervolume([(1, 3), (3, 1)], (4, 4)) == pytest.approx(5.0)
+    assert hypervolume([(1,)], (4,)) == pytest.approx(3.0)
+    # dominated and duplicate points add nothing
+    assert hypervolume([(1, 3), (3, 1), (3, 3), (1, 3)],
+                       (4, 4)) == pytest.approx(5.0)
+    # a point not strictly better than the reference contributes nothing
+    assert hypervolume([(4, 1), (5, 5)], (4, 4)) == 0.0
+    assert hypervolume([], (1, 1)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# objective extraction
+# ---------------------------------------------------------------------------
+def _plan_metrics(bound=1e-3, hbm=2e9, gib=0.5, mfu=0.3, fits=True):
+    return {"bound_s": bound, "fits_hbm": fits, "hbm_bytes": hbm,
+            "per_device_gib": gib, "mfu_at_bound": mfu}
+
+
+def test_derive_objectives_plan_vs_kernel():
+    plan = derive_objectives(_plan_metrics())
+    assert plan == {"bound_s": 1e-3, "hbm_bytes": 2e9,
+                    "vmem_bytes": 0.5 * 2**30, "flops_util": 0.3}
+    kern = derive_objectives({"bound_s": 5e-5, "est_latency_us": 50.0,
+                              "vmem_util": 0.4, "mxu_aligned": 1.0,
+                              "vpu_aligned": 0.5, "fits_hbm": True})
+    assert kern == {"bound_s": 5e-5, "vmem_util": 0.4, "flops_util": 0.75}
+    assert derive_objectives({"fits_hbm": False}) == {}
+
+
+def _dp(key, bound, ts=1.0, status="ok", fits=True, fidelity="dryrun",
+        hbm=2e9, mfu=0.3):
+    return DataPoint(arch="a1", shape="s1", mesh="m",
+                     point={"remat": "full", "__key__": key}, status=status,
+                     metrics=_plan_metrics(bound, hbm=hbm, mfu=mfu,
+                                           fits=fits),
+                     ts=ts, fidelity=fidelity)
+
+
+def test_objective_value_gates_measured_and_infeasible():
+    assert objective_value(_dp("k", 1e-3)) == 1e-3
+    assert objective_value(_dp("k", 1e-3, fidelity="measured")) is None
+    assert objective_value(_dp("k", 1e-3, fits=False)) is None
+    assert objective_value(_dp("k", 1e-3), "hbm_bytes") == 2e9  # derived
+    assert objective_value(_dp("k", 1e-3), "no_such") is None
+
+
+def test_objectives_of_prefers_stored_vector():
+    d = _dp("k", 1e-3)
+    d.metrics["objectives"] = {"bound_s": 9.0, "flops_util": None}
+    assert objectives_of(d) == {"bound_s": 9.0}
+
+
+# ---------------------------------------------------------------------------
+# pareto_rows / CostDB.front
+# ---------------------------------------------------------------------------
+def test_pareto_rows_never_fronts_a_dominated_row():
+    # d2 dominates d3 in every objective; any insertion order must agree
+    d1 = _dp("k1", 1e-3, ts=1.0, hbm=9e9, mfu=0.9)   # fast, hbm-hungry
+    d2 = _dp("k2", 2e-3, ts=2.0, hbm=1e9, mfu=0.3)   # slower, lean
+    d3 = _dp("k3", 3e-3, ts=3.0, hbm=2e9, mfu=0.2)   # dominated by d2
+    rng = random.Random(3)
+    rows = [d1, d2, d3]
+    expected = None
+    for _ in range(6):
+        rng.shuffle(rows)
+        ranked = pareto_rows(rows)
+        got = [(d.point["__key__"], r) for d, r, _, _ in ranked]
+        assert got == (expected := expected or got)
+    by_key = dict(got)
+    assert by_key["k1"] == 0 and by_key["k2"] == 0 and by_key["k3"] == 1
+
+
+def test_pareto_rows_dedupes_earliest_per_key():
+    early = _dp("k1", 5e-3, ts=1.0)
+    late = _dp("k1", 1e-3, ts=2.0)
+    ranked = pareto_rows([late, early])
+    assert len(ranked) == 1 and ranked[0][0].ts == 1.0
+
+
+def test_costdb_front_orders_and_truncates(tmp_path):
+    db = CostDB(tmp_path / "db.jsonl")
+    db.append(_dp("k1", 1e-3, ts=1.0, hbm=9e9, mfu=0.9))
+    db.append(_dp("k2", 2e-3, ts=2.0, hbm=1e9, mfu=0.3))
+    db.append(_dp("k3", 3e-3, ts=3.0, hbm=2e9, mfu=0.2))
+    db.append(_dp("k4", 1e-4, ts=4.0, fidelity="measured"))  # never ranks
+    front = db.front("a1", "s1", k=None, mesh="m")
+    assert [d.point["__key__"] for d in front][-1] == "k3"  # dominated last
+    assert len(db.front("a1", "s1", k=2, mesh="m")) == 2
+    ranked = db.pareto("a1", "s1", mesh="m")
+    assert [r for _, r, _, _ in ranked] == [0, 0, 1]
+
+
+# ---------------------------------------------------------------------------
+# scalarization weight arms
+# ---------------------------------------------------------------------------
+def test_weighted_objective_none_falls_back_to_bound():
+    d = _dp("k", 1e-3)
+    assert weighted_objective(d, None) == 1e-3
+    assert weighted_objective(d, {}) == 1e-3
+    assert weighted_objective(None, {"bound_s": 1.0}) is None
+    assert weighted_objective(_dp("k", 1e-3, status="error"),
+                              {"bound_s": 1.0}) is None
+
+
+def test_weighted_objective_log_scale_and_maximize():
+    d = _dp("k", 1e-3, mfu=0.5)
+    assert weighted_objective(d, {"bound_s": 1.0}) == pytest.approx(-3.0)
+    # flops_util is maximize-sense: its log term enters negated
+    assert weighted_objective(d, {"flops_util": 1.0}) == pytest.approx(
+        -math.log10(0.5))
+    # keys the row lacks are skipped and the weights renormalize
+    assert weighted_objective(d, {"bound_s": 1.0, "vmem_util": 5.0}
+                              ) == pytest.approx(-3.0)
+    # all-missing keys fall back to the raw bound
+    assert weighted_objective(d, {"vmem_util": 1.0}) == 1e-3
+
+
+def test_make_strategy_objective_modes():
+    scalar = make_strategy("ensemble")
+    assert [m.name for m in scalar.members] == ["greedy", "anneal", "evolve"]
+    assert all(getattr(m, "weights", None) is None for m in scalar.members)
+    par = make_strategy("ensemble", objective="pareto")
+    names = [m.name for m in par.members]
+    assert names[:3] == ["greedy", "anneal", "evolve"]
+    assert {"anneal@latency", "anneal@memory", "evolve@latency",
+            "evolve@memory"} <= set(names)
+    arms = {m.name: m for m in par.members}
+    assert arms["anneal@memory"].weights == WEIGHT_ARMS["memory"]
+    # arm names ride into DB provenance so credit stays reconstructable
+    assert par.credit.keys() >= set(names)
+    assert make_strategy("anneal", objective="pareto").weights == \
+        WEIGHT_ARMS["balanced"]
+    assert make_strategy("anneal").weights is None
+    with pytest.raises(ValueError):
+        make_strategy("ensemble", objective="nope")
+
+
+# ---------------------------------------------------------------------------
+# front-aware promotions + leaderboard compat
+# ---------------------------------------------------------------------------
+def test_plan_front_promotions_contract_matches_plan_promotions():
+    front = [_dp("k1", 1e-3), _dp("k2", 2e-3), _dp("k3", 3e-3)]
+    promos = plan_front_promotions(front, {"k2"}, top_k=2)
+    assert [d.point["__key__"] for d in promos] == ["k1", "k3"]
+    assert plan_front_promotions(front, set(), top_k=2, budget_left=1) == \
+        plan_promotions(front, set(), top_k=2, budget_left=1)
+    assert plan_front_promotions(front, set(), top_k=0) == []
+
+
+def test_build_leaderboard_scalar_mode_is_byte_identical(tmp_path):
+    from repro.launch.campaign import build_leaderboard
+
+    db = CostDB(tmp_path / "db.jsonl")
+    db.append(_dp("k1", 1e-3, ts=1.0, hbm=9e9, mfu=0.9))
+    db.append(_dp("k2", 2e-3, ts=2.0, hbm=1e9, mfu=0.3))
+    cells = [{"arch": "a1", "shape": "s1", "mesh": "m",
+              "status": "complete", "improvement": 0.5}]
+    default = json.dumps(build_leaderboard(db, cells), sort_keys=True)
+    scalar = json.dumps(build_leaderboard(db, cells, objective="bound_s"),
+                        sort_keys=True)
+    assert default == scalar
+    assert "front" not in default
+    par = build_leaderboard(db, cells, objective="pareto")
+    row = par[0]
+    assert row["objective"] == "pareto"
+    assert row["front_size"] == len(row["front"]) == 2
+    assert {e["point"]["remat"] for e in row["front"]} == {"full"}
+    for e in row["front"]:
+        assert set(e["objectives"]) == {"bound_s", "hbm_bytes",
+                                        "vmem_bytes", "flops_util"}
+        assert e["crowding"] is None or math.isfinite(e["crowding"])
+    # strict JSON round-trips (inf crowding must serialize as null)
+    assert json.loads(json.dumps(par)) == par
+    with pytest.raises(ValueError):
+        build_leaderboard(db, cells, objective="nope")

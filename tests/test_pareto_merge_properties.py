@@ -1,0 +1,145 @@
+"""Property tests for Pareto-front campaigns: the merged front is a
+*function of the shard contents*. For generated shard DBs with overlapping
+identities and genuinely multi-objective rows (bound/HBM/MFU trade-offs),
+any permutation of the shard list must rebuild byte-identical Pareto
+leaderboards, re-merging must be a fixed point, and no dominated design
+may ever appear in a front regardless of insertion order. Pure file
+manipulation — no jax, no subprocesses."""
+import itertools
+import json
+from pathlib import Path
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core.cost_db import CostDB, DataPoint, objectives_of, pareto_rows
+from repro.core.pareto import dominates
+from repro.launch.merge_db import merge
+
+ARCHS = ["a1", "a2"]
+KEYS = ["k1", "k2", "k3", "k4"]
+
+
+def _dp(arch, key, ts, bound, hbm, mfu, status="ok"):
+    return DataPoint(arch=arch, shape="s1", mesh="m",
+                     point={"remat": "full", "seq": key, "__key__": key},
+                     status=status,
+                     metrics={"bound_s": bound, "fits_hbm": status == "ok",
+                              "hbm_bytes": hbm * 1e9, "per_device_gib": 0.5,
+                              "mfu_at_bound": mfu / 10.0},
+                     ts=ts)
+
+
+def _row_strategy():
+    """(shard, arch, key, ts, bound-mantissa, hbm-GB, mfu-decile, pruned):
+    small pools force cross-shard identity collisions (steals) and the
+    bound/hbm/mfu axes trade off independently, so generated cells carry
+    real multi-point fronts, not a single scalar winner."""
+    return st.tuples(st.integers(0, 2), st.sampled_from(ARCHS),
+                     st.sampled_from(KEYS),
+                     st.integers(0, 5),   # coarse ts: forces ties
+                     st.integers(1, 9),   # bound mantissa
+                     st.integers(1, 9),   # hbm GB
+                     st.integers(1, 9),   # mfu decile
+                     st.booleans())       # pruned row?
+
+
+def _build_shards(tmp, rows):
+    shard_dirs = [tmp / f"shard{i}" for i in range(3)]
+    dbs = {i: CostDB(sd / "cost_db.jsonl") for i, sd in enumerate(shard_dirs)}
+    for sd in shard_dirs:
+        (sd / "reports").mkdir(parents=True, exist_ok=True)
+        (sd / "dryrun_cache").mkdir(parents=True, exist_ok=True)
+    cells = set()
+    for shard, arch, key, ts, bound, hbm, mfu, pruned in rows:
+        status = "pruned" if pruned else "ok"
+        dbs[shard].append(_dp(arch, key, float(ts), bound / 10.0, hbm, mfu,
+                              status))
+        cells.add((shard, arch))
+    for shard, arch in cells:
+        (shard_dirs[shard] / "reports" / f"{arch}__s1__m.json"
+         ).write_text(json.dumps({"arch": arch, "shape": "s1",
+                                  "status": "complete", "improvement": 0.9}))
+    return shard_dirs
+
+
+def _merge_bytes(shard_dirs, out: Path):
+    merge(shard_dirs, out, verbose=False, objective="pareto")
+    return ((out / "cost_db.jsonl").read_bytes(),
+            (out / "leaderboard.json").read_bytes())
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.lists(_row_strategy(), min_size=1, max_size=24))
+def test_pareto_merge_is_order_invariant_and_idempotent(tmp_path_factory,
+                                                        rows):
+    """Every permutation of the shard list merges to byte-identical Pareto
+    leaderboards, and re-merging the merged dir is a fixed point."""
+    tmp = tmp_path_factory.mktemp("paretoprop")
+    shard_dirs = _build_shards(tmp, rows)
+
+    results = []
+    for i, perm in enumerate(itertools.permutations(shard_dirs)):
+        results.append(_merge_bytes(list(perm), tmp / f"out{i}"))
+    assert all(r == results[0] for r in results[1:]), \
+        "pareto merge output depends on shard order"
+
+    again = _merge_bytes([tmp / "out0"], tmp / "re")
+    assert again == results[0], "re-merging a merged dir changed the front"
+
+    # and the pareto leaderboard is well-formed strict JSON
+    lb = json.loads(results[0][1])
+    for row in lb:
+        assert row["objective"] == "pareto"
+        assert row["front_size"] == len(row["front"])
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.lists(_row_strategy(), min_size=1, max_size=24))
+def test_merged_front_never_contains_a_dominated_row(tmp_path_factory, rows):
+    """No design in any merged front may be dominated by another surviving
+    design of its cell — checked against the merged DB's own objective
+    vectors, whatever the insertion order was."""
+    tmp = tmp_path_factory.mktemp("paretodom")
+    shard_dirs = _build_shards(tmp, rows)
+    out = tmp / "out"
+    _merge_bytes(shard_dirs, out)
+    db = CostDB(out / "cost_db.jsonl")
+    lb = json.loads((out / "leaderboard.json").read_text())
+    for row in lb:
+        ranked = pareto_rows(db.query(row["arch"], row["shape"], "ok",
+                                      row["mesh"]))
+        vec = {d.point["__key__"]:
+               tuple(objectives_of(d).get(k, float("inf"))
+                     * (-1.0 if k == "flops_util" else 1.0)
+                     for k in ("bound_s", "hbm_bytes", "vmem_bytes",
+                               "flops_util"))
+               for d, _, _, _ in ranked}
+        front_keys = {e["point"]["seq"] for e in row["front"]}
+        assert front_keys == {d.point["__key__"]
+                              for d, r, _, _ in ranked if r == 0}
+        for fk in front_keys:
+            for other in vec:
+                assert not dominates(vec[other], vec[fk]), \
+                    f"{other} dominates front member {fk} in {row['arch']}"
+
+
+def test_scalar_and_pareto_merges_share_the_cost_db(tmp_path):
+    """Objective mode changes only the leaderboard: the merged cost DB
+    bytes are identical whether the rebuild ranks scalar heads or
+    dominance fronts."""
+    shard_dirs = _build_shards(tmp_path, [
+        (0, "a1", "k1", 1, 2, 9, 9, False),
+        (1, "a1", "k2", 2, 4, 1, 3, False),
+        (2, "a1", "k3", 3, 6, 2, 1, False),
+    ])
+    merge(shard_dirs, tmp_path / "scalar", verbose=False)
+    merge(shard_dirs, tmp_path / "pareto", verbose=False,
+          objective="pareto")
+    assert (tmp_path / "scalar" / "cost_db.jsonl").read_bytes() == \
+        (tmp_path / "pareto" / "cost_db.jsonl").read_bytes()
+    scalar = json.loads((tmp_path / "scalar" / "leaderboard.json").read_text())
+    pareto = json.loads((tmp_path / "pareto" / "leaderboard.json").read_text())
+    assert "front" not in scalar[0] and "objective" not in scalar[0]
+    # k1 is fastest but hbm-hungry; k2 trades speed for memory: both front
+    assert {e["point"]["seq"] for e in pareto[0]["front"]} == {"k1", "k2"}
+    # scalar mode and pareto mode agree on the cells and the scalar stats
+    assert [r["arch"] for r in scalar] == [r["arch"] for r in pareto]
