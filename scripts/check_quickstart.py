@@ -37,7 +37,8 @@ def parser_registry():
     A documented module missing from here (or from the codebase) is drift."""
     from repro.analysis import lint as analysis_lint
     from repro.analysis import race as analysis_race
-    from repro.launch import campaign, dse, measure, merge_db, orchestrator
+    from repro.launch import (campaign, dse, measure, merge_db, orchestrator,
+                              service)
 
     return {
         "repro.launch.campaign": campaign.build_parser,
@@ -45,6 +46,7 @@ def parser_registry():
         "repro.launch.measure": measure.build_parser,
         "repro.launch.merge_db": merge_db.build_parser,
         "repro.launch.orchestrator": orchestrator.build_parser,
+        "repro.launch.service": service.build_parser,
         "repro.analysis.lint": analysis_lint.build_parser,
         "repro.analysis.race": analysis_race.build_parser,
     }

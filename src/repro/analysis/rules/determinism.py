@@ -68,6 +68,17 @@ PURE_FUNCTIONS: Dict[str, Set[str]] = {
         "derive_objectives", "objectives_of", "objective_value",
         "pareto_rows",
     },
+    # the service control plane's fairness/budget policy: every worker
+    # grant must be a pure function of the tenant snapshot so scheduling
+    # decisions replay in unit tests without a daemon
+    "src/repro/core/fairshare.py": {
+        "budget_left", "over_budget", "plan_worker_grants",
+    },
+    # the daemon's per-tick tenant snapshot assembly feeds the fairshare
+    # policy; time arrives via now= from the scheduler loop
+    "src/repro/launch/service.py": {
+        "snapshot_tenants",
+    },
 }
 
 _WALL_CLOCK_CALLS = {

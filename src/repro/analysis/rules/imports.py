@@ -41,6 +41,11 @@ _JAX_FREE_FILES = {
     # Pareto dominance/crowding/hypervolume: stdlib-only so the merge CLI
     # and the leaderboard rebuild can rank fronts on login nodes
     "src/repro/core/pareto.py",
+    # DSE-as-a-service control plane: the daemon runs on supervisor nodes
+    # and must serve HTTP + schedule workers without a jax runtime; jax
+    # lives only in the campaign worker subprocesses it spawns
+    "src/repro/launch/service.py",
+    "src/repro/core/fairshare.py",
 }
 _JAX_FREE_PREFIXES = ("benchmarks/", "src/repro/analysis/")
 

@@ -3,15 +3,18 @@
 Requests arrive with prompts of varying length; the batcher packs up to
 ``max_batch`` active sequences, pads prompts for a shared prefill, then
 decodes in lock-step, retiring finished sequences and admitting queued ones
-into freed slots. On the dry-run meshes this logic is exercised with the
-reduced configs; the step functions are the same jit artifacts the pod runs.
+into freed slots. Admission mid-decode prefills the admitted group on its
+own (so survivors' caches are untouched) and splices the new rows into the
+freed batch slots; decode then continues lock-step over the refreshed batch.
+On the dry-run meshes this logic is exercised with the reduced configs; the
+step functions are the same jit artifacts the pod runs.
 """
 from __future__ import annotations
 
 import collections
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +32,26 @@ class Request:
     t_done: Optional[float] = None
 
 
+def _splice_rows(cache: Any, sub: Any, rows: Sequence[int]) -> Any:
+    """Write ``sub``'s batch rows into ``cache`` at batch indices ``rows``.
+
+    Cache leaves put the batch axis in different positions (dense k/v are
+    ``[layers, batch, ...]`` while ``len`` is ``[batch]``), so the axis is
+    recovered per leaf as the single dimension where the full-batch and
+    sub-batch shapes disagree. Callers must ensure the sub-batch is strictly
+    smaller than the full batch (equal sizes mean "replace the cache").
+    """
+    ids = jnp.asarray(list(rows))
+
+    def put(full, part):
+        axis = next(a for a, (m, s) in enumerate(zip(full.shape, part.shape))
+                    if m != s)
+        index = (slice(None),) * axis + (ids,)
+        return full.at[index].set(part)
+
+    return jax.tree.map(put, cache, sub)
+
+
 @dataclass
 class Batcher:
     cfg: Any
@@ -42,52 +65,90 @@ class Batcher:
 
     queue: "collections.deque[Request]" = field(default_factory=collections.deque)
     stats: Dict[str, float] = field(default_factory=dict)
+    _next_rid: int = 0
 
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
-        req = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
+        req = Request(rid=self._next_rid, prompt=np.asarray(prompt, np.int32),
                       max_new=max_new)
+        self._next_rid += 1
         self.queue.append(req)
         return req
+
+    def _prefill_group(self, group: List[Request]) -> Tuple[Any, np.ndarray]:
+        """Left-pad + prefill ``group`` as one batch; returns (cache, first
+        sampled token per row)."""
+        b = len(group)
+        plen = max(len(r.prompt) for r in group)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(group):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        cache = self.init_cache(b, self.max_len)
+        logits, cache = self.prefill_step(
+            self.params, {"tokens": jnp.asarray(toks)}, cache)
+        # np.array (not asarray): slots mutate cur in place as they retire
+        cur = np.array(jnp.argmax(logits[:, -1], -1), np.int32)
+        return cache, cur
+
+    @staticmethod
+    def _take(queue: "collections.deque[Request]", n: int) -> List[Request]:
+        return [queue.popleft() for _ in range(min(n, len(queue)))]
+
+    def _note_token(self, r: Request, tok: int,
+                    finished: List[Request]) -> bool:
+        """Record one sampled token; retire the request the moment it hits
+        ``max_new``/EOS, stamping ``t_done`` at actual completion. Returns
+        True when the request retired."""
+        r.out.append(tok)
+        if len(r.out) >= r.max_new or tok == self.eos:
+            r.done, r.t_done = True, time.time()
+            finished.append(r)
+            return True
+        return False
 
     def run(self) -> List[Request]:
         finished: List[Request] = []
         n_decode_steps = 0
+        n_prefills = 0
         t0 = time.time()
         while self.queue:
-            batch = [self.queue.popleft()
-                     for _ in range(min(self.max_batch, len(self.queue)))]
+            batch = self._take(self.queue, self.max_batch)
             b = len(batch)
-            plen = max(len(r.prompt) for r in batch)
-            toks = np.zeros((b, plen), np.int32)
-            for i, r in enumerate(batch):
-                toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
-            cache = self.init_cache(b, self.max_len)
-            logits, cache = self.prefill_step(
-                self.params, {"tokens": jnp.asarray(toks)}, cache)
-            cur = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
-            for i, r in enumerate(batch):
-                r.out.append(int(cur[i]))
-
+            slots: List[Request] = list(batch)
+            cache, cur = self._prefill_group(batch)
+            n_prefills += 1
             active = np.ones(b, bool)
-            steps = 0
-            while active.any() and steps < max(r.max_new for r in batch) - 1:
+            for i, r in enumerate(batch):
+                if self._note_token(r, int(cur[i]), finished):
+                    active[i] = False
+            while active.any():
+                free = [i for i in range(b) if not active[i]]
+                if free and self.queue:
+                    admit = self._take(self.queue, len(free))
+                    sub_cache, sub_cur = self._prefill_group(admit)
+                    n_prefills += 1
+                    rows = free[: len(admit)]
+                    cache = (sub_cache if len(admit) == b
+                             else _splice_rows(cache, sub_cache, rows))
+                    for j, (row, r) in enumerate(zip(rows, admit)):
+                        slots[row] = r
+                        cur[row] = sub_cur[j]
+                        active[row] = not self._note_token(
+                            r, int(sub_cur[j]), finished)
+                    if not active.any():
+                        continue
                 logits, cache = self.decode_step(
                     self.params, {"tokens": jnp.asarray(cur[:, None])}, cache)
-                cur = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
-                steps += 1
+                nxt = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
                 n_decode_steps += 1
-                for i, r in enumerate(batch):
+                for i in range(b):
                     if active[i]:
-                        r.out.append(int(cur[i]))
-                        if len(r.out) >= r.max_new or int(cur[i]) == self.eos:
+                        cur[i] = nxt[i]
+                        if self._note_token(slots[i], int(nxt[i]), finished):
                             active[i] = False
-                            r.done, r.t_done = True, time.time()
-            for r in batch:
-                r.done, r.t_done = True, r.t_done or time.time()
-                finished.append(r)
         dt = time.time() - t0
         ntok = sum(len(r.out) for r in finished)
         self.stats = {"requests": len(finished), "tokens": ntok,
                       "wall_s": dt, "tok_per_s": ntok / dt if dt else 0.0,
-                      "decode_steps": n_decode_steps}
+                      "decode_steps": n_decode_steps,
+                      "prefills": n_prefills}
         return finished

@@ -1,0 +1,77 @@
+"""Fair-share policy: pure worker-grant decisions for the DSE service."""
+from repro.core.fairshare import (GrantPlan, TenantSnapshot, budget_left,
+                                  over_budget, plan_worker_grants)
+
+
+def _t(name, **kw):
+    kw.setdefault("backlog", 4)
+    return TenantSnapshot(name=name, **kw)
+
+
+def test_budget_accounting():
+    assert budget_left(None, 100) is None
+    assert budget_left(5, 2) == 3
+    assert budget_left(5, 9) == 0
+    assert not over_budget(None, 10 ** 6)
+    assert not over_budget(5, 4)
+    assert over_budget(5, 5)
+
+
+def test_equal_priority_splits_slots_evenly():
+    plan = plan_worker_grants([_t("a"), _t("b")], free_slots=4,
+                              max_workers_per_tenant=4)
+    assert sorted(plan.grants) == ["a", "a", "b", "b"]
+
+
+def test_priority_weights_grant_share():
+    tenants = [_t("hi", priority=2, backlog=8), _t("lo", priority=1, backlog=8)]
+    plan = plan_worker_grants(tenants, free_slots=3,
+                              max_workers_per_tenant=8)
+    assert plan.grants.count("hi") == 2 and plan.grants.count("lo") == 1
+
+
+def test_backlog_caps_grants():
+    # one pending cell never earns a second worker
+    plan = plan_worker_grants([_t("a", backlog=1), _t("b", backlog=6)],
+                              free_slots=4, max_workers_per_tenant=4)
+    assert plan.grants.count("a") == 1
+    assert plan.grants.count("b") == 3
+
+
+def test_exhausted_budget_is_skipped():
+    tenants = [_t("spent", budget_cells=3, cells_done=3), _t("fresh")]
+    plan = plan_worker_grants(tenants, free_slots=2)
+    assert plan.grants == ["fresh", "fresh"]
+
+
+def test_stalled_tenant_cannot_absorb_slots():
+    tenants = [_t("stuck", priority=9, stalled=True), _t("ok")]
+    plan = plan_worker_grants(tenants, free_slots=2)
+    assert all(g == "ok" for g in plan.grants)
+
+
+def test_credits_carry_fairness_across_ticks():
+    # pool of one slot: alternating ticks should alternate the winner
+    winners = []
+    credits = {"a": 0.0, "b": 0.0}
+    for _ in range(4):
+        snap = [TenantSnapshot("a", backlog=4, credit=credits["a"]),
+                TenantSnapshot("b", backlog=4, credit=credits["b"])]
+        plan = plan_worker_grants(snap, free_slots=1)
+        winners.extend(plan.grants)
+        credits = plan.credits
+    assert winners.count("a") == 2 and winners.count("b") == 2
+
+
+def test_grants_deterministic_under_permutation():
+    tenants = [_t("c", priority=1), _t("a", priority=3), _t("b", priority=2)]
+    plan_fwd = plan_worker_grants(tenants, free_slots=5,
+                                  max_workers_per_tenant=5)
+    plan_rev = plan_worker_grants(list(reversed(tenants)), free_slots=5,
+                                  max_workers_per_tenant=5)
+    assert plan_fwd == GrantPlan(plan_rev.grants, plan_rev.credits)
+
+
+def test_no_eligible_tenants_returns_empty_plan():
+    plan = plan_worker_grants([_t("idle", backlog=0)], free_slots=3)
+    assert plan.grants == []

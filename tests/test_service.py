@@ -1,0 +1,319 @@
+"""DSE-as-a-service control plane: API lifecycle, tenant isolation,
+cross-tenant coalescing, and byte-identical leaderboards.
+
+The daemon subprocess must never import jax (``/healthz`` reports
+``jax_loaded``); jax exists only in the campaign workers it spawns. The
+end-to-end tests boot the real daemon with the tiny CI prelude forwarded
+to its workers, so a three-tenant fleet drains in seconds.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+import urllib.request
+from contextlib import contextmanager
+from pathlib import Path
+
+import pytest
+
+from repro.launch.scheduler import CellQueue
+from repro.launch.service import (PROFILE_DEFAULTS, ServiceDaemon,
+                                  SubmitError, build_parser,
+                                  snapshot_tenants)
+
+REPO = Path(__file__).resolve().parents[1]
+TINY_PRELUDE_FILE = REPO / "tests" / "ci" / "tiny_prelude.py"
+
+TENANT_GRIDS = {
+    # overlapping 2-cell grids: (qwen3-0.6b, train_4k) is shared
+    "alice": {"archs": "qwen3-0.6b", "shapes": "train_4k,decode_32k"},
+    "bob": {"archs": "qwen3-0.6b,stablelm-3b", "shapes": "train_4k"},
+}
+PROFILE = {"mesh": "tiny", "iterations": 1, "budget": 2}
+
+
+def _env():
+    return {**os.environ, "PYTHONPATH": str(REPO / "src"),
+            "REPRO_CAMPAIGN_PRELUDE": str(TINY_PRELUDE_FILE)}
+
+
+def _get(url, path):
+    with urllib.request.urlopen(url + path, timeout=30) as r:
+        return json.loads(r.read())
+
+
+def _get_bytes(url, path):
+    with urllib.request.urlopen(url + path, timeout=60) as r:
+        return r.read()
+
+
+def _post(url, path, payload=None):
+    req = urllib.request.Request(
+        url + path, data=json.dumps(payload or {}).encode(),
+        method="POST", headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=60) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+@contextmanager
+def service_daemon(root: Path, *extra_args, env=None):
+    """Boot ``python -m repro.launch.service serve`` on a free port; yields
+    the base URL; shuts the daemon down (and asserts exit 0) on the way
+    out."""
+    log = (root.parent / f"{root.name}.log").open("w")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.service", "serve",
+         "--root", str(root), "--port", "0", "--poll-interval", "0.2",
+         "--queue-lease-s", "60", *extra_args],
+        env=env or _env(), stdout=log, stderr=subprocess.STDOUT)
+    endpoint = root / "endpoint.json"
+    try:
+        deadline = time.time() + 30
+        while not endpoint.exists():
+            assert proc.poll() is None, "daemon died during startup"
+            assert time.time() < deadline, "daemon never wrote endpoint.json"
+            time.sleep(0.1)
+        ep = json.loads(endpoint.read_text())
+        url = f"http://{ep['host']}:{ep['port']}"
+        yield url
+        _post(url, "/shutdown")
+        assert proc.wait(timeout=60) == 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+        log.close()
+
+
+def _submit(url, tenant, grid, **profile):
+    payload = {"tenant": tenant, "arch": grid["archs"],
+               "shape": grid["shapes"], **PROFILE, **profile}
+    code, body = _post(url, "/submit", payload)
+    assert code == 200, body
+    return body
+
+
+def _wait_drained(url, tenants, timeout=420):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        idx = _get(url, "/tenants")["tenants"]
+        done = all(
+            t in idx and idx[t]["queue"]["pending"] == 0
+            and idx[t]["queue"]["leased"] == 0
+            and idx[t]["workers_active"] == 0 for t in tenants)
+        if done:
+            return idx
+        time.sleep(1.0)
+    raise AssertionError(f"tenants {tenants} never drained: "
+                         f"{_get(url, '/tenants')}")
+
+
+def _standalone_leaderboard(tmp: Path, grid, **profile) -> bytes:
+    """The byte reference: an equivalent standalone campaign run."""
+    p = {**PROFILE_DEFAULTS, **PROFILE, **profile}
+    cmd = [sys.executable, "-m", "repro.launch.campaign",
+           "--archs", grid["archs"], "--shapes", grid["shapes"],
+           "--mesh", p["mesh"], "--iterations", str(p["iterations"]),
+           "--budget", str(p["budget"]), "--workers", "1",
+           "--strategy", p["strategy"], "--llm", p["llm"],
+           "--out", str(tmp)]
+    if p["objective"] != "bound_s":
+        cmd += ["--objective", p["objective"]]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=_env(),
+                       timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+    return (tmp / "leaderboard.json").read_bytes()
+
+
+# ---------------------------------------------------------------------------
+# CLI surface + in-process daemon logic (no subprocesses, no jax)
+# ---------------------------------------------------------------------------
+def test_parser_subcommands_roundtrip():
+    ap = build_parser()
+    a = ap.parse_args(["serve", "--root", "svc", "--port", "0",
+                       "--max-workers", "3", "--executor", "loopback"])
+    assert (a.command, a.max_workers, a.executor) == ("serve", 3, "loopback")
+    a = ap.parse_args(["submit", "--tenant", "t0", "--archs", "qwen3-0.6b",
+                       "--shapes", "train_4k", "--objective", "pareto",
+                       "--priority", "3"])
+    assert (a.command, a.objective, a.priority) == ("submit", "pareto", 3)
+    for cmd in ("status", "shutdown"):
+        assert build_parser().parse_args([cmd]).command == cmd
+    a = ap.parse_args(["leaderboard", "--tenant", "t0"])
+    assert a.out == "-"
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["serve"])  # --root is required
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["submit", "--tenant", "t0"])
+
+
+def test_snapshot_tenants_stall_detection():
+    facts = [
+        {"name": "b", "priority": 2, "backlog": 3, "workers": 1,
+         "worker_beats": [100.0]},
+        {"name": "a", "backlog": 1, "workers": 2,
+         "worker_beats": [100.0, 499.0]},
+        {"name": "c", "backlog": 1},  # no workers: never stalled
+    ]
+    snaps = snapshot_tenants(facts, hang_timeout=300.0, now=500.0)
+    assert [s.name for s in snaps] == ["a", "b", "c"]
+    by = {s.name: s for s in snaps}
+    assert by["b"].stalled  # its only worker is 400s silent
+    assert not by["a"].stalled  # one worker still beating
+    assert not by["c"].stalled
+    assert by["b"].priority == 2 and by["a"].workers == 2
+
+
+def test_submit_validation_and_profile_pinning(tmp_path):
+    d = ServiceDaemon(tmp_path / "svc", verbose=False)
+    with pytest.raises(SubmitError) as e:
+        d.submit({"tenant": "../evil", "arch": "qwen3-0.6b",
+                  "shape": "train_4k"})
+    assert e.value.code == 400
+    with pytest.raises(SubmitError) as e:
+        d.submit({"tenant": "t0", "arch": "no-such-arch",
+                  "shape": "train_4k"})
+    assert e.value.code == 400
+    with pytest.raises(SubmitError) as e:
+        d.submit({"tenant": "t0", "arch": "qwen3-0.6b", "shape": "train_4k",
+                  "mesh": "warehouse"})
+    assert e.value.code == 400
+
+    rec = d.submit({"tenant": "t0", "arch": "qwen3-0.6b",
+                    "shape": "train_4k,decode_32k", "mesh": "tiny"})
+    assert rec["id"] == 1 and rec["seeded"] == 2
+    # re-submitting the same grid is idempotent at the queue level
+    rec2 = d.submit({"tenant": "t0", "arch": "qwen3-0.6b",
+                     "shape": "train_4k", "mesh": "tiny"})
+    assert rec2["seeded"] == 0
+    # the campaign profile is pinned by the first submission
+    with pytest.raises(SubmitError) as e:
+        d.submit({"tenant": "t0", "arch": "qwen3-0.6b", "shape": "train_4k",
+                  "mesh": "tiny", "objective": "pareto"})
+    assert e.value.code == 409
+    status = d.tenant_status("t0")
+    assert status["queue"]["pending"] == 2
+    assert status["profile"]["mesh"] == "tiny"
+    # both tenant cache dirs are symlinks into the shared service caches
+    qroot = tmp_path / "svc" / "tenants" / "t0" / "queue"
+    for cache in ("dryrun_cache", "measured_cache"):
+        assert (qroot / cache).is_symlink()
+        assert (qroot / cache).resolve() == (tmp_path / "svc" / cache)
+
+
+# ---------------------------------------------------------------------------
+# end to end: lifecycle, coalescing, byte-identical leaderboards
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def service_run(tmp_path_factory):
+    """One daemon, three tenants: two scalar tenants with overlapping
+    2-cell grids plus a Pareto tenant reusing alice's grid. A single
+    fleet-wide worker slot serializes the workers, so cross-tenant cache
+    coalescing is deterministic."""
+    tmp = tmp_path_factory.mktemp("service_e2e")
+    root = tmp / "svc"
+    out = {}
+    with service_daemon(root, "--max-workers", "1") as url:
+        out["health_boot"] = _get(url, "/healthz")
+        _submit(url, "alice", TENANT_GRIDS["alice"])
+        _submit(url, "bob", TENANT_GRIDS["bob"])
+        _submit(url, "pat", TENANT_GRIDS["alice"], objective="pareto")
+        out["index"] = _wait_drained(url, ["alice", "bob", "pat"])
+        out["health_drained"] = _get(url, "/healthz")
+        for t in ("alice", "bob", "pat"):
+            out[f"status_{t}"] = _get(url, f"/tenants/{t}")
+            out[f"lb_{t}"] = _get_bytes(url, f"/tenants/{t}/leaderboard")
+    out["root"] = root
+    out["ref_dir"] = tmp
+    return out
+
+
+@pytest.mark.slow
+def test_service_lifecycle_daemon_never_imports_jax(service_run):
+    for key in ("health_boot", "health_drained"):
+        h = service_run[key]
+        assert h["ok"] and h["jax_loaded"] is False
+    for t in ("alice", "bob", "pat"):
+        s = service_run[f"status_{t}"]
+        assert s["drained"] and s["queue"]["done"] == 2
+        assert all(w["state"] == "done" and w["restarts"] == 0
+                   for w in s["workers"])
+        assert s["submissions"][0]["seeded"] == 2
+
+
+@pytest.mark.slow
+def test_cross_tenant_dedupe_compiles_each_design_once(service_run):
+    cache = service_run["root"] / "dryrun_cache"
+    per_cell = {}
+    for f in cache.glob("*.json"):
+        rec = json.loads(f.read_text())
+        key = (rec["arch"], rec["shape"])
+        per_cell[key] = per_cell.get(key, 0) + 1
+    # union of the two grids = 3 unique cells; every design appears once
+    assert set(per_cell) == {("qwen3-0.6b", "train_4k"),
+                             ("qwen3-0.6b", "decode_32k"),
+                             ("stablelm-3b", "train_4k")}
+    # the shared cell holds exactly one compile set, not one per tenant
+    designs_per_cell = PROFILE["budget"] + 1  # proposals + baseline
+    assert all(n == designs_per_cell for n in per_cell.values()), per_cell
+    # fleet-wide compile count == unique designs: nothing compiled twice
+    compiles = sum(w["compiles_total"]
+                   for t in ("alice", "bob", "pat")
+                   for w in service_run[f"status_{t}"]["workers"])
+    assert compiles == sum(per_cell.values())
+    # pat (same grid as alice, later in the serialized fleet) replayed
+    # everything from the shared cache: zero compiles of its own
+    assert sum(w["compiles_total"]
+               for w in service_run["status_pat"]["workers"]) == 0
+
+
+@pytest.mark.slow
+def test_tenant_leaderboards_byte_identical_to_standalone(service_run):
+    ref = service_run["ref_dir"]
+    for tenant, objective in (("alice", "bound_s"), ("bob", "bound_s"),
+                              ("pat", "pareto")):
+        grid = TENANT_GRIDS["alice" if tenant == "pat" else tenant]
+        want = _standalone_leaderboard(ref / f"ref_{tenant}", grid,
+                                       objective=objective)
+        assert service_run[f"lb_{tenant}"] == want, (
+            f"tenant {tenant} leaderboard drifted from the standalone "
+            f"campaign run")
+
+
+@pytest.mark.slow
+def test_stalled_tenant_cannot_starve_another(tmp_path):
+    """Tenant isolation: park a foreign never-expiring lease on one
+    tenant's only cell (a stalled queue: backlog that no worker can
+    take), and the other tenant must still be scheduled and drain."""
+    root = tmp_path / "svc"
+    with service_daemon(root, "--max-workers", "2") as url:
+        _submit(url, "stuck", {"archs": "stablelm-3b",
+                               "shapes": "decode_32k"})
+        # steal the cell out from under the tenant's workers with a
+        # foreign 1-hour lease before any worker can claim it
+        q = CellQueue(root / "tenants" / "stuck" / "queue", lease_s=3600)
+        deadline = time.time() + 30
+        ticket = None
+        while ticket is None and time.time() < deadline:
+            ticket = q.acquire("outsider")
+            if ticket is None:
+                time.sleep(0.1)
+        assert ticket is not None, "could not park the blocking lease"
+        _submit(url, "fast", TENANT_GRIDS["alice"])
+        deadline = time.time() + 420
+        while time.time() < deadline:
+            idx = _get(url, "/tenants")["tenants"]
+            fast_done = (idx["fast"]["queue"]["pending"] == 0
+                         and idx["fast"]["queue"]["leased"] == 0
+                         and idx["fast"]["queue"]["done"] == 2)
+            if fast_done:
+                break
+            time.sleep(1.0)
+        assert fast_done, f"fast tenant starved: {idx}"
+        # the stalled tenant is still stalled — fast didn't wait for it
+        stuck = _get(url, "/tenants/stuck")
+        assert stuck["queue"]["leased"] == 1 and stuck["queue"]["done"] == 0

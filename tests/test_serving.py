@@ -1,4 +1,6 @@
 """Serving: batcher end-to-end + sequence-parallel decode attention."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,24 +14,127 @@ from repro.serve import step as serve_step
 from repro.sharding.plan import ShardingPlan
 
 
-def test_batcher_end_to_end():
+@pytest.fixture(scope="module")
+def serving_stack():
     cfg = reduced(get_config("qwen3-0.6b"))
     params, _ = M.materialize_params(cfg, jax.random.key(0))
     plan = ShardingPlan(rules={})
     prefill = jax.jit(serve_step.make_prefill_step(cfg, plan, None))
     decode = jax.jit(serve_step.make_decode_step(cfg, plan, None))
+    return cfg, params, prefill, decode
 
-    b = Batcher(cfg, params, prefill, decode,
-                init_cache=lambda bs, ml: M.init_cache(cfg, bs, ml),
-                max_batch=3, max_len=64)
+
+def _make_batcher(serving_stack, **kw):
+    cfg, params, prefill, decode = serving_stack
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 64)
+    return Batcher(cfg, params, prefill, decode,
+                   init_cache=lambda bs, ml: M.init_cache(cfg, bs, ml), **kw)
+
+
+def _static_wave_outputs(serving_stack, prompts, max_news, max_batch,
+                         max_len=64):
+    """The pre-continuous-batching reference: waves of ``max_batch`` decoded
+    in lock-step to the wave-max ``max_new``. Returns (per-request outputs,
+    total decode steps)."""
+    cfg, params, prefill, decode = serving_stack
+    outs = [[] for _ in prompts]
+    n_steps = 0
+    start = 0
+    while start < len(prompts):
+        idx = list(range(start, min(start + max_batch, len(prompts))))
+        start += len(idx)
+        plen = max(len(prompts[j]) for j in idx)
+        toks = np.zeros((len(idx), plen), np.int32)
+        for k, j in enumerate(idx):
+            toks[k, plen - len(prompts[j]):] = prompts[j]
+        cache = M.init_cache(cfg, len(idx), max_len)
+        logits, cache = prefill(params, {"tokens": jnp.asarray(toks)}, cache)
+        cur = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+        for k, j in enumerate(idx):
+            outs[j].append(int(cur[k]))
+        active = [True] * len(idx)
+        steps = 0
+        while any(active) and steps < max(max_news[j] for j in idx) - 1:
+            logits, cache = decode(params, {"tokens": jnp.asarray(cur[:, None])},
+                                   cache)
+            cur = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+            steps += 1
+            n_steps += 1
+            for k, j in enumerate(idx):
+                if active[k]:
+                    outs[j].append(int(cur[k]))
+                    if len(outs[j]) >= max_news[j]:
+                        active[k] = False
+    return outs, n_steps
+
+
+def test_batcher_end_to_end(serving_stack):
+    b = _make_batcher(serving_stack)
     rng = np.random.default_rng(0)
-    reqs = [b.submit(rng.integers(0, cfg.vocab, size=n), max_new=6)
+    reqs = [b.submit(rng.integers(0, b.cfg.vocab, size=n), max_new=6)
             for n in (5, 9, 3, 7)]  # 4 requests > max_batch: two waves
     done = b.run()
     assert len(done) == 4
     assert all(r.done and len(r.out) == 6 for r in done)
     assert b.stats["tokens"] == 24
     assert b.stats["tok_per_s"] > 0
+
+
+def test_batcher_rids_unique_across_interleaved_runs(serving_stack):
+    """Regression: rid=len(queue) recycled ids once requests were popped;
+    interleaved submit/run must still hand out unique rids."""
+    b = _make_batcher(serving_stack, max_batch=2)
+    rng = np.random.default_rng(1)
+    first = [b.submit(rng.integers(0, b.cfg.vocab, size=4), max_new=2)
+             for _ in range(2)]
+    b.run()
+    second = [b.submit(rng.integers(0, b.cfg.vocab, size=4), max_new=2)
+              for _ in range(2)]
+    b.run()
+    rids = [r.rid for r in first + second]
+    assert len(set(rids)) == 4, rids
+
+
+def test_batcher_refills_freed_slots(serving_stack):
+    """Continuous batching: freed slots are refilled mid-decode, so a
+    mixed-``max_new`` workload takes fewer decode steps than the static-wave
+    schedule while every request's tokens stay byte-identical.
+
+    Prompts share one length so the left-pad seen by each request is the
+    same under both schedules (padding is attended, so unequal prompt
+    lengths would legitimately change logits between groupings)."""
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 128, size=6) for _ in range(4)]
+    max_news = [2, 8, 2, 8]
+    want, static_steps = _static_wave_outputs(serving_stack, prompts,
+                                              max_news, max_batch=2)
+
+    b = _make_batcher(serving_stack, max_batch=2)
+    reqs = [b.submit(p, max_new=mn) for p, mn in zip(prompts, max_news)]
+    done = b.run()
+    assert len(done) == 4 and all(r.done for r in done)
+    assert [r.out for r in reqs] == want
+    assert all(len(r.out) == r.max_new for r in reqs)
+    # static schedule: two waves of max(2,8)-1 decode steps each = 14;
+    # refilling freed slots interleaves the short requests instead
+    assert b.stats["decode_steps"] < static_steps
+    assert b.stats["prefills"] == 3  # initial wave + two single-slot admits
+
+
+def test_batcher_t_done_marks_actual_completion(serving_stack):
+    """Regression: the post-loop backstop stamped queue-drain time onto
+    early finishers (and a max_new=1 request overshot its token budget)."""
+    rng = np.random.default_rng(3)
+    b = _make_batcher(serving_stack, max_batch=2)
+    short = b.submit(rng.integers(0, b.cfg.vocab, size=5), max_new=1)
+    long = b.submit(rng.integers(0, b.cfg.vocab, size=5), max_new=8)
+    done = b.run()
+    t_end = time.time()
+    assert [r.rid for r in done] == [short.rid, long.rid]
+    assert len(short.out) == 1  # exactly max_new, not one step of overshoot
+    assert short.t_done is not None and long.t_done is not None
+    assert short.t_done < long.t_done <= t_end
 
 
 def test_sp_decode_attention_matches_reference():
